@@ -1,0 +1,82 @@
+"""Shared benchmark utilities: timing, CSV emission, and the critical-path
+depth model.
+
+The paper's Figures 6-8 are gem5 cycle measurements of parallel hardware;
+this container is one CPU core, so wall-clock cannot show MIMD speedups.
+Each benchmark therefore reports two quantities per configuration:
+
+  * ``us_per_call`` — measured wall-clock (the honest CPU proxy), and
+  * ``derived``     — the *critical-path depth model*: the length of the
+    serial dependency chain under the paper's work partitioning, in cell-
+    updates. The depth ratio sequential/parallel is the hardware-
+    independent reproduction of the paper's speedup curves (it is what a
+    machine with W independent workers is limited by).
+
+Every row prints as ``name,us_per_call,derived`` (the run.py contract).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, repeats: int = 3,
+            **kw) -> float:
+    """Median wall-clock microseconds of fn(*args); blocks on the result."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line
+
+
+# --------------------------------------------------------------------------
+# critical-path depth models (cell-updates on the serial chain)
+# --------------------------------------------------------------------------
+
+def depth_dtw(n: int, m: int, workers: int) -> tuple[int, int]:
+    """(sequential, squire) depth for an n x m DTW/SW matrix with column-
+    blocks of m/workers (paper Fig. 5): worker x starts row i one block
+    after worker x-1 -> pipeline depth (n + W - 1) * ceil(m/W)."""
+    seq = n * m
+    blk = -(-m // workers)
+    sq = (n + workers - 1) * blk
+    return seq, sq
+
+
+def depth_chain(n: int, band: int, workers: int) -> tuple[int, int]:
+    """Chain: fission makes the (N x T) score pass parallel (depth
+    N*T/W amortized to T/W per anchor); the serial consume chain is N
+    steps whose inner max is a W-way parallel reduction."""
+    seq = n * band                       # scalar inner loop, one worker
+    per_step = max(band // workers, 1)
+    sq = n * per_step + workers          # + boundary handoff
+    return seq, sq
+
+
+def depth_radix(n: int, workers: int, passes: int = 4) -> tuple[int, int]:
+    """Radix: chunk sorts are independent (depth passes * n/W); the merge
+    tree adds log2(W) passes over n elements (parallel pairwise merges)."""
+    import math
+    seq = passes * n
+    chunk = passes * (-(-n // workers))
+    merge = int(math.log2(max(workers, 2))) * n // workers
+    return seq, chunk + merge
+
+
+def depth_seed(n_anchors: int, workers: int) -> tuple[int, int]:
+    """Seeding is dominated by the anchor sort (paper §VI-B)."""
+    return depth_radix(n_anchors, workers)

@@ -1,0 +1,136 @@
+"""Fig. 6 reproduction: the five kernels x {4, 8, 16, 32} workers.
+
+Paper result: RADIX 1.58x / SEED 1.32x (peak at 16 workers, small-input
+bound), CHAIN 3.35x / SW 3.43x (32 workers), DTW 7.64x (32 workers).
+
+Per kernel and worker count we report the measured wall-clock of the
+Squire-partitioned implementation (CPU proxy) and the depth-model speedup
+(`derived` column = model speedup vs the 1-worker sequential depth) —
+the hardware-independent reproduction of the figure's scaling shape.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import align as align_lib
+from repro.core import chain as chain_lib
+from repro.core import dtw as dtw_lib
+from repro.core import seeding
+from repro.core import sort as sort_lib
+from repro.data import genomics
+
+WORKERS = (4, 8, 16, 32)
+
+
+def bench_radix(rows):
+    n = 50_000
+    keys = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, 2**31 - 1,
+                              dtype=jnp.int32).astype(jnp.uint32)
+    f1 = jax.jit(lambda k: sort_lib.radix_sort(k, num_chunks=1,
+                                               min_parallel=0)[0])
+    base_us = common.time_fn(f1, keys)
+    rows.append(common.emit("fig6.radix.w1", base_us, 1.0))
+    for w in WORKERS:
+        fw = jax.jit(lambda k, w=w: sort_lib.radix_sort(
+            k, num_chunks=w, min_parallel=0)[0])
+        us = common.time_fn(fw, keys)
+        ds, dq = common.depth_radix(n, w)
+        rows.append(common.emit(f"fig6.radix.w{w}", us, round(ds / dq, 2)))
+
+
+def bench_seed(rows):
+    ref = genomics.make_reference(50_000, seed=0)
+    idx = seeding.build_index(ref, 15, 10)
+    read = jnp.asarray(ref[5_000:10_000].astype(np.int32))
+    f1 = jax.jit(lambda r: seeding.seed(idx, r, 15, 10,
+                                        num_sort_chunks=1)[1])
+    base_us = common.time_fn(f1, read)
+    rows.append(common.emit("fig6.seed.w1", base_us, 1.0))
+    n_anchors = int(f1(read).shape[0])
+    for w in WORKERS:
+        fw = jax.jit(lambda r, w=w: seeding.seed(idx, r, 15, 10,
+                                                 num_sort_chunks=w)[1])
+        us = common.time_fn(fw, read)
+        ds, dq = common.depth_seed(n_anchors, w)
+        rows.append(common.emit(f"fig6.seed.w{w}", us, round(ds / dq, 2)))
+
+
+def bench_chain(rows):
+    q, r = genomics.anchor_set(8192, seed=1)
+    qd, rd = jnp.asarray(q), jnp.asarray(r)
+    T = 64
+    f1 = jax.jit(lambda a, b: chain_lib.chain_anchors(a, b, T=T,
+                                                      mode="sequential")[0])
+    base_us = common.time_fn(f1, qd, rd)
+    rows.append(common.emit("fig6.chain.w1", base_us, 1.0))
+    for w in WORKERS:
+        # W workers ~ block size N/W in the blocked-transfer formulation
+        block = max(len(q) // (len(q) // max(T // w, 1)), 8) \
+            if False else max(T // w * 4, 8)
+        fw = jax.jit(lambda a, b, bl=block: chain_lib.chain_anchors(
+            a, b, T=T, mode="blocked", block=bl)[0])
+        us = common.time_fn(fw, qd, rd)
+        ds, dq = common.depth_chain(len(q), T, w)
+        rows.append(common.emit(f"fig6.chain.w{w}", us, round(ds / dq, 2)))
+
+
+def bench_sw(rows):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 4, 512).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, 4, 512).astype(np.int32))
+    f1 = jax.jit(lambda x, y: align_lib.sw_ref(x, y))
+    base_us = common.time_fn(f1, a, b)
+    rows.append(common.emit("fig6.sw.w1", base_us, 1.0))
+    for w in WORKERS:
+        tile = max(512 // w, 16)
+        fn = jax.jit(lambda t, l, c, x, y: align_lib._sw_tile_fn(
+            align_lib.SWParams(), t, l, c, x, y))
+
+        def fw(x, y, tl=tile):
+            return align_lib.sw_tiled(x, y, tile_r=tl, tile_c=tl,
+                                      tile_fn=fn)[1]
+        us = common.time_fn(fw, a, b)
+        ds, dq = common.depth_dtw(512, 512, w)
+        rows.append(common.emit(f"fig6.sw.w{w}", us, round(ds / dq, 2)))
+
+
+def bench_dtw(rows):
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.normal(size=384).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=384).astype(np.float32))
+    f1 = jax.jit(lambda x, y: dtw_lib.dtw_ref(x, y)[-1, -1])
+    base_us = common.time_fn(f1, s, r)
+    rows.append(common.emit("fig6.dtw.w1", base_us, 1.0))
+    from repro.core.wavefront import dp_tile_diagonal
+    from repro.core.dtw import _cell
+    tile_fn = jax.jit(lambda t, l, c, x, y: dp_tile_diagonal(
+        _cell, t, l, c, x, y))
+    for w in WORKERS:
+        tl = max(384 // w, 16)
+
+        def fw(x, y, tl=tl):
+            return dtw_lib.dtw_tiled(x, y, tile_r=tl, tile_c=tl,
+                                     tile_fn=tile_fn)[1]
+        us = common.time_fn(fw, s, r)
+        ds, dq = common.depth_dtw(384, 384, w)
+        rows.append(common.emit(f"fig6.dtw.w{w}", us, round(ds / dq, 2)))
+
+
+def run(rows=None):
+    rows = rows if rows is not None else []
+    print("# fig6: kernel scaling (derived = depth-model speedup vs w1)")
+    bench_radix(rows)
+    bench_seed(rows)
+    bench_chain(rows)
+    bench_sw(rows)
+    bench_dtw(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

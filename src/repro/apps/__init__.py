@@ -1,0 +1,3 @@
+"""End-to-end applications built on repro.core (paper §VI-C)."""
+
+from repro.apps import read_mapper  # noqa: F401

@@ -1,0 +1,20 @@
+"""repro.core — Squire's contribution as composable JAX modules.
+
+The dependency-decomposition engine (semiring / scan1d / wavefront) plus the
+five paper kernels (chain, DTW, Smith-Waterman, radix sort, seeding).
+"""
+
+from repro.core.semiring import MAXPLUS, MINPLUS, REAL, SEMIRINGS, Semiring
+from repro.core.scan1d import (affine_scan, affine_scan_associative,
+                               affine_scan_chunked, affine_scan_sequential,
+                               diag_rank1_scan)
+from repro.core.wavefront import dp_tile_diagonal, pad_to_multiple, run_wavefront
+from repro.core import align, chain, dtw, seeding, sort, spmv
+
+__all__ = [
+    "MAXPLUS", "MINPLUS", "REAL", "SEMIRINGS", "Semiring",
+    "affine_scan", "affine_scan_associative", "affine_scan_chunked",
+    "affine_scan_sequential", "diag_rank1_scan",
+    "dp_tile_diagonal", "pad_to_multiple", "run_wavefront",
+    "align", "chain", "dtw", "seeding", "sort", "spmv",
+]

@@ -1,0 +1,163 @@
+"""Smith-Waterman local alignment (paper §III-B) on the wavefront engine.
+
+Same left/up/diag dependency pattern as DTW (the paper treats them
+together); (max,+) semiring with a zero floor and linear gap penalties:
+
+    H[i,j] = max(0, H[i-1,j-1] + s(a_i, b_j),
+                    H[i-1,j] - gap, H[i,j-1] - gap)
+
+The alignment score is max_{i,j} H[i,j]. Tiles additionally carry a running
+maximum so large alignments never materialize the full matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wavefront
+
+Array = jnp.ndarray
+
+
+class SWParams(NamedTuple):
+    match: float = 2.0
+    mismatch: float = -4.0
+    gap: float = 4.0  # positive cost
+
+
+def _cell(params: SWParams, diag, up, lft, av, bv):
+    sub = jnp.where(av == bv, params.match, params.mismatch)
+    h = jnp.maximum(diag + sub,
+                    jnp.maximum(up - params.gap, lft - params.gap))
+    return jnp.maximum(h, 0.0)
+
+
+def sw_ref(a: Array, b: Array, params: SWParams = SWParams()) -> Array:
+    """Oracle: sequential double scan; returns the full H matrix."""
+    cell = functools.partial(_cell, params)
+    m = b.shape[0]
+    top = jnp.zeros((m,), jnp.float32)
+
+    def row_step(prev_row, av):
+        def col_step(carry, inp):
+            lft, diag = carry
+            up, bv = inp
+            val = cell(diag, up, lft, av, bv)
+            return (val, up), val
+        _, row = jax.lax.scan(col_step, (jnp.float32(0), jnp.float32(0)),
+                              (prev_row, b))
+        return row, row
+
+    _, mat = jax.lax.scan(row_step, top, a)
+    return mat
+
+
+def sw_score_ref(a: Array, b: Array, params: SWParams = SWParams()) -> Array:
+    return jnp.max(sw_ref(a, b, params))
+
+
+def _sw_tile_fn(params, top, left, corner, a, b):
+    cell = functools.partial(_cell, params)
+    return wavefront.dp_tile_diagonal(cell, top, left, corner, a, b)
+
+
+def sw_tiled(a: Array, b: Array, params: SWParams = SWParams(),
+             tile_r: int = 8, tile_c: int = 8, tile_fn=None):
+    """Squire-style tiled wavefront SW; returns (H matrix, best score).
+
+    Padding uses sentinel character 255, which mismatches every real base
+    (0..3) and therefore cannot raise any score; the zero floor keeps the
+    padded region at H=0-ish without affecting the true region (padded rows
+    are below/right of all real cells, so no real cell depends on them).
+    """
+    n, m = a.shape[0], b.shape[0]
+    ap = wavefront.pad_to_multiple(a, tile_r, 0, 255)
+    bp = wavefront.pad_to_multiple(b, tile_c, 0, 255)
+    npad, mpad = ap.shape[0], bp.shape[0]
+
+    fn = tile_fn or functools.partial(_sw_tile_fn, params)
+    mat, _, _, _ = wavefront.run_wavefront(
+        fn, ap.astype(jnp.int32), bp.astype(jnp.int32),
+        top0=jnp.zeros((mpad,), jnp.float32),
+        left0=jnp.zeros((npad,), jnp.float32),
+        corner0=jnp.float32(0.0),
+        tile_r=tile_r, tile_c=tile_c, assemble=True)
+    mat = mat[:n, :m]
+    return mat, jnp.max(mat)
+
+
+def sw_score(a: Array, b: Array, params: SWParams = SWParams(), **kw):
+    return sw_tiled(a, b, params, **kw)[1]
+
+
+def sw_end_position(mat: Array):
+    """(i, j) of the best local alignment end."""
+    flat = jnp.argmax(mat)
+    return flat // mat.shape[1], flat % mat.shape[1]
+
+
+# --------------------------------------------------------------------------
+# Needleman-Wunsch (global alignment) — the paper names it alongside
+# SW/DTW as the same left/up/diag dependency pattern (§V-C); it runs on
+# the identical wavefront engine with different boundaries and no floor.
+# --------------------------------------------------------------------------
+
+def _nw_cell(params: SWParams, diag, up, lft, av, bv):
+    sub = jnp.where(av == bv, params.match, params.mismatch)
+    return jnp.maximum(diag + sub,
+                       jnp.maximum(up - params.gap, lft - params.gap))
+
+
+def nw_ref(a: Array, b: Array, params: SWParams = SWParams()) -> Array:
+    """Oracle: sequential double scan; returns the full score matrix with
+    linear gap boundaries (M[i, -1] = -(i+1)*gap, M[-1, j] = -(j+1)*gap)."""
+    cell = functools.partial(_nw_cell, params)
+    m = b.shape[0]
+    top = -params.gap * jnp.arange(1, m + 1, dtype=jnp.float32)
+
+    def row_step(carry, av_i):
+        prev_row, left_val = carry
+        corner = left_val + params.gap        # M[i-1, -1]
+
+        def col_step(c, inp):
+            lft, dg = c
+            up, bv = inp
+            val = cell(dg, up, lft, av_i, bv)
+            return (val, up), val
+
+        _, row = jax.lax.scan(col_step, (left_val, corner), (prev_row, b))
+        return (row, left_val - params.gap), row
+
+    left0 = jnp.float32(-params.gap)
+    _, mat = jax.lax.scan(row_step, (top, left0), a)
+    return mat
+
+
+def nw_tiled(a: Array, b: Array, params: SWParams = SWParams(),
+             tile_r: int = 8, tile_c: int = 8, tile_fn=None):
+    """Tiled-wavefront global alignment; returns (matrix, score).
+
+    Padding uses sentinels 254/255 (mutual mismatch), so padded cells can
+    only extend through gap/mismatch penalties below every true cell —
+    the true region is unaffected and the score is read at (n-1, m-1).
+    """
+    n, m = a.shape[0], b.shape[0]
+    ap = wavefront.pad_to_multiple(a, tile_r, 0, 254)
+    bp = wavefront.pad_to_multiple(b, tile_c, 0, 255)
+    npad, mpad = ap.shape[0], bp.shape[0]
+
+    cell = functools.partial(_nw_cell, params)
+    fn = tile_fn or (lambda t, l, c, aa, bb:
+                     wavefront.dp_tile_diagonal(cell, t, l, c, aa, bb))
+    top0 = -params.gap * jnp.arange(1, mpad + 1, dtype=jnp.float32)
+    left0 = -params.gap * jnp.arange(1, npad + 1, dtype=jnp.float32)
+    mat, _, _, _ = wavefront.run_wavefront(
+        fn, ap.astype(jnp.int32), bp.astype(jnp.int32),
+        top0=top0, left0=left0, corner0=jnp.float32(0.0),
+        tile_r=tile_r, tile_c=tile_c, assemble=True)
+    mat = mat[:n, :m]
+    return mat, mat[n - 1, m - 1]

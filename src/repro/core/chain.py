@@ -1,0 +1,250 @@
+"""Minimap2 chain kernel (paper §III-B, Algs. 2-3) — 1-D banded max-plus DP.
+
+    f(i) = max( w_i,  max_{i-T <= j < i} [ f(j) + alpha(i,j) - beta(i,j) ] )
+
+The paper's two software transformations are reproduced exactly:
+
+  1. *Loop fission* (Alg. 3): the match-up scores S[i, t] = alpha - beta for
+     t = i - j in [1, T] are dependency-free -> computed as one dense
+     (N, T) pass (`chain_scores`). Only the tiny max-plus recurrence over
+     f remains serial.
+  2. *Band truncation*: T = 5000 -> 64 (validated in benchmarks/fig_band).
+
+Execution modes for the serial part:
+  * 'sequential'  — lax.scan with a (T,) ring carry (single-worker).
+  * 'fission'     — the Squire version: scores precomputed in parallel,
+                    scan consumes a row per step (vectorized max).
+                    [identical schedule; kept for benchmark clarity]
+  * 'blocked'     — beyond-paper: band-to-band tropical transfer matrices
+                    per block composed with an associative scan; depth
+                    O(B + log(N/B)) instead of O(N). Exact, but each block
+                    composition is a (T x T) max-plus matmul, so it pays off
+                    for small T — measured in benchmarks/fig7_sync.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import MAXPLUS
+
+Array = jnp.ndarray
+
+NEG = jnp.float32(-1e18)
+
+
+class ChainParams(NamedTuple):
+    kmer: int = 15          # anchor width (w_i and alpha cap)
+    max_dist: int = 5000    # max reference/query span of a match-up
+    bandwidth: int = 500    # max |dq - dr| (gap)
+    gap_scale: float = 0.01
+
+
+def chain_scores(q: Array, r: Array, T: int,
+                 params: ChainParams = ChainParams(),
+                 anchor_valid: Array | None = None) -> Array:
+    """Fission phase (Alg. 3 lines 4-5): dense (N, T) match-up scores.
+
+    q, r: (N,) anchor query/reference positions, sorted by r.
+    S[i, t] is the score of chaining anchor i after anchor j = i - t;
+    -inf where invalid (out of range / over band / negative advance).
+    ``anchor_valid``: optional (N,) bool — padding anchors (fixed-capacity
+    pipelines) score -inf in both roles.
+    Fully dependency-free: this is the work Squire farms to its workers and
+    the MXU/VPU consumes as one dense pass.
+    """
+    n = q.shape[0]
+    idx = jnp.arange(n)[:, None]                  # (N, 1)
+    t = jnp.arange(1, T + 1)[None, :]             # (1, T)
+    j = idx - t                                   # predecessor index
+    valid = j >= 0
+    jc = jnp.clip(j, 0, n - 1)
+
+    dq = q[:, None] - q[jc]
+    dr = r[:, None] - r[jc]
+    gap = jnp.abs(dq - dr).astype(jnp.float32)
+
+    alpha = jnp.minimum(jnp.minimum(dq, dr),
+                        params.kmer).astype(jnp.float32)
+    beta = (params.gap_scale * params.kmer * gap
+            + 0.5 * jnp.log2(gap + 1.0))
+
+    ok = (valid & (dq > 0) & (dr >= 0)
+          & (dq <= params.max_dist) & (dr <= params.max_dist)
+          & (gap <= params.bandwidth))
+    if anchor_valid is not None:
+        ok &= anchor_valid[:, None] & anchor_valid[jc]
+    return jnp.where(ok, alpha - beta, NEG)
+
+
+def _ring_to_f(scores_row: Array, ring: Array) -> Array:
+    """candidates for f(i): S[i, t] + f(i - t); ring[t-1] = f(i-t)."""
+    return scores_row + ring
+
+
+def chain_sequential(scores: Array, w: Array) -> Tuple[Array, Array]:
+    """Serial consumption phase. scores: (N, T); w: (N,) anchor self-scores.
+
+    Returns (f: (N,), pred_offset: (N,) int32 in [0, T]; 0 = chain start).
+    """
+    n, T = scores.shape
+
+    def step(ring, si_wi):
+        si, wi = si_wi
+        cand = _ring_to_f(si, ring)
+        best = jnp.max(cand)
+        t_best = jnp.argmax(cand).astype(jnp.int32) + 1
+        fi = jnp.maximum(best, wi)
+        off = jnp.where(best >= wi, t_best, 0)
+        ring = jnp.concatenate([fi[None], ring[:-1]])  # f(i-1) at slot 0
+        return ring, (fi, off)
+
+    ring0 = jnp.full((T,), NEG)
+    _, (f, off) = jax.lax.scan(step, ring0, (scores, w))
+    return f, off
+
+
+def chain_blocked(scores: Array, w: Array, block: int = 16
+                  ) -> Tuple[Array, Array]:
+    """Beyond-paper mode: tropical block-transfer associative scan.
+
+    State v_i = [f(i-1), ..., f(i-T)]. One step is the tropical affine map
+      v' = M_i (x) v (+) c_i,
+    with M_i row 0 = scores[i] (new f via max-plus dot), rows 1.. = shift,
+    and c_i = [w_i, -inf, ...]. Blocks of `block` steps are composed
+    sequentially into (T x T) transfer matrices — *in parallel across
+    blocks* — then an associative scan stitches block boundary states.
+    Exact; preds recovered by a final parallel re-evaluation.
+    """
+    n, T = scores.shape
+    pad = (-n) % block
+    if pad:
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad, T), NEG)], axis=0)
+        w = jnp.concatenate([w, jnp.full((pad,), NEG)], axis=0)
+    nb = scores.shape[0] // block
+
+    eye = jnp.where(jnp.eye(T, dtype=bool), 0.0, NEG)          # tropical I
+    shift = jnp.where(jnp.eye(T, k=-1, dtype=bool), 0.0, NEG)  # v'[k]=v[k-1]
+
+    def step_matrix(si, wi):
+        m = shift.at[0, :].set(si)           # row 0: new f from band
+        c = jnp.full((T,), NEG).at[0].set(wi)
+        return m, c
+
+    def compose(mc1, mc2):
+        """apply mc1 then mc2 (tropical affine composition)."""
+        m1, c1 = mc1
+        m2, c2 = mc2
+        m = MAXPLUS.matmul(m2, m1)
+        c = jnp.maximum(MAXPLUS.matmul(m2, c1[:, None])[:, 0], c2)
+        return m, c
+
+    sc_b = scores.reshape(nb, block, T)
+    w_b = w.reshape(nb, block)
+
+    def block_transfer(sb, wb):
+        def body(mc, sw):
+            return compose(mc, step_matrix(*sw)), None
+        (m, c), _ = jax.lax.scan(body, (eye, jnp.full((T,), NEG)), (sb, wb))
+        return m, c
+
+    bm, bc = jax.vmap(block_transfer)(sc_b, w_b)      # parallel across blocks
+
+    pm, pc = jax.lax.associative_scan(
+        lambda x, y: jax.vmap(compose)(x, y), (bm, bc), axis=0)
+    v0 = jnp.full((T,), NEG)
+    v_in = jnp.concatenate(
+        [v0[None],
+         jnp.maximum(MAXPLUS.matmul(pm[:-1], v0[None, :, None])[..., 0],
+                     pc[:-1])], axis=0)               # state entering block b
+
+    def replay(vin, sb, wb):
+        def body(v, sw):
+            si, wi = sw
+            cand = si + v
+            best = jnp.max(cand)
+            t_best = jnp.argmax(cand).astype(jnp.int32) + 1
+            fi = jnp.maximum(best, wi)
+            off = jnp.where(best >= wi, t_best, 0)
+            v = jnp.concatenate([fi[None], v[:-1]])
+            return v, (fi, off)
+        _, (f, off) = jax.lax.scan(body, vin, (sb, wb))
+        return f, off
+
+    f, off = jax.vmap(replay)(v_in, sc_b, w_b)        # parallel re-evaluation
+    f = f.reshape(-1)[:n]
+    off = off.reshape(-1)[:n]
+    return f, off
+
+
+def chain_anchors(q: Array, r: Array, T: int = 64,
+                  params: ChainParams = ChainParams(),
+                  mode: str = "fission", block: int = 16,
+                  anchor_valid: Array | None = None):
+    """Full chain kernel. Returns (f, pred) with pred[i] in [-1, i)."""
+    n = q.shape[0]
+    w = jnp.full((n,), float(params.kmer), jnp.float32)
+    if anchor_valid is not None:
+        w = jnp.where(anchor_valid, w, NEG)
+    scores = chain_scores(q, r, T, params, anchor_valid=anchor_valid)
+    if mode in ("sequential", "fission"):
+        f, off = chain_sequential(scores, w)
+    elif mode == "blocked":
+        f, off = chain_blocked(scores, w, block=block)
+    else:
+        raise ValueError(f"unknown chain mode: {mode!r}")
+    pred = jnp.where(off > 0, jnp.arange(n) - off, -1)
+    return f, pred
+
+
+def chain_ref_unbanded(q: np.ndarray, r: np.ndarray,
+                       params: ChainParams = ChainParams(),
+                       T: int = 5000):
+    """Pure-numpy oracle with arbitrary T (used to validate T=64)."""
+    n = len(q)
+    f = np.zeros(n, np.float64)
+    pred = np.full(n, -1, np.int64)
+    for i in range(n):
+        best, bj = float(params.kmer), -1
+        lo = max(0, i - T)
+        for j in range(i - 1, lo - 1, -1):
+            dq, dr = q[i] - q[j], r[i] - r[j]
+            if dq <= 0 or dr < 0 or dq > params.max_dist \
+                    or dr > params.max_dist:
+                continue
+            g = abs(int(dq) - int(dr))
+            if g > params.bandwidth:
+                continue
+            alpha = min(dq, dr, params.kmer)
+            beta = params.gap_scale * params.kmer * g + 0.5 * np.log2(g + 1.0)
+            sc = f[j] + alpha - beta
+            if sc > best:
+                best, bj = sc, j
+        f[i] = best
+        pred[i] = bj
+    return f, pred
+
+
+def backtrack(f: np.ndarray, pred: np.ndarray, min_score: float = 40.0):
+    """Host-side chain extraction (paper's backtracking pass)."""
+    order = np.argsort(-f)
+    used = np.zeros(len(f), bool)
+    chains = []
+    for i in order:
+        if f[i] < min_score:
+            break
+        if used[i]:
+            continue
+        node, members = int(i), []
+        while node >= 0 and not used[node]:
+            used[node] = True
+            members.append(node)
+            node = int(pred[node])
+        if len(members) >= 2:
+            chains.append((float(f[i]), members[::-1]))
+    return chains

@@ -1,0 +1,324 @@
+"""Chunked linear-attention recurrences — the paper's technique at LM scale.
+
+The WKV6 (RWKV) and Mamba recurrences are diagonal-linear 1-D recurrences,
+i.e. exactly the dependency pattern of the paper's chain kernel (DESIGN.md
+§3.1). The Squire execution model maps onto them directly:
+
+  * worker chunk   -> a C-step time chunk; all chunks' *intra*-chunk work is
+                      dependency-free and dense (MXU matmuls),
+  * global counter -> the chunk-boundary state handoff: a short sequential
+                      scan over T/C boundary states instead of T steps,
+  * loop fission   -> the readout y_t is split into an intra-chunk causal
+                      matmul term and an inter-chunk `rq @ S_in` term.
+
+Both functions compute the *outputs* y directly without materializing the
+(T, dk, dv) state tape — only (T/C) boundary states are kept, which is what
+makes 524k-token contexts feasible (the `long_500k` shape).
+
+Numerics: computed in fp32. Per-step log-decay is clamped to >= -1
+(w >= e^-1), so with chunk <= 64 every within-chunk exponent is bounded by
+64 < log(fp32_max) ~ 88 and the rescaled-key trick is exact with no
+overflow. RWKV6/Mamba trained decays live in (0.9, 1); the clamp is a
+safety contract, not an approximation in practice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_MIN_LOGW = -1.0  # w >= e^-1; keeps all chunk exponents fp32-safe for C<=64
+
+
+def wkv_chunked(r: Array, w: Array, k: Array, v: Array, u: Array | None,
+                s0: Array | None = None, chunk: int = 64,
+                variant: str = "tape", out_dtype=None):
+    """RWKV6-style readout over the diagonal-linear recurrence.
+
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+        y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+    Args:
+      r, w, k: (B, T, dk). w is the multiplicative decay in (0, 1].
+      v: (B, T, dv).
+      u: (dk,) current-token bonus (None or zeros for pure linear attn).
+      s0: (B, dk, dv) initial state (decode continuation) or None.
+      chunk: the Squire worker granularity (<= 64, see module docstring).
+      variant: 'tape' (default; two-phase vectorized form — fastest under
+        autodiff, see EXPERIMENTS.md §Perf rwkv6 iter 2: the 'fused'
+        single-scan form stacks fp32 residuals per chunk and LOSES) or
+        'fused'.
+      out_dtype: dtype of the emitted y tape (default fp32; the model
+        passes bf16 — halves the dominant tape bytes, EXPERIMENTS.md
+        §Perf rwkv6 iteration 2).
+
+    Returns: (y: (B, T, dv) [out_dtype], s_final: (B, dk, dv) fp32).
+    """
+    if variant == "fused":
+        return _wkv_chunked_fused(r, w, k, v, u, s0, chunk, out_dtype)
+    assert chunk <= 64, "chunk > 64 breaks the fp32 exponent bound"
+    b, t, dk = r.shape
+    dv = v.shape[-1]
+    f32 = lambda x: x.astype(jnp.float32)
+    r, w, k, v = map(f32, (r, w, k, v))
+
+    pad = (-t) % chunk
+    if pad:
+        z = jnp.zeros((b, pad, dk), jnp.float32)
+        r = jnp.concatenate([r, z], 1)
+        k = jnp.concatenate([k, z], 1)
+        w = jnp.concatenate([w, jnp.ones((b, pad, dk), jnp.float32)], 1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, dv), jnp.float32)], 1)
+    tp = t + pad
+    nc = tp // chunk
+
+    rc = r.reshape(b, nc, chunk, dk)
+    wc = w.reshape(b, nc, chunk, dk)
+    kc = k.reshape(b, nc, chunk, dk)
+    vc = v.reshape(b, nc, chunk, dv)
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-38)), _MIN_LOGW)
+    cum = jnp.cumsum(logw, axis=2)                     # cum_j = sum_{i<=j}
+    cum_prev = cum - logw                              # decay start -> j-1
+    d_full = jnp.exp(cum[:, :, -1])                    # (b, nc, dk)
+
+    rq = rc * jnp.exp(cum_prev)                        # r_j decayed from start
+    ks = kc * jnp.exp(-cum)                            # k_i advanced to start
+    kd = kc * jnp.exp(cum[:, :, -1:, :] - cum)         # k_i decayed to end
+
+    # intra-chunk causal readout: pairs (i < j) within the chunk
+    att = jnp.einsum("bnjk,bnik->bnji", rq, ks)        # (b, nc, C, C)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(mask, att, 0.0)
+    y_intra = jnp.einsum("bnji,bniv->bnjv", att, vc)
+
+    if u is not None:
+        bonus = jnp.einsum("bnjk,k,bnjk->bnj", rc, f32(u), kc)
+        y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk summaries + boundary handoff (the global-counter scan)
+    upd = jnp.einsum("bnik,bniv->bnkv", kd, vc)        # (b, nc, dk, dv)
+    if s0 is None:
+        s0 = jnp.zeros((b, dk, dv), jnp.float32)
+
+    def boundary(s, du):
+        d, uc = du
+        s_next = d[:, :, None] * s + uc
+        return s_next, s                               # emit incoming state
+
+    s_final, s_in = jax.lax.scan(
+        boundary, f32(s0),
+        (d_full.transpose(1, 0, 2), upd.transpose(1, 0, 2, 3)))
+    s_in = s_in.transpose(1, 0, 2, 3)                  # (b, nc, dk, dv)
+
+    y = y_intra + jnp.einsum("bnjk,bnkv->bnjv", rq, s_in)
+    y = y.reshape(b, tp, dv)[:, :t]
+    if out_dtype is not None:
+        y = y.astype(out_dtype)
+    return y, s_final
+
+
+def _wkv_chunked_fused(r: Array, w: Array, k: Array, v: Array,
+                       u: Array | None, s0: Array | None, chunk: int,
+                       out_dtype=None):
+    """Single-scan WKV: the boundary handoff and the intra-chunk readout
+    share one loop body, so no (nc, B, dk, dv) state tape, no transposed
+    copies, and per-chunk decay math stays transient (§Perf rwkv6 iter 2).
+
+    Identical math to the 'tape' variant; bytes drop ~2x at train_4k scale
+    (measured in EXPERIMENTS.md §Perf).
+    """
+    assert chunk <= 64, "chunk > 64 breaks the fp32 exponent bound"
+    b, t, dk = r.shape
+    dv = v.shape[-1]
+    out_dtype = out_dtype or jnp.float32
+
+    pad = (-t) % chunk
+    if pad:
+        zk = jnp.zeros((b, pad, dk), r.dtype)
+        r = jnp.concatenate([r, zk], 1)
+        k = jnp.concatenate([k, jnp.zeros((b, pad, dk), k.dtype)], 1)
+        w = jnp.concatenate([w, jnp.ones((b, pad, dk), w.dtype)], 1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, dv), v.dtype)], 1)
+    tp = t + pad
+    nc = tp // chunk
+
+    # scan layout (nc, b, C, d): one transpose of the compact input dtype
+    def to_scan(x, d):
+        return x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+
+    xs = (to_scan(r, dk), to_scan(w, dk), to_scan(k, dk), to_scan(v, dv))
+    s0 = jnp.zeros((b, dk, dv), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+    uf = None if u is None else u.astype(jnp.float32)
+
+    def body(s, x):
+        rc, wc, kc, vc = (z.astype(jnp.float32) for z in x)  # (b, C, d)
+        logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-38)), _MIN_LOGW)
+        cum = jnp.cumsum(logw, axis=1)                 # (b, C, dk)
+        rq = rc * jnp.exp(cum - logw)                  # decayed from start
+        ks = kc * jnp.exp(-cum)                        # advanced to start
+        kd = kc * jnp.exp(cum[:, -1:, :] - cum)        # decayed to end
+
+        att = jnp.einsum("bjk,bik->bji", rq, ks) * mask
+        y = jnp.einsum("bji,biv->bjv", att, vc)
+        if uf is not None:
+            bonus = jnp.einsum("bjk,k,bjk->bj", rc, uf, kc)
+            y = y + bonus[..., None] * vc
+        y = y + jnp.einsum("bjk,bkv->bjv", rq, s)      # inter-chunk term
+        upd = jnp.einsum("bik,biv->bkv", kd, vc)
+        s = jnp.exp(cum[:, -1])[:, :, None] * s + upd
+        return s, y.astype(out_dtype)
+
+    s_final, ys = jax.lax.scan(body, s0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, tp, dv)[:, :t]
+    return y, s_final
+
+
+def wkv_ref(r, w, k, v, u, s0=None):
+    """Sequential oracle for wkv_chunked (same clamp contract)."""
+    b, t, dk = r.shape
+    dv = v.shape[-1]
+    f32 = lambda x: x.astype(jnp.float32)
+    r, w, k, v = map(f32, (r, w, k, v))
+    w = jnp.exp(jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), _MIN_LOGW))
+    if s0 is None:
+        s0 = jnp.zeros((b, dk, dv), jnp.float32)
+    uu = jnp.zeros((dk,), jnp.float32) if u is None else f32(u)
+
+    def one(rb, wb, kb, vb, s0b):
+        def step(s, rwkv):
+            rt, wt, kt, vt = rwkv
+            kv = kt[:, None] * vt[None, :]
+            yt = jnp.sum(rt[:, None] * (s + uu[:, None] * kv), axis=0)
+            s = wt[:, None] * s + kv
+            return s, yt
+        s, y = jax.lax.scan(step, f32(s0b), (rb, wb, kb, vb))
+        return y, s
+
+    y, s = jax.vmap(one)(r, w, k, v, s0)
+    return y, s
+
+
+def mamba_chunked(x: Array, dt: Array, a: Array, b_in: Array, c_in: Array,
+                  d_skip: Array, h0: Array | None = None, chunk: int = 64):
+    """Mamba (S6) selective scan, chunk-parallel.
+
+        h_t = exp(dt_t * A) (.) h_{t-1} + (dt_t * x_t) B_t     (d, n) state
+        y_t = h_t C_t^T + D (.) x_t
+
+    Args:
+      x, dt: (B, T, d) input and positive step sizes.
+      a: (d, n) negative state matrix (continuous-time A).
+      b_in, c_in: (B, T, n) input/output projections.
+      d_skip: (d,) skip connection.
+      h0: (B, d, n) initial state or None.
+      chunk: worker granularity.
+
+    Returns: (y: (B, T, d) fp32, h_final: (B, d, n) fp32).
+
+    The boundary handoff materializes only (T/C) states; within chunks the
+    prefix is a rescaled cumsum (dependency-free across chunks — the same
+    fission as wkv_chunked, with elementwise (d, n) channels instead of the
+    rank-1 matmul form).
+    """
+    bsz, t, d = x.shape
+    n = a.shape[-1]
+    f32 = lambda z: z.astype(jnp.float32)
+    x, dt, a, b_in, c_in, d_skip = map(f32, (x, dt, a, b_in, c_in, d_skip))
+
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((bsz, pad, d), jnp.float32)], 1)
+        dt = jnp.concatenate([dt, jnp.zeros((bsz, pad, d), jnp.float32)], 1)
+        b_in = jnp.concatenate(
+            [b_in, jnp.zeros((bsz, pad, n), jnp.float32)], 1)
+        c_in = jnp.concatenate(
+            [c_in, jnp.zeros((bsz, pad, n), jnp.float32)], 1)
+    tp = t + pad
+    nc = tp // chunk
+
+    xc = x.reshape(bsz, nc, chunk, d)
+    dtc = dt.reshape(bsz, nc, chunk, d)
+    bc = b_in.reshape(bsz, nc, chunk, n)
+    cc = c_in.reshape(bsz, nc, chunk, n)
+
+    # log decay per step/(channel,state): dt * A  (clamped like wkv)
+    la = jnp.maximum(dtc[..., :, None] * a[None, None, None], _MIN_LOGW)
+    cum = jnp.cumsum(la, axis=2)                       # (b,nc,C,d,n)
+    # input contribution u_i = dt_i x_i B_i (outer over n)
+    u = (dtc * xc)[..., :, None] * bc[..., None, :]    # (b,nc,C,d,n)
+    # within-chunk prefix: h_j = e^{cum_j} (h_in + sum_{i<=j} e^{-cum_i} u_i)
+    acc = jnp.cumsum(jnp.exp(-cum) * u, axis=2)
+
+    d_full = jnp.exp(cum[:, :, -1])                    # (b,nc,d,n)
+    upd = d_full * acc[:, :, -1]                       # sum_i e^{cum_C-cum_i}u
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def boundary(h, du):
+        dd, uc = du
+        return dd * h + uc, h
+
+    h_final, h_in = jax.lax.scan(
+        boundary, f32(h0),
+        (d_full.transpose(1, 0, 2, 3), upd.transpose(1, 0, 2, 3)))
+    h_in = h_in.transpose(1, 0, 2, 3)                  # (b,nc,d,n)
+
+    h = jnp.exp(cum) * (h_in[:, :, None] + acc)        # (b,nc,C,d,n)
+    y = jnp.einsum("bnjds,bnjs->bnjd", h, cc)
+    y = y + d_skip * xc
+    y = y.reshape(bsz, tp, d)[:, :t]
+    return y, h_final
+
+
+def mamba_ref(x, dt, a, b_in, c_in, d_skip, h0=None):
+    """Sequential oracle for mamba_chunked (same clamp contract)."""
+    bsz, t, d = x.shape
+    n = a.shape[-1]
+    f32 = lambda z: z.astype(jnp.float32)
+    x, dt, a, b_in, c_in, d_skip = map(f32, (x, dt, a, b_in, c_in, d_skip))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def one(xb, dtb, bb, cb, h0b):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            la = jnp.maximum(dtt[:, None] * a, _MIN_LOGW)
+            h = jnp.exp(la) * h + (dtt * xt)[:, None] * bt[None, :]
+            yt = jnp.einsum("ds,s->d", h, ct) + d_skip * xt
+            return h, yt
+        h, y = jax.lax.scan(step, f32(h0b), (xb, dtb, bb, cb))
+        return y, h
+
+    y, h = jax.vmap(one)(x, dt, b_in, c_in, h0)
+    return y, h
+
+
+def wkv_decode_step(r, w, k, v, u, s):
+    """Single-token WKV update (serving): r/w/k: (B, dk); v: (B, dv);
+    s: (B, dk, dv). Returns (y: (B, dv), s_next)."""
+    f32 = lambda z: z.astype(jnp.float32)
+    r, w, k, v, s = map(f32, (r, w, k, v, s))
+    w = jnp.exp(jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), _MIN_LOGW))
+    kv = k[:, :, None] * v[:, None, :]
+    uu = jnp.zeros_like(r[0]) if u is None else f32(u)
+    y = jnp.einsum("bk,bkv->bv", r, s + uu[None, :, None] * kv)
+    s_next = w[:, :, None] * s + kv
+    return y, s_next
+
+
+def mamba_decode_step(x, dt, a, b_in, c_in, d_skip, h):
+    """Single-token Mamba update: x/dt: (B, d); b_in/c_in: (B, n);
+    h: (B, d, n). Returns (y: (B, d), h_next)."""
+    f32 = lambda z: z.astype(jnp.float32)
+    x, dt, a, b_in, c_in, d_skip, h = map(
+        f32, (x, dt, a, b_in, c_in, d_skip, h))
+    la = jnp.maximum(dt[:, :, None] * a[None], _MIN_LOGW)
+    h_next = jnp.exp(la) * h + (dt * x)[:, :, None] * b_in[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h_next, c_in) + d_skip * x
+    return y, h_next

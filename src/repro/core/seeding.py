@@ -1,0 +1,136 @@
+"""Minimap2-style seeding (paper §III-B): minimizers -> hash lookup -> sort.
+
+The paper's seeding stage extracts window minimizers from the read, indexes
+a hash table built over the reference, and radix-sorts the resulting
+(query_pos, ref_pos) anchors by reference position — the sort dominating
+runtime is exactly the chunk-parallel sort of core/sort.py.
+
+TPU adaptation of the sparse structures: the hash table becomes two sorted
+arrays (hash, position) queried with vectorized binary search
+(searchsorted); variable-length outputs become fixed-capacity arrays with
+validity masks (the standard TPU replacement for dynamic sizes; same
+pattern the MoE capacity dispatch uses).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sort as rsort
+
+Array = jnp.ndarray
+
+
+def hash32(x: Array) -> Array:
+    """Murmur3 finalizer (invertible mix) on uint32, wraps mod 2^32."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x *= jnp.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x
+
+
+def kmer_codes(seq: Array, k: int) -> Array:
+    """2-bit pack k-mers: seq (n,) int in 0..3 -> (n-k+1,) uint32. k <= 15."""
+    n = seq.shape[0]
+    nk = n - k + 1
+    code = jnp.zeros((nk,), jnp.uint32)
+    for t in range(k):
+        code = (code << 2) | seq[t:t + nk].astype(jnp.uint32)
+    return code
+
+
+def minimizers(seq: Array, k: int, w: int) -> Tuple[Array, Array, Array]:
+    """Window minimizers: for each window of w consecutive k-mers, the
+    k-mer with the smallest hash (leftmost on ties).
+
+    Returns fixed-size (positions, hashes, valid) of length n-k-w+2 with
+    duplicate consecutive minimizers masked out (robust winnowing's
+    compaction, as a mask).
+    """
+    codes = kmer_codes(seq, k)
+    h = hash32(codes)
+    nk = h.shape[0]
+    nw = nk - w + 1
+    # stack the w shifted views: (w, nw)
+    stacked = jnp.stack([h[t:t + nw] for t in range(w)], axis=0)
+    arg = jnp.argmin(stacked, axis=0)             # leftmost min per window
+    pos = arg + jnp.arange(nw)                    # k-mer position
+    hmin = jnp.min(stacked, axis=0)
+    # consecutive windows often pick the same k-mer -> keep first occurrence
+    keep = jnp.concatenate(
+        [jnp.ones((1,), bool), pos[1:] != pos[:-1]])
+    return pos, hmin, keep
+
+
+class Index(NamedTuple):
+    """Reference minimizer index: hash-sorted arrays + bucket boundaries."""
+    hashes: Array     # (n_idx,) uint32, sorted
+    positions: Array  # (n_idx,) int32 reference positions, grouped by hash
+
+
+def build_index(ref: np.ndarray, k: int, w: int) -> Index:
+    """Host-side (offline) index construction, like minimap2's indexing."""
+    pos, h, keep = jax.jit(minimizers, static_argnums=(1, 2))(
+        jnp.asarray(ref), k, w)
+    pos, h, keep = np.asarray(pos), np.asarray(h), np.asarray(keep)
+    pos, h = pos[keep], h[keep]
+    order = np.argsort(h, kind="stable")
+    return Index(hashes=jnp.asarray(h[order]),
+                 positions=jnp.asarray(pos[order].astype(np.int32)))
+
+
+def lookup_anchors(index: Index, qpos: Array, qhash: Array, qvalid: Array,
+                   max_occ: int = 8):
+    """Vectorized hash-table probe -> fixed-capacity anchor set.
+
+    For each query minimizer, up to `max_occ` reference hits become anchors
+    (q_pos, r_pos). Returns (q, r, valid) of shape (n_min * max_occ,).
+    """
+    lo = jnp.searchsorted(index.hashes, qhash, side="left")
+    hi = jnp.searchsorted(index.hashes, qhash, side="right")
+    occ = jnp.arange(max_occ)[None, :]                     # (1, C)
+    slot = lo[:, None] + occ                               # (n, C)
+    hit = (slot < hi[:, None]) & qvalid[:, None]
+    slot = jnp.clip(slot, 0, index.positions.shape[0] - 1)
+    r = index.positions[slot]
+    q = jnp.broadcast_to(qpos[:, None], r.shape)
+    return (q.reshape(-1).astype(jnp.int32),
+            r.reshape(-1).astype(jnp.int32),
+            hit.reshape(-1))
+
+
+def seed(index: Index, read: Array, k: int, w: int, max_occ: int = 8,
+         num_sort_chunks: int = 8, valid_len: Array | None = None):
+    """Full seeding stage: minimizers -> lookup -> radix sort by r_pos.
+
+    ``valid_len``: true read length when ``read`` is padded to a shape
+    bucket (fixed-shape pipelines); minimizers beyond it are masked.
+    Invalid anchors get key uint32.max so they sort to the tail; returns
+    (q_sorted, r_sorted, valid_sorted).
+    """
+    qpos, qh, qvalid = minimizers(read, k, w)
+    if valid_len is not None:
+        # windows are indexed by position in the minimizer arrays; only
+        # windows fully inside the true read are real (n_windows =
+        # valid_len - k - w + 2), which makes padded == unpadded exactly.
+        n_windows = valid_len - k - w + 2
+        qvalid &= jnp.arange(qpos.shape[0]) < n_windows
+    q, r, valid = lookup_anchors(index, qpos, qh, qvalid, max_occ)
+    key = jnp.where(valid, r.astype(jnp.uint32),
+                    jnp.uint32(0xFFFFFFFF))
+    packed = (q.astype(jnp.uint32) << 1) | valid.astype(jnp.uint32)
+    rk, pv = rsort.radix_sort(key, packed.astype(jnp.int32),
+                              num_chunks=num_sort_chunks,
+                              min_parallel=0)
+    pv = pv.astype(jnp.uint32)
+    q_sorted = (pv >> 1).astype(jnp.int32)
+    valid_sorted = (pv & 1).astype(bool) & (rk != jnp.uint32(0xFFFFFFFF))
+    r_sorted = rk.astype(jnp.int32)
+    return q_sorted, r_sorted, valid_sorted

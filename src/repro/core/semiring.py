@@ -1,0 +1,90 @@
+"""Semirings for dependency-bound recurrences.
+
+Squire's synchronization counters order the *consumption* of previously
+produced values (``f(j)`` in the chain kernel, boundary cells in DTW/SW).
+On TPU we replace the ordering hardware with algebra: every kernel the paper
+accelerates is an affine recurrence
+
+    x_t = (a_t (*) x_{t-1}) (+) b_t
+
+over some semiring ``((+), (*))`` — (max,+) for chain/Smith-Waterman,
+(min,+) for DTW, ordinary (+,*) for the diagonal-linear SSM scans that power
+RWKV6/Mamba. Affine elements compose associatively, which is what lets the
+1-D engine (scan1d) run the recurrence sequentially, chunked (Squire's
+worker partitioning) or as a parallel associative scan (beyond-paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A commutative-monoid pair ((+), (*)) with (+)-identity ``zero``.
+
+    ``add`` is the "combining" op (max / min / +), ``mul`` the "extending"
+    op (+ / *). ``one`` is the (*)-identity, used to seed prefix products.
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: float
+    one: float
+
+    def add_reduce(self, x: Array, axis: int) -> Array:
+        if self.name == "real":
+            return jnp.sum(x, axis=axis)
+        if self.name == "maxplus":
+            return jnp.max(x, axis=axis)
+        if self.name == "minplus":
+            return jnp.min(x, axis=axis)
+        raise NotImplementedError(self.name)
+
+    def matmul(self, a: Array, b: Array) -> Array:
+        """Generalized matmul over the semiring: (..., m, k) x (..., k, n)."""
+        if self.name == "real":
+            return jnp.matmul(a, b)
+        # (..., m, k, 1) (*) (..., 1, k, n) -> add-reduce over k
+        prod = self.mul(a[..., :, :, None], b[..., None, :, :])
+        return self.add_reduce(prod, axis=-2)
+
+    def affine_apply(self, a: Array, b: Array, x: Array) -> Array:
+        """x' = (a (*) x) (+) b, elementwise (diagonal transition)."""
+        return self.add(self.mul(a, x), b)
+
+    def affine_compose(self, a1: Array, b1: Array, a2: Array, b2: Array):
+        """Compose elementwise affine maps: apply (a1,b1) first, then (a2,b2).
+
+        (a2 (*) (a1 (*) x (+) b1)) (+) b2 = ((a2*a1) (*) x) (+) ((a2*b1)+b2)
+        Distributivity of (*) over (+) — the semiring axiom — is exactly
+        what makes this exact for max-plus/min-plus too.
+        """
+        return self.mul(a2, a1), self.add(self.mul(a2, b1), b2)
+
+
+REAL = Semiring("real", add=jnp.add, mul=jnp.multiply, zero=0.0, one=1.0)
+MAXPLUS = Semiring("maxplus", add=jnp.maximum, mul=jnp.add,
+                   zero=-jnp.inf, one=0.0)
+MINPLUS = Semiring("minplus", add=jnp.minimum, mul=jnp.add,
+                   zero=jnp.inf, one=0.0)
+
+SEMIRINGS = {s.name: s for s in (REAL, MAXPLUS, MINPLUS)}
+
+
+def finite_zero(sr: Semiring, dtype) -> Array:
+    """A finite stand-in for the (+)-identity, safe for int dtypes."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(sr.zero, dtype)
+    info = jnp.iinfo(dtype)
+    if sr.name == "maxplus":
+        return jnp.asarray(info.min // 2, dtype)
+    if sr.name == "minplus":
+        return jnp.asarray(info.max // 2, dtype)
+    return jnp.asarray(0, dtype)

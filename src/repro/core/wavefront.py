@@ -1,0 +1,147 @@
+"""2-D tiled wavefront engine (the Squire *local counters*, in JAX).
+
+Squire solves 2-D DP matrices (DTW, Smith-Waterman) by giving each worker a
+block of columns; worker x hands the right boundary of each row to worker
+x+1 through a per-worker hardware counter (Alg. 4, Fig. 5). The TPU-native
+equivalent blocks the matrix into (tile_r x tile_c) VMEM tiles and walks
+tiles in anti-diagonal wavefront order: all tiles on a diagonal are
+dependency-free (fine-grain parallel); the boundary vectors that Squire
+passed through the L2 + counters become explicit carries between tile calls.
+
+The engine is generic over the tile function:
+
+    tile_fn(top: (tc,), left: (tr,), corner: (), a: (tr,), b: (tc,))
+        -> (tile: (tr, tc), bottom: (tc,), right: (tr,), corner_out: ())
+
+where `a`/`b` are the per-row / per-column inputs of the tile (signal
+samples, sequence characters, ...). The engine only schedules; DTW/SW
+supply tile_fns (pure-jnp diagonal-vectorized, or the Pallas kernel).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+TileFn = Callable[..., Tuple[Array, Array, Array, Array]]
+
+
+def pad_to_multiple(x: Array, mult: int, axis: int, fill) -> Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def run_wavefront(tile_fn: TileFn, a: Array, b: Array, top0: Array,
+                  left0: Array, corner0: Array, tile_r: int, tile_c: int,
+                  assemble: bool = True):
+    """Walk the (len(a) x len(b)) DP matrix in tile-wavefront order.
+
+    Args:
+      tile_fn: see module docstring.
+      a: (n,) row inputs; b: (m,) column inputs. Must be multiples of the
+        tile sizes (use pad_to_multiple with a neutral fill).
+      top0: (m,) DP boundary row above the matrix (row -1).
+      left0: (n,) DP boundary column left of the matrix (col -1).
+      corner0: scalar DP value at (-1, -1).
+      assemble: if True return the full (n, m) matrix; otherwise only the
+        final bottom row / right column (enough for DTW distance or SW max
+        when tracked inside tile_fn).
+
+    Returns:
+      (matrix_or_None, bottom_row: (m,), right_col: (n,), corner: ()).
+
+    Tiles on the same anti-diagonal have no mutual dependencies — XLA sees
+    them as independent ops (the parallelism Squire's workers exploit). The
+    Python loop only fixes the partial order, exactly like the counters.
+    """
+    n, m = a.shape[0], b.shape[0]
+    if n % tile_r or m % tile_c:
+        raise ValueError(f"inputs ({n},{m}) not multiples of tile "
+                         f"({tile_r},{tile_c}); pad first")
+    nr, nc = n // tile_r, m // tile_c
+
+    # boundary state, indexed by tile coordinates
+    bottoms = [[None] * nc for _ in range(nr)]   # (tc,) below tile (r,c)
+    rights = [[None] * nc for _ in range(nr)]    # (tr,) right of tile (r,c)
+    corners = [[None] * nc for _ in range(nr)]   # () at tile (r,c) low-right
+    tiles = [[None] * nc for _ in range(nr)] if assemble else None
+
+    a_t = a.reshape(nr, tile_r)
+    b_t = b.reshape(nc, tile_c)
+    top_t = top0.reshape(nc, tile_c)
+    left_t = left0.reshape(nr, tile_r)
+
+    for d in range(nr + nc - 1):                 # wavefront order
+        r_lo, r_hi = max(0, d - nc + 1), min(nr - 1, d)
+        for r in range(r_lo, r_hi + 1):          # independent tiles of diag d
+            c = d - r
+            top = bottoms[r - 1][c] if r > 0 else top_t[c]
+            left = rights[r][c - 1] if c > 0 else left_t[r]
+            if r > 0 and c > 0:
+                corner = corners[r - 1][c - 1]
+            elif r > 0:
+                corner = left_t[r - 1][-1]       # == M[r*tr-1, -1]
+            elif c > 0:
+                corner = top_t[c - 1][-1]        # == M[-1, c*tc-1]
+            else:
+                corner = corner0
+            tile, bottom, right, corner_out = tile_fn(
+                top, left, corner, a_t[r], b_t[c])
+            bottoms[r][c], rights[r][c] = bottom, right
+            corners[r][c] = corner_out
+            if assemble:
+                tiles[r][c] = tile
+
+    bottom_row = jnp.concatenate([bottoms[nr - 1][c] for c in range(nc)])
+    right_col = jnp.concatenate([rights[r][nc - 1] for r in range(nr)])
+    final_corner = corners[nr - 1][nc - 1]
+    if assemble:
+        matrix = jnp.concatenate(
+            [jnp.concatenate(row, axis=1) for row in tiles], axis=0)
+        return matrix, bottom_row, right_col, final_corner
+    return None, bottom_row, right_col, final_corner
+
+
+def dp_tile_diagonal(cell_update, top: Array, left: Array, corner: Array,
+                     a: Array, b: Array):
+    """Generic diagonal-vectorized DP tile (the fine-grain parallel inner
+    loop). Computes M[i,j] = cell_update(diag, up, lft, a[i], b[j]) for a
+    (tr x tc) tile given boundaries, sweeping 2*max(tr,tc)-ish anti-diagonals
+    with all cells of a diagonal updated in one vector op.
+
+    Works for DTW (min-plus) and SW (max-plus with floor) via cell_update.
+    Pure jnp; the Pallas kernel mirrors this structure inside VMEM.
+    """
+    tr, tc = a.shape[0], b.shape[0]
+    dtype = top.dtype
+
+    # M padded with one boundary row/col: shape (tr+1, tc+1)
+    mat = jnp.zeros((tr + 1, tc + 1), dtype)
+    mat = mat.at[0, 0].set(corner)
+    mat = mat.at[0, 1:].set(top)
+    mat = mat.at[1:, 0].set(left)
+
+    rows = jnp.arange(1, tr + 1)
+    # Unrolled anti-diagonal sweep: diagonal k holds cells (i, k - i).
+    for k in range(2, tr + tc + 1):
+        cols = k - rows                          # (tr,)
+        valid = (cols >= 1) & (cols <= tc)
+        cc = jnp.clip(cols, 1, tc)
+        diag = mat[rows - 1, cc - 1]
+        up = mat[rows - 1, cc]
+        lft = mat[rows, cc - 1]
+        av = a[rows - 1]
+        bv = b[cc - 1]
+        new = cell_update(diag, up, lft, av, bv)
+        keep = mat[rows, cc]
+        mat = mat.at[rows, cc].set(jnp.where(valid, new, keep))
+
+    tile = mat[1:, 1:]
+    return tile, tile[-1, :], tile[:, -1], tile[-1, -1]

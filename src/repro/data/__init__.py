@@ -1,0 +1,2 @@
+from repro.data import genomics, lm  # noqa: F401
+from repro.data.lm import DataConfig, TokenStream  # noqa: F401

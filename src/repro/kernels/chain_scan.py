@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: banded max-plus chain recurrence (paper Alg. 3).
+
+Consumes the fission-phase score matrix S (N, T) — produced as dense
+VPU/MXU work by core.chain.chain_scores — and runs the serial part
+
+    f(i) = max(w_i, max_t S[i, t] + f(i - t)),   t in [1, T]
+
+with the last-T window of f held in a VMEM ring (the paper keeps it in the
+workers' L1/L2; the global-counter ordering is the sequential grid).
+
+Squire mapping:
+  * worker         -> the T band lanes: every candidate in the band is
+                      evaluated in one vector op (the paper's workers split
+                      this same band round-robin).
+  * global counter -> the ring scratch carried across sequential grid steps.
+
+Band T is padded to the 128-lane register width by ops.py. VMEM per
+program: (C, T) scores block + (1, T) ring; C=256, T=128 -> ~132 KB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e18  # python float: becomes a compile-time immediate in the kernel
+
+
+def _chain_kernel(scores_ref, w_ref, f_ref, off_ref, ring_ref, *,
+                  block: int):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        ring_ref[...] = jnp.full_like(ring_ref, NEG)
+
+    def step(t, _):
+        row = scores_ref[pl.ds(t, 1), :]          # (1, T)
+        ring = ring_ref[...]                      # (1, T); slot j = f(i-1-j)
+        cand = row + ring
+        best = jnp.max(cand)
+        arg = jnp.argmax(cand[0, :]).astype(jnp.int32)
+        wi = w_ref[pl.ds(t, 1)][0]
+        fi = jnp.maximum(best, wi)
+        off = jnp.where(best >= wi, arg + 1, 0)
+        f_ref[pl.ds(t, 1)] = fi[None]
+        off_ref[pl.ds(t, 1)] = off[None]
+        # shift the window: new f enters slot 0
+        shifted = jnp.concatenate([fi[None, None], ring[:, :-1]], axis=1)
+        ring_ref[...] = shifted
+        return 0
+
+    jax.lax.fori_loop(0, block, step, 0, unroll=False)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def chain_scan_pallas(scores, w, *, block: int = 256,
+                      interpret: bool = True):
+    """scores: (N, T) fp32 band scores (NEG where invalid); w: (N,).
+
+    Returns (f: (N,) fp32, off: (N,) int32 in [0, T]; 0 = chain start).
+    """
+    n, t = scores.shape
+    if n % block:
+        raise ValueError(f"N={n} not a multiple of block={block}")
+    grid = (n // block,)
+    f, off = pl.pallas_call(
+        functools.partial(_chain_kernel, block=block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, t), lambda i: (i, 0)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, t), jnp.float32)],
+        interpret=interpret,
+    )(scores.astype(jnp.float32), w.astype(jnp.float32))
+    return f, off

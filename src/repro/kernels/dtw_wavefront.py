@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: 2-D DP wavefront tile (DTW min-plus / SW max-plus).
+
+One program computes a (tr x tc) DP tile given its top row, left column and
+corner boundary values — the exact unit Squire's workers compute between
+local-counter handoffs (Alg. 4 / Fig. 5). Inside the tile, cells are swept
+in anti-diagonal order with the whole diagonal updated as one vector op
+(the fine-grain parallelism; tr lanes), using two rolling diagonal buffers
+in VMEM.
+
+Output is *diagonal-major*: D[k, i] = M[i, k - i]. ops.py converts back to
+row-major and extracts boundaries (a production kernel would emit tiles
+directly; the conversion is outside the dependency-critical path).
+
+Dependency bookkeeping (i = row lane, j = k - i):
+    up   M[i-1, j  ] = top[j]       if i == 0 else  D_{k-1}[i-1]
+    left M[i,   j-1] = left[i]      if j == 0 else  D_{k-1}[i]
+    diag M[i-1, j-1] = corner       if i == 0 and j == 0
+                     = top[j-1]     if i == 0
+                     = left[i-1]    if j == 0
+                     = D_{k-2}[i-1] otherwise
+
+VMEM: 2 diagonal buffers (tr,) + boundaries + the (K, tr) output block;
+tr = tc = 128 -> ~140 KB fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e18  # python float: compile-time immediate inside the kernel
+
+
+def _rev_gather(x_rev_padded, xlen: int, tr: int, k2):
+    """val[i] = x[k2 - i] for i in [0, tr); junk where out of range."""
+    start = xlen - 1 - k2 + tr
+    return jax.lax.dynamic_slice(x_rev_padded, (start,), (tr,))
+
+
+def _dp_tile_kernel(top_ref, left_ref, corner_ref, a_ref, b_ref, d_ref,
+                    d1_ref, d2_ref, *, kind: str, tr: int, tc: int,
+                    match: float, mismatch: float, gap: float):
+    top = top_ref[...]
+    left = left_ref[...]
+    corner = corner_ref[0]
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+
+    zpad = jnp.zeros((tr,), jnp.float32)
+    top_rp = jnp.concatenate([zpad, top[::-1], zpad])
+    b_rp = jnp.concatenate([zpad, b[::-1], zpad])
+
+    ii = jnp.arange(tr)
+    left_shift = jnp.concatenate([left[:1], left[:-1]])  # left[i-1]
+
+    def step(k, _):
+        jj = k - ii
+        valid = (jj >= 0) & (jj < tc)
+        d1 = d1_ref[...]
+        d2 = d2_ref[...]
+        d1s = jnp.concatenate([d1[:1], d1[:-1]])          # D_{k-1}[i-1]
+        d2s = jnp.concatenate([d2[:1], d2[:-1]])          # D_{k-2}[i-1]
+        topj = _rev_gather(top_rp, tc, tr, k)
+        topjm1 = _rev_gather(top_rp, tc, tr, k - 1)
+        bj = _rev_gather(b_rp, tc, tr, k)
+
+        up = jnp.where(ii == 0, topj, d1s)
+        lf = jnp.where(jj == 0, left, d1)
+        dg = jnp.where(ii == 0, topjm1,
+                       jnp.where(jj == 0, left_shift, d2s))
+        dg = jnp.where((ii == 0) & (jj == 0), corner, dg)
+
+        if kind == "dtw":
+            new = jnp.abs(a - bj) + jnp.minimum(dg, jnp.minimum(up, lf))
+            pad_val = BIG
+        elif kind == "sw":
+            sub = jnp.where(a == bj, jnp.float32(match),
+                            jnp.float32(mismatch))
+            new = jnp.maximum(dg + sub,
+                              jnp.maximum(up - gap, lf - gap))
+            new = jnp.maximum(new, 0.0)
+            pad_val = jnp.float32(0.0)
+        else:
+            raise ValueError(kind)
+
+        new = jnp.where(valid, new, pad_val)
+        d_ref[pl.ds(k, 1), :] = new[None, :]
+        d2_ref[...] = d1
+        d1_ref[...] = new
+        return 0
+
+    jax.lax.fori_loop(0, tr + tc - 1, step, 0, unroll=False)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "match", "mismatch", "gap",
+                                    "interpret"))
+def dp_tile_pallas(top, left, corner, a, b, *, kind: str = "dtw",
+                   match: float = 2.0, mismatch: float = -4.0,
+                   gap: float = 4.0, interpret: bool = True):
+    """Run one wavefront tile. Returns diagonal-major D (tr+tc-1, tr)."""
+    tr, tc = a.shape[0], b.shape[0]
+    kern = functools.partial(_dp_tile_kernel, kind=kind, tr=tr, tc=tc,
+                             match=match, mismatch=mismatch, gap=gap)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((tr + tc - 1, tr), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tr,), jnp.float32),
+                        pltpu.VMEM((tr,), jnp.float32)],
+        interpret=interpret,
+    )(top.astype(jnp.float32), left.astype(jnp.float32),
+      jnp.atleast_1d(corner).astype(jnp.float32),
+      a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: radix counting-sort rank pass (paper Alg. 1 hot-spot).
+
+One LSD radix pass over a worker chunk = three dependency-bound steps:
+per-key bucket histogram, exclusive bucket prefix (the serial part), and
+stable rank assignment. The paper's workers run this scalar loop per
+chunk; the TPU version keeps the (C, R) one-hot block in VMEM and turns
+the histogram + stable rank into MXU/VPU work:
+
+  * grid = chunks ("workers") — dependency-free fine-grain parallelism,
+  * per chunk: bucket = (keys >> shift) & (R-1); the running per-bucket
+    count is a VMEM carry across C-sized key blocks (the global-counter
+    pattern — order inside a chunk preserves stability),
+  * rank[i] = running_count[bucket_i] before i, computed blockwise with a
+    causal one-hot cumsum (vectorized, C x R in VMEM).
+
+Output is each key's stable rank within (chunk, bucket) plus the chunk's
+bucket histogram; ops.py composes ranks + histograms into scatter
+positions exactly like core.sort._counting_pass (the jnp oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rank_kernel(keys_ref, rank_ref, hist_ref, count_ref, *,
+                 block: int, n_blocks: int, radix: int, shift: int):
+    @pl.when(pl.program_id(0) >= 0)      # init per chunk (grid dim 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    def body(i, _):
+        keys = keys_ref[0, pl.ds(i * block, block)]          # (C,)
+        bucket = (keys >> shift) & (radix - 1)
+        onehot = (bucket[:, None] ==
+                  jax.lax.iota(jnp.uint32, radix)[None, :])  # (C, R) bool
+        oh = onehot.astype(jnp.int32)
+        # stable rank: keys earlier in the block with the same bucket
+        within = jnp.cumsum(oh, axis=0) - oh                 # (C, R)
+        prior = count_ref[...]                               # (1, R)
+        rank = jnp.sum((within + prior) * oh, axis=1)        # (C,)
+        rank_ref[0, pl.ds(i * block, block)] = rank.astype(jnp.int32)
+        count_ref[...] = prior + jnp.sum(oh, axis=0)[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, n_blocks, body, 0, unroll=False)
+    hist_ref[0, :] = count_ref[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("radix", "shift", "block",
+                                             "interpret"))
+def radix_rank_pallas(keys, *, radix: int = 256, shift: int = 0,
+                      block: int = 512, interpret: bool = True):
+    """keys: (n_chunks, chunk_len) uint32. Returns (ranks, hists):
+    ranks (n_chunks, chunk_len) int32 — stable rank within (chunk, bucket);
+    hists (n_chunks, radix) int32 — per-chunk bucket histogram.
+    chunk_len must be a multiple of `block`.
+    """
+    n_chunks, clen = keys.shape
+    if clen % block:
+        raise ValueError(f"chunk_len={clen} not a multiple of {block}")
+    kern = functools.partial(_rank_kernel, block=block,
+                             n_blocks=clen // block, radix=radix,
+                             shift=shift)
+    return pl.pallas_call(
+        kern,
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((1, clen), lambda c: (c, 0))],
+        out_specs=[pl.BlockSpec((1, clen), lambda c: (c, 0)),
+                   pl.BlockSpec((1, radix), lambda c: (c, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_chunks, clen), jnp.int32),
+                   jax.ShapeDtypeStruct((n_chunks, radix), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, radix), jnp.int32)],
+        interpret=interpret,
+    )(keys.astype(jnp.uint32))

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e18)
+BIG = jnp.float32(1e18)
+
+
+def ssm_scan_ref(r, w, k, v, u):
+    """Sequential WKV-style scan. Shapes as kernels.ssm_scan."""
+    f32 = lambda x: x.astype(jnp.float32)
+    r, w, k, v, u = map(f32, (r, w, k, v, u))
+
+    def one(rb, wb, kb, vb):
+        def step(s, rwkv):
+            rt, wt, kt, vt = rwkv
+            kv = kt[:, None] * vt[None, :]
+            yt = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)
+            s = wt[:, None] * s + kv
+            return s, yt
+        s0 = jnp.zeros((r.shape[-1], v.shape[-1]), jnp.float32)
+        _, y = jax.lax.scan(step, s0, (rb, wb, kb, vb))
+        return y
+
+    return jax.vmap(one)(r, w, k, v)
+
+
+def chain_scan_ref(scores, w):
+    """Sequential banded max-plus recurrence (= core.chain.chain_sequential)."""
+    n, t = scores.shape
+
+    def step(ring, si_wi):
+        si, wi = si_wi
+        cand = si + ring
+        best = jnp.max(cand)
+        arg = jnp.argmax(cand).astype(jnp.int32) + 1
+        fi = jnp.maximum(best, wi)
+        off = jnp.where(best >= wi, arg, 0)
+        ring = jnp.concatenate([fi[None], ring[:-1]])
+        return ring, (fi, off)
+
+    ring0 = jnp.full((t,), NEG)
+    _, (f, off) = jax.lax.scan(step, ring0,
+                               (scores.astype(jnp.float32),
+                                w.astype(jnp.float32)))
+    return f, off
+
+
+def dp_tile_ref(top, left, corner, a, b, *, kind="dtw", match=2.0,
+                mismatch=-4.0, gap=4.0):
+    """Row-major (tr, tc) tile via sequential double scan."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    tr, tc = a.shape[0], b.shape[0]
+
+    def cell(dg, up, lf, av, bv):
+        if kind == "dtw":
+            return jnp.abs(av - bv) + jnp.minimum(dg, jnp.minimum(up, lf))
+        sub = jnp.where(av == bv, jnp.float32(match), jnp.float32(mismatch))
+        return jnp.maximum(
+            0.0, jnp.maximum(dg + sub, jnp.maximum(up - gap, lf - gap)))
+
+    def row_step(carry, inp):
+        prev_row = carry
+        av, lval, dval = inp
+
+        def col_step(c, cinp):
+            lft, dgn = c
+            up, bv = cinp
+            val = cell(dgn, up, lft, av, bv)
+            return (val, up), val
+
+        _, row = jax.lax.scan(col_step, (lval, dval), (prev_row, b))
+        return row, row
+
+    # diag seed for row i is M[i-1, -1]: corner for row 0, then left[i-1]
+    dvals = jnp.concatenate([jnp.atleast_1d(corner).astype(jnp.float32),
+                             left[:-1].astype(jnp.float32)])
+    _, mat = jax.lax.scan(row_step, top.astype(jnp.float32),
+                          (a, left.astype(jnp.float32), dvals))
+    return mat

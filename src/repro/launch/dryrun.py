@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count on first init. Everything below is a normal module.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, constructs the jitted
+train / prefill / decode step with NamedShardings from the logical rule
+table, lowers it against ShapeDtypeStruct inputs (no allocation), compiles
+it, and records memory_analysis() / cost_analysis() / roofline terms into
+experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --all --mesh multi --force
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig, shape_applicable
+from repro.launch import mesh as mesh_lib, roofline, specs
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.serve import engine
+from repro.sharding import configure, make_param_shardings, named_sharding
+from repro.train import step as train_step_lib
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _tree_param_count(tree) -> int:
+    return int(sum(math.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+def _active_param_count(tree, cfg: ModelConfig) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        p = "/".join(str(k) for k in path)
+        n = math.prod(leaf.shape)
+        if "expert_" in p and cfg.num_experts:
+            n = n * cfg.experts_per_token // cfg.num_experts
+        total += n
+    return int(total)
+
+
+def _replicated_tree(shapes):
+    rep = named_sharding((), ())
+    return jax.tree.map(lambda _: rep, shapes)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (jitted_fn, example_args, tokens_per_step, kind)."""
+    ins = specs.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state_shapes = specs.train_state_specs(cfg)
+        state_sh = train_step_lib.state_shardings(state_shapes, mesh)
+        batch_sh = train_step_lib.batch_shardings(cfg, ins["batch"])
+        fn = train_step_lib.make_train_step(cfg, AdamWConfig())
+        out_shapes = jax.eval_shape(fn, state_shapes, ins["batch"])
+        out_sh = (state_sh, _replicated_tree(out_shapes[1]))
+        jfn = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                      out_shardings=out_sh, donate_argnums=(0,))
+        return jfn, (state_shapes, ins["batch"]), \
+            shape.global_batch * shape.seq_len, "train"
+
+    params_shapes = specs.params_specs(cfg)
+    params_sh = make_param_shardings(params_shapes, mesh)
+
+    if shape.kind == "prefill":
+        fn = engine.make_prefill_step(cfg, cache_slots=shape.seq_len)
+        batch_sh = train_step_lib.batch_shardings(cfg, ins["batch"])
+        out_shapes = jax.eval_shape(fn, params_shapes, ins["batch"])
+        logits_sh = named_sharding(out_shapes[0].shape,
+                                   ("batch", None, "vocab"))
+        cache_sh = engine.cache_shardings(cfg, out_shapes[1])
+        jfn = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                      out_shardings=(logits_sh, cache_sh))
+        return jfn, (params_shapes, ins["batch"]), \
+            shape.global_batch * shape.seq_len, "prefill"
+
+    # decode
+    fn = engine.make_decode_step(cfg)
+    cache_sh = engine.cache_shardings(cfg, ins["caches"])
+    inp_sh = {k: named_sharding(v.shape, ("cache_batch",) + (None,) *
+                                (len(v.shape) - 1))
+              for k, v in ins["inp"].items()}
+    out_shapes = jax.eval_shape(fn, params_shapes, ins["caches"],
+                                ins["inp"], ins["pos"])
+    nxt_sh = named_sharding(out_shapes[0].shape, ("cache_batch",))
+    logits_sh = named_sharding(out_shapes[1].shape,
+                               ("cache_batch", None, "vocab"))
+    jfn = jax.jit(fn, in_shardings=(params_sh, cache_sh, inp_sh,
+                                    named_sharding((), ())),
+                  out_shardings=(nxt_sh, logits_sh, cache_sh),
+                  donate_argnums=(1,))
+    return jfn, (params_shapes, ins["caches"], ins["inp"], ins["pos"]), \
+        shape.global_batch, "decode"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = OUT_DIR, verbose: bool = True,
+             rule_overrides: dict | None = None,
+             cfg_patch: dict | None = None, tag: str = "") -> dict:
+    """Lower+compile one cell.
+
+    ``rule_overrides``: sharding-rule table overrides (the §Perf lever).
+    ``cfg_patch``: dataclasses.replace fields on the ModelConfig.
+    ``tag``: suffix for the output json (perf experiments don't clobber
+    baselines).
+    """
+    import dataclasses as _dc
+    cfg = configs.get_config(arch)
+    if cfg_patch:
+        cfg = _dc.replace(cfg, **cfg_patch)
+    shape = configs.SHAPES[shape_name]
+    mesh_name = ("multi" if multi_pod else "single") + \
+        (f"__{tag}" if tag else "")
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "rule_overrides": rule_overrides, "cfg_patch": cfg_patch}
+
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        rec.update(status="SKIP", reason=skip)
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    configure(mesh, rule_overrides)
+    n_chips = math.prod(mesh.devices.shape)
+    try:
+        t0 = time.time()
+        jfn, args, tokens, kind = build_cell(cfg, shape, mesh)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k)) for k in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+            if verbose:
+                print(f"  memory_analysis: {rec['memory_analysis']}")
+        except Exception as e:  # CPU backend may not support it
+            rec["memory_analysis"] = f"unavailable: {e}"
+
+        # raw XLA numbers kept for reference; NOTE they count while bodies
+        # once (verified), so the roofline uses the trip-aware HLO walk.
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["xla_cost_analysis_raw"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))
+            and k in ("flops", "bytes accessed", "transcendentals")}
+
+        hlo = compiled.as_text()
+        params_tree = args[0].params if kind == "train" else args[0]
+        n_active = _active_param_count(params_tree, cfg)
+        summary = roofline.summarize(
+            hlo, n_active, tokens,
+            "train" if kind == "train" else "inference")
+        # useful-compute ratio: MODEL_FLOPS vs compiled global FLOPs
+        global_flops = summary["hlo_flops_per_device"] * n_chips
+        summary["hlo_flops_global"] = global_flops
+        summary["useful_flops_ratio"] = (
+            summary["model_flops_global"] / global_flops
+            if global_flops else 0.0)
+        rec.update(status="OK", kind=kind, chips=n_chips,
+                   params=_tree_param_count(params_tree),
+                   active_params=n_active, tokens_per_step=tokens,
+                   lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                   roofline=summary)
+        if verbose:
+            print(f"  cost_analysis: flops/device={summary['hlo_flops_per_device']:.3e} "
+                  f"bytes/device={summary['hlo_bytes_per_device']:.3e} "
+                  f"coll/device={summary['collective_bytes_per_device']:.3e}")
+            print(f"  roofline: compute={summary['compute_s']*1e3:.2f}ms "
+                  f"memory={summary['memory_s']*1e3:.2f}ms "
+                  f"collective={summary['collective_s']*1e3:.2f}ms "
+                  f"dominant={summary['dominant']} "
+                  f"useful_ratio={summary['useful_flops_ratio']:.3f}")
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    finally:
+        configure(None)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    out.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=("single", "multi",
+                                                         "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    archs = configs.ARCH_NAMES if (args.all or not args.arch) \
+        else (args.arch,)
+    shapes = tuple(configs.SHAPES) if (args.all or not args.shape) \
+        else (args.shape,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    results = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                path = out_dir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    if rec.get("status") in ("OK", "SKIP"):
+                        print(f"[cached] {tag}: {rec['status']}")
+                        results.append(rec)
+                        continue
+                print(f"[run] {tag}")
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_name == "multi",
+                               out_dir)
+                print(f"  -> {rec['status']} ({time.time()-t0:.0f}s)"
+                      + (f" {rec.get('error','')}"
+                         if rec["status"] == "FAIL" else ""))
+                results.append(rec)
+
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n=== dry-run: {n_ok} OK, {n_skip} SKIP (documented), "
+          f"{n_fail} FAIL of {len(results)} cells ===")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

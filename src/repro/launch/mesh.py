@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count before any jax init; the
+smoke tests see the single real CPU device).
+
+Production topology (TPU v5e target):
+  * single pod: (data=16, model=16) = 256 chips,
+  * multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+    the DCN-connected dimension — only data parallelism (gradient
+    all-reduce) crosses it, never tensor/expert collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI-style tests (8 forced host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,95 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# Must precede any jax import (device count locks at first init).
+
+"""Perf-iteration tool (§Perf of EXPERIMENTS.md).
+
+Lowers one (arch x shape) cell exactly like the dry-run, then prints the
+trip-aware profile: top per-op byte contributors, collective breakdown,
+and the three roofline terms. Variants are expressed as sharding-rule
+overrides / config patches and tagged, so each hypothesis->change->measure
+iteration is one invocation:
+
+  python -m repro.launch.perf --arch rwkv6-1.6b --shape train_4k
+  python -m repro.launch.perf --arch olmoe-1b-7b --shape train_4k \
+      --rules '{"expert_capacity": "data"}' --tag cap_sharded
+  python -m repro.launch.perf --arch gemma3-12b --shape train_4k \
+      --cfg '{"remat": false}' --tag noremat
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch import dryrun, hlo_analysis
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--rules", default=None, help="JSON rule overrides")
+    ap.add_argument("--cfg", default=None, help="JSON ModelConfig patch")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--topk", type=int, default=20)
+    ap.add_argument("--dump-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = json.loads(args.rules) if args.rules else None
+    cfg_patch = json.loads(args.cfg) if args.cfg else None
+
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    rec = dryrun.run_cell(args.arch, args.shape, args.multi,
+                          out_dir=PERF_DIR, verbose=True,
+                          rule_overrides=rules, cfg_patch=cfg_patch,
+                          tag=f"perf_{args.tag}")
+    if rec["status"] != "OK":
+        print(json.dumps(rec, indent=2, default=str)[:3000])
+        return 1
+
+    # re-lower once more for the profile (run_cell doesn't keep the text)
+    import dataclasses as dc
+
+    from repro import configs
+    from repro.launch import mesh as mesh_lib
+    from repro.sharding import configure
+
+    cfg = configs.get_config(args.arch)
+    if cfg_patch:
+        cfg = dc.replace(cfg, **cfg_patch)
+    shape = configs.SHAPES[args.shape]
+    mesh = mesh_lib.make_production_mesh(multi_pod=args.multi)
+    configure(mesh, rules)
+    try:
+        jfn, cell_args, _, _ = dryrun.build_cell(cfg, shape, mesh)
+        with mesh:
+            hlo = jfn.lower(*cell_args).compile().as_text()
+    finally:
+        configure(None)
+
+    if args.dump_hlo:
+        p = PERF_DIR / f"{args.arch}__{args.shape}__{args.tag}.hlo"
+        p.write_text(hlo)
+        print(f"[perf] hlo dumped to {p} ({len(hlo)/1e6:.1f} MB)")
+
+    print(f"\n=== top-{args.topk} byte contributors (trip-multiplied) ===")
+    for desc, b in hlo_analysis.top_bytes(hlo, args.topk):
+        print(f"  {b/1e9:10.2f} GB  {desc}")
+
+    r = rec["roofline"]
+    print("\n=== roofline ===")
+    print(f"  compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
+          f"collective={r['collective_s']*1e3:.1f}ms dominant={r['dominant']}")
+    print(f"  collectives: " + ", ".join(
+        f"{k}={v/1e9:.1f}GB" for k, v in
+        sorted(r["collective_breakdown"].items(), key=lambda x: -x[1])))
+    print(f"  useful_flops_ratio={r['useful_flops_ratio']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

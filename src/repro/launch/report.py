@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted((ROOT / "experiments" / "dryrun").glob(
+            f"*__{mesh}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def dryrun_table(mesh: str) -> str:
+    out = ["| arch | shape | status | params | GB/dev temp | GFLOP/dev | "
+           "GB/dev mem | GB/dev coll |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | "
+                       f"— | — |")
+            continue
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 1e9 \
+            if isinstance(mem, dict) else 0
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK | "
+            f"{r['params']/1e9:.2f}B | {temp:.1f} | "
+            f"{rf['hlo_flops_per_device']/1e9:.0f} | "
+            f"{rf['hlo_bytes_per_device']/1e9:.0f} | "
+            f"{rf['collective_bytes_per_device']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str) -> str:
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+           "| dominant | bound (ms) | compute/bound | useful FLOPs |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] != "OK":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.1f} | "
+            f"{rf['memory_s']*1e3:.1f} | {rf['collective_s']*1e3:.1f} | "
+            f"{rf['dominant']} | {rf['step_lower_bound_s']*1e3:.1f} | "
+            f"{rf['compute_fraction_of_bound']:.3f} | "
+            f"{rf['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--what", default="both",
+                    choices=("dryrun", "roofline", "both"))
+    args = ap.parse_args()
+    if args.what in ("dryrun", "both"):
+        print(dryrun_table(args.mesh))
+        print()
+    if args.what in ("roofline", "both"):
+        print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step on the
+TPU v5e target:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_link_bw
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* flops
+and bytes, so dividing by per-chip peaks is identical to the brief's
+global/(chips x peak) formulation. collective_bytes is not in
+cost_analysis — we parse the post-optimization HLO and sum the result-
+shape bytes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute (start variants counted once, done variants skipped).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result types of a collective op line:
+#   %x = f32[8,128]{1,0} all-gather(...)
+#   %y = (f32[4,2]{...}, f32[4,2]{...}) all-reduce-start(...)
+_LINE_RE = re.compile(
+    r"=\s*(\(?)([a-z0-9\[\],{}/ _]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
+                       r"u64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum result-shape bytes of collective ops in post-optimization HLO."""
+    per_kind: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).lower()
+        # the result type precedes the op name on the line
+        head = line.split("=", 1)
+        if len(head) < 2:
+            continue
+        type_part = head[1].split(kind)[0]
+        b = _shape_bytes(type_part)
+        per_kind[kind] = per_kind.get(kind, 0) + b
+    return sum(per_kind.values()), per_kind
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float) -> Dict[str, float]:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    collective = coll_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dominant.replace("_s", "")
+    terms["step_lower_bound_s"] = bound
+    # roofline fraction: how much of the bound is useful MXU time
+    terms["compute_fraction_of_bound"] = compute / bound if bound else 0.0
+    return terms
+
+
+def model_flops(n_active_params: int, tokens: int,
+                kind: str = "train") -> float:
+    """6*N*D for train (fwd+bwd); 2*N*D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def summarize(hlo_text: str, n_active_params: int, tokens: int,
+              kind: str) -> Dict:
+    """Trip-count-aware roofline summary (launch.hlo_analysis).
+
+    XLA's cost_analysis() counts while bodies once; with scan-over-periods
+    that undercounts by ~depth, so the three terms here come from the
+    trip-multiplied HLO walk instead.
+    """
+    from repro.launch import hlo_analysis
+    mc = hlo_analysis.analyze(hlo_text)
+    terms = roofline_terms(mc.flops, mc.bytes, mc.collective_bytes)
+    mf = model_flops(n_active_params, tokens, kind)
+    out = {
+        "hlo_flops_per_device": mc.flops,
+        "hlo_bytes_per_device": mc.bytes,
+        "collective_bytes_per_device": mc.collective_bytes,
+        "collective_breakdown": {k: float(v)
+                                 for k, v in mc.collectives.items()},
+        "while_trip_counts": mc.while_trips[:40],
+        "model_flops_global": mf,
+        **terms,
+    }
+    return out

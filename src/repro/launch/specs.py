@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+`input_specs(cfg, shape)` returns the batch for a (arch x shape) cell:
+  * train_*    — {"tokens"|"embeds", "labels"} at (global_batch, seq)
+  * prefill_*  — {"tokens"|"embeds"}
+  * decode_* / long_* — one new token + the full-context cache specs
+
+Modality frontends are stubs per the brief: [vlm]/[audio] archs receive
+precomputed patch/frame embeddings (B, S, d_model) instead of token ids.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _tokens_or_embeds(cfg: ModelConfig, b: int, s: int) -> Dict[str, Any]:
+    if cfg.input_mode == "embeds":
+        return {"embeds": SDS((b, s, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = _tokens_or_embeds(cfg, b, s)
+        batch["labels"] = SDS((b, s), jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        return {"batch": _tokens_or_embeds(cfg, b, s)}
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: T.init_caches(cfg, b, s))
+        return {"caches": caches,
+                "inp": _tokens_or_embeds(cfg, b, 1),
+                "pos": SDS((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return jax.eval_shape(lambda k: T.init_model(k, cfg), key)
+
+
+def train_state_specs(cfg: ModelConfig) -> Any:
+    from repro.train.step import init_train_state
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return jax.eval_shape(lambda k: init_train_state(k, cfg), key)

@@ -1,0 +1,309 @@
+"""GQA/MQA attention with blockwise online-softmax (flash-style) and
+sliding-window + ring-buffer KV caches.
+
+The blockwise pass is the attention instance of the paper's decomposition
+(DESIGN.md §3.1): per-block score/AV work is dependency-free (MXU), while
+the softmax normalizer is a tiny serial carry (running max + denominator)
+— the same fission-plus-carry structure as the chain kernel. It is also
+what keeps 32k prefill from materializing S^2 score matrices.
+
+Ring-buffer local caches (gemma3 sliding-window layers) exploit that online
+softmax is order-invariant: cache slots carry absolute positions, so a
+rotating buffer needs no reordering before attending.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard_act
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    bias: bool = False          # qwen-style QKV bias
+    qk_norm: bool = False       # gemma3-style per-head RMS on q/k
+    rope_theta: float = 1e4
+    window: int = 0             # 0 = global; >0 sliding window
+    kv_block: int = 512
+
+
+def init_attention(key, cfg: AttnConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, g, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": L.he_init(kq, (d, h * hd), d),
+        "wk": L.he_init(kk, (d, g * hd), d),
+        "wv": L.he_init(kv, (d, g * hd), d),
+        "wo": L.he_init(ko, (h * hd, d), h * hd),
+    }
+    if cfg.bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((g * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((g * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd)
+        p["k_norm"] = L.init_rmsnorm(hd)
+    return p
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, q_pos: Array,
+                        kv_pos: Array, window: int = 0,
+                        kv_block: int = 512) -> Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd);  k/v: (B, Skv, KV, hd);  q_pos: (B, Sq) absolute
+    positions; kv_pos: (B, Skv) absolute slot positions (-1 = empty slot).
+    Causal + optional sliding window masking by *absolute position*, which
+    makes ring buffers and padded caches free.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv_heads = k.shape[1], k.shape[2]
+    grp = h // kv_heads
+    scale = hd ** -0.5
+
+    blk = min(kv_block, skv)
+    pad = (-skv) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nb = k.shape[1] // blk
+
+    qr = (q.reshape(b, sq, kv_heads, grp, hd)
+           .transpose(0, 2, 3, 1, 4)                    # (B, KV, G, Sq, hd)
+           .astype(jnp.float32) * scale)
+    kb = k.reshape(b, nb, blk, kv_heads, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nb, blk, kv_heads, hd).transpose(1, 0, 3, 2, 4)
+    pb = kv_pos.reshape(b, nb, blk).transpose(1, 0, 2)  # (nb, B, blk)
+
+    m0 = jnp.full((b, kv_heads, grp, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_heads, grp, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv_heads, grp, sq, hd), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, posb = xs                           # (B,KV,blk,hd), (B,blk)
+        # bf16 MXU inputs with fp32 accumulation (flash-attention numerics;
+        # §Perf MoE-cell iteration 2 — halves the dominant score traffic)
+        s = jnp.einsum("bkgsh,bkth->bkgst",
+                       qr.astype(jnp.bfloat16), kblk.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)  # (B,KV,G,Sq,blk)
+        ok = (posb[:, None, None, None, :] <=
+              q_pos[:, None, None, :, None])            # causal
+        ok &= posb[:, None, None, None, :] >= 0         # empty slots
+        if window > 0:
+            ok &= (q_pos[:, None, None, :, None] -
+                   posb[:, None, None, None, :]) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # clamp: rows with nothing visible yet keep m at NEG_INF
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(ok, p, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)          # denominator in fp32
+        # p stays fp32: casting it bf16 adds a same-size tensor without
+        # removing one (measured — §Perf gemma3 iteration 2b), and fp32 p
+        # keeps block-size invariance exact.
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,bkth->bkgsh", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q: Array, k: Array, v: Array, q_pos: Array,
+                     window: int) -> Array:
+    """Exact sliding-window attention via block-banding (§Perf gemma3).
+
+    For a causal window w, a query in sequence-block i (block size w) can
+    only see keys in blocks i-1 and i. Attending to that 2w-key band is
+    exact — and unlike the full blockwise path it neither gathers the
+    whole KV sequence across the mesh nor scores masked-out blocks:
+    score bytes drop Skv/(2w)-fold and the KV all-gather becomes a
+    one-block halo exchange (collective-permute).
+
+    q: (B, S, H, hd); k/v: (B, S, KV, hd); q_pos: (B, S) absolute
+    positions (consecutive per row). S must be a multiple of w after
+    padding (handled here).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    grp = h // kvh
+    scale = hd ** -0.5
+    wb = window
+
+    pad = (-s) % wb
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    sp = s + pad
+    nb = sp // wb
+
+    qb = q.reshape(b, nb, wb, h, hd)
+    kb = k.reshape(b, nb, wb, kvh, hd)
+    vb = v.reshape(b, nb, wb, kvh, hd)
+    pb = q_pos.reshape(b, nb, wb)
+
+    # band = previous block ++ own block (2w keys)
+    shift = lambda z: jnp.concatenate(
+        [jnp.zeros_like(z[:, :1]), z[:, :-1]], axis=1)
+    k_band = jnp.concatenate([shift(kb), kb], axis=2)   # (b, nb, 2w, kv, hd)
+    v_band = jnp.concatenate([shift(vb), vb], axis=2)
+    p_band = jnp.concatenate(
+        [jnp.full_like(pb[:, :1], -1), pb[:, :-1]], axis=1)
+    p_band = jnp.concatenate([p_band, pb], axis=2)      # (b, nb, 2w)
+
+    qg = (qb.reshape(b, nb, wb, kvh, grp, hd).astype(jnp.bfloat16))
+    sc = jnp.einsum("bnqkgh,bntkh->bnkgqt", qg,
+                    k_band.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32) * scale
+    ok = (p_band[:, :, None, None, None, :] <=
+          pb[:, :, None, None, :, None])                # causal
+    ok &= p_band[:, :, None, None, None, :] >= 0        # padding / block 0
+    ok &= (pb[:, :, None, None, :, None] -
+           p_band[:, :, None, None, None, :]) < window
+    sc = jnp.where(ok, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(ok, p, 0.0)
+    out = jnp.einsum("bnkgqt,bntkh->bnqkgh", p,
+                     v_band.astype(jnp.float32))
+    out = out.reshape(b, sp, h, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    """Static-shape decode cache. `pos`: absolute position per slot
+    (-1 empty). Local layers allocate `window` slots (ring buffer)."""
+    k: Array      # (B, S, KV, hd)
+    v: Array      # (B, S, KV, hd)
+    pos: Array    # (S,) int32
+
+
+def make_cache(batch: int, slots: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
+        pos=jnp.full((slots,), -1, jnp.int32))
+
+
+def _shard_cache(c: KVCache) -> KVCache:
+    return KVCache(
+        k=shard_act(c.k, "cache_batch", "cache_seq", "cache_kv_heads",
+                    "cache_head_dim"),
+        v=shard_act(c.v, "cache_batch", "cache_seq", "cache_kv_heads",
+                    "cache_head_dim"),
+        pos=c.pos)
+
+
+def cache_update(cache: KVCache, k_new: Array, v_new: Array,
+                 position: Array) -> KVCache:
+    """Insert one step (Sq=1). Ring addressing: slot = pos % slots."""
+    slots = cache.k.shape[1]
+    slot = position % slots
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(
+        cache.pos, position[None].astype(jnp.int32), (slot,))
+    return _shard_cache(KVCache(k, v, pos))
+
+
+def build_cache(k: Array, v: Array, positions: Array, slots: int) -> KVCache:
+    """Prefill-path cache construction: keep the last `slots` positions.
+
+    positions must be consecutive per row (prefill), so pos % slots is a
+    bijection onto the ring and a plain scatter is exact.
+    """
+    b, s = k.shape[0], k.shape[1]
+    pos_row = positions[0]
+    if s >= slots:
+        k_w, v_w = k[:, -slots:], v[:, -slots:]
+        pos_w = pos_row[-slots:]
+    else:
+        pad = slots - s
+        k_w = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_w = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_w = jnp.concatenate(
+            [pos_row, jnp.full((pad,), -1, jnp.int32)])
+    slot = jnp.where(pos_w >= 0, pos_w % slots, jnp.arange(slots) % slots)
+    kc = jnp.zeros_like(k_w).at[:, slot].set(k_w)
+    vc = jnp.zeros_like(v_w).at[:, slot].set(v_w)
+    pc = jnp.full((slots,), -1, jnp.int32).at[slot].set(
+        pos_w.astype(jnp.int32))
+    return _shard_cache(KVCache(kc.astype(jnp.bfloat16),
+                                vc.astype(jnp.bfloat16), pc))
+
+
+def attention(params, cfg: AttnConfig, x: Array, positions: Array,
+              cache: Optional[KVCache] = None,
+              position_scalar: Optional[Array] = None,
+              make_cache_slots: Optional[int] = None):
+    """Self-attention (cache=None) or single-step decode (cache given).
+
+    x: (B, S, D); positions: (B, S) absolute. For decode S == 1 and
+    position_scalar is the shared scalar position. `make_cache_slots`
+    (prefill) builds and returns a decode cache of that many slots.
+    Returns (out (B, S, D), new_cache_or_None).
+    """
+    b, s, d = x.shape
+    h, g, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, g, hd)
+    v = v.reshape(b, s, g, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+        k = L.rmsnorm(params["k_norm"], k)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, "batch", "seq", "heads", "head_dim")
+    k = shard_act(k, "batch", "seq", "heads", "head_dim")
+    v = shard_act(v, "batch", "seq", "heads", "head_dim")
+
+    if cache is None:
+        if cfg.window > 0 and s > cfg.window:
+            # block-banded exact sliding window (§Perf gemma3: avoids the
+            # full-sequence KV gather + masked-block scores)
+            out = banded_attention(q, k, v, positions, cfg.window)
+        else:
+            out = blockwise_attention(q, k, v, positions, positions,
+                                      window=cfg.window,
+                                      kv_block=cfg.kv_block)
+        new_cache = (build_cache(k, v, positions, make_cache_slots)
+                     if make_cache_slots else None)
+    else:
+        new_cache = cache_update(cache, k, v, position_scalar)
+        kv_pos = jnp.broadcast_to(new_cache.pos[None, :],
+                                  (b, new_cache.pos.shape[0]))
+        out = blockwise_attention(q, new_cache.k.astype(dt),
+                                  new_cache.v.astype(dt), positions, kv_pos,
+                                  window=cfg.window, kv_block=cfg.kv_block)
+    out = shard_act(out, "batch", "seq", "heads", "head_dim")
+    out = out.reshape(b, s, h * hd) @ params["wo"].astype(dt)
+    return out, new_cache

@@ -1,0 +1,117 @@
+"""Dense building blocks: norms, RoPE, MLPs, embeddings.
+
+Pure-function style: `init_*(key, ...) -> params dict`, `apply(params, x)`.
+Parameters are stored fp32 (master copy); compute casts to the config's
+activation dtype at use. No framework dependencies.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return truncated_normal(key, shape, (2.0 / max(fan_in, 1)) ** 0.5, dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def init_groupnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def groupnorm(params, x: Array, groups: int, eps: float = 1e-5) -> Array:
+    """GroupNorm over the last dim (RWKV6 per-head wkv normalization)."""
+    dt = x.dtype
+    d = x.shape[-1]
+    xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (groups, d // groups))
+    mean = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(x.shape)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# gated MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": he_init(k1, (d_model, d_ff), d_model),
+        "w_up": he_init(k2, (d_model, d_ff), d_model),
+        "w_down": he_init(k3, (d_ff, d_model), d_ff),
+    }
+
+
+def mlp(params, x: Array, act: str = "swiglu") -> Array:
+    dt = x.dtype
+    wg = params["w_gate"].astype(dt)
+    wu = params["w_up"].astype(dt)
+    wd = params["w_down"].astype(dt)
+    g = x @ wg
+    g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+    return (g * (x @ wu)) @ wd
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int):
+    return {"table": truncated_normal(key, (vocab, d_model), 0.02)}
+
+
+def embed(params, tokens: Array, dtype) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def logits(params, x: Array, tied_table: Optional[Array] = None) -> Array:
+    """Final projection; fp32 accumulation for the softmax."""
+    table = tied_table if tied_table is not None else params["table"]
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def init_unembed(key, vocab: int, d_model: int):
+    return {"table": truncated_normal(key, (vocab, d_model), 0.02)}

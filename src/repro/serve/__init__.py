@@ -1,0 +1,5 @@
+from repro.serve.engine import (cache_shardings, make_decode_step,
+                                make_prefill_step, sample_token)
+
+__all__ = ["cache_shardings", "make_decode_step", "make_prefill_step",
+           "sample_token"]

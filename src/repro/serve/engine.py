@@ -1,0 +1,104 @@
+"""Serving steps: prefill and single-token decode over static-shape caches.
+
+Decode is the dependency-bound 1-D recurrence of serving — each step
+consumes the previous step's cache/state (the paper's global-counter
+pattern at request scale). Attention layers carry KV ring buffers; RWKV/
+Mamba layers carry O(1) recurrent state, making decode cost flat in
+context length (the long_500k story).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.sharding import named_sharding
+
+
+def sample_token(logits: jnp.ndarray, key=None,
+                 temperature: float = 0.0) -> jnp.ndarray:
+    """logits: (B, 1, V) -> (B,) int32. temperature 0 = greedy."""
+    lg = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+
+
+def make_prefill_step(cfg: ModelConfig, cache_slots: int):
+    """prefill(params, tokens|embeds) -> (last_logits, caches)."""
+
+    def prefill(params, batch: Dict[str, jnp.ndarray]):
+        logits, _, caches = T.apply_model(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), mode="prefill",
+            cache_slots=cache_slots)
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, temperature: float = 0.0):
+    """decode(params, caches, inp, pos[, key]) -> (next_tok, logits, caches).
+
+    inp: {"tokens": (B,1)} or {"embeds": (B,1,D)}; pos: int32 scalar —
+    the absolute position of the incoming token.
+    """
+
+    def decode(params, caches, inp: Dict[str, jnp.ndarray],
+               pos: jnp.ndarray, key: Optional[jnp.ndarray] = None):
+        logits, _, caches = T.apply_model(
+            params, cfg, tokens=inp.get("tokens"),
+            embeds=inp.get("embeds"), mode="decode", caches=caches,
+            pos_scalar=pos)
+        nxt = sample_token(logits, key, temperature)
+        return nxt, logits, caches
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# cache shardings (mirror transformer.init_caches structure)
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cfg: ModelConfig, cache_shapes: Any):
+    """NamedShardings for a cache pytree (from its eval_shape shapes).
+
+    Mirrors the structure built by transformer.init_caches / emitted by the
+    prefill scan: dict p<i> -> per-mixer state, every leaf stacked over
+    periods (leading axis replicated).
+    """
+    from repro.models.attention import KVCache  # local: avoid import cycle
+
+    def ns(leaf, *names):
+        return named_sharding(leaf.shape, (None,) + tuple(names))
+
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = cache_shapes[f"p{i}"]
+        entry = {}
+        if spec.mixer == "attn":
+            kv = c["attn"]
+            entry["attn"] = KVCache(
+                k=ns(kv.k, "cache_batch", "cache_seq", "cache_kv_heads",
+                     "cache_head_dim"),
+                v=ns(kv.v, "cache_batch", "cache_seq", "cache_kv_heads",
+                     "cache_head_dim"),
+                pos=ns(kv.pos, None))
+        elif spec.mixer == "rwkv":
+            st = c["rwkv"]
+            entry["rwkv"] = {
+                "s": ns(st["s"], "cache_batch", "ssm_heads", None, None),
+                "x_prev": ns(st["x_prev"], "cache_batch", None)}
+            if "ffn_x" in c:
+                entry["ffn_x"] = ns(c["ffn_x"], "cache_batch", None)
+        elif spec.mixer == "mamba":
+            st = c["mamba"]
+            entry["mamba"] = {
+                "conv": ns(st["conv"], "cache_batch", None, "ssm_channels"),
+                "h": ns(st["h"], "cache_batch", "ssm_channels", "ssm_state")}
+        out[f"p{i}"] = entry
+    return out

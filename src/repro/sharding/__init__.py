@@ -1,0 +1,6 @@
+from repro.sharding.partition import (BASELINE_RULES, configure,
+                                      current_mesh, current_rules, logical,
+                                      make_param_shardings, named_sharding,
+                                      param_spec, resolve_axes,
+                                      rules_overridden, shard_act,
+                                      spec)  # noqa: F401

@@ -1,0 +1,229 @@
+"""Logical-axis sharding rules -> PartitionSpecs (MaxText-style).
+
+Model code never names mesh axes; it annotates arrays with *logical* axis
+names ("batch", "seq", "experts", ...). A rule table maps logical names to
+mesh axes, filtered against the active mesh so the same model code runs on
+(data, model), (pod, data, model), or a single device (all rules drop out).
+
+The rule table is the primary hillclimb lever (EXPERIMENTS.md §Perf):
+overriding e.g. {"seq": None, "heads": "model"} flips the whole network
+from sequence-parallel to megatron tensor-parallel without touching model
+code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Baseline: FSDP(+pod) over 'data', sequence parallelism over 'model',
+# experts / SSM channels / cache head_dim over 'model'. DESIGN.md §3.2.
+BASELINE_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": "model",          # activation sequence axis (attention/MLP)
+    "d_model": None,
+    "heads": None,
+    "head_dim": None,
+    "ffn": None,
+    "vocab": None,           # logits vocab axis
+    "kv_seq": None,
+    # SSM blocks reshard: channels/heads parallel, sequence replicated
+    "ssm_seq": None,
+    "ssm_heads": "model",
+    "ssm_fold": ("pod", "data", "model"),   # folded (batch*heads) axis
+    "ssm_channels": "model",
+    "ssm_state": None,
+    # MoE
+    "experts": "model",
+    "expert_capacity": None,
+    # KV cache (decode)
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_kv_heads": None,
+    "cache_head_dim": "model",
+    # parameter sharding (by position for 2D+ params)
+    "param_dim0": "data",
+    "param_dim1": "model",
+    "param_experts": "model",
+}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Rules = dict(BASELINE_RULES)
+
+
+_STATE = _State()
+
+
+def configure(mesh: Optional[Mesh], overrides: Optional[Rules] = None):
+    """Install the active mesh + rule overrides (call from launchers)."""
+    _STATE.mesh = mesh
+    _STATE.rules = dict(BASELINE_RULES)
+    if overrides:
+        _STATE.rules.update(overrides)
+
+
+@contextlib.contextmanager
+def rules_overridden(overrides: Rules):
+    old_rules, old_mesh = dict(_STATE.rules), _STATE.mesh
+    _STATE.rules.update(overrides)
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = old_rules, old_mesh
+
+
+def current_rules() -> Rules:
+    return dict(_STATE.rules)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def _mesh_axes() -> Tuple[str, ...]:
+    if _STATE.mesh is not None:
+        return tuple(_STATE.mesh.axis_names)
+    return ()
+
+
+def _resolve(name: Optional[str]):
+    """logical name -> mesh axis (or tuple), dropping absent mesh axes."""
+    if name is None:
+        return None
+    val = _STATE.rules.get(name, None)
+    if val is None:
+        return None
+    axes = _mesh_axes()
+    if isinstance(val, str):
+        return val if val in axes else None
+    got = tuple(a for a in val if a in axes)
+    return got if got else None
+
+
+def logical(*names: Optional[str]) -> P:
+    """PartitionSpec from logical axis names (None = replicated dim)."""
+    return P(*[_resolve(n) for n in names])
+
+
+def spec(*names: Optional[str]) -> P:
+    return logical(*names)
+
+
+def resolve_axes(shape: Tuple[int, ...], names: Sequence[Optional[str]]) -> P:
+    """Logical names -> PartitionSpec with divisibility guard.
+
+    Dims the resolved mesh axes don't divide fall back to replicated (e.g.
+    batch=1 long-context decode can't batch-shard; the rule silently drops;
+    tuples degrade to the single largest dividing axis).
+    """
+    assert len(shape) == len(names), (shape, names)
+    mesh = _STATE.mesh
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else {})
+    entries = []
+    for dim, n in zip(shape, names):
+        e = _resolve(n)
+        if e is not None:
+            axes = (e,) if isinstance(e, str) else tuple(e)
+            ax_size = 1
+            for a in axes:
+                ax_size *= sizes.get(a, 1)
+            if dim % max(ax_size, 1):
+                # try partial: single axis from a tuple
+                e = None
+                for a in axes:
+                    if dim % sizes.get(a, 1) == 0 and sizes.get(a, 1) > 1:
+                        e = a
+                        break
+        entries.append(e)
+    return P(*_dedupe(entries))
+
+
+def _dedupe(entries):
+    """A mesh axis may appear in at most one positional dim; keep first."""
+    seen = set()
+    out = []
+    for e in entries:
+        axes = () if e is None else ((e,) if isinstance(e, str) else tuple(e))
+        if any(a in seen for a in axes):
+            kept = tuple(a for a in axes if a not in seen)
+            e = (kept[0] if len(kept) == 1 else (kept or None)) \
+                if kept else None
+        axes = () if e is None else ((e,) if isinstance(e, str) else tuple(e))
+        seen.update(axes)
+        out.append(e)
+    return out
+
+
+def named_sharding(shape: Tuple[int, ...],
+                   names: Sequence[Optional[str]]) -> NamedSharding:
+    """NamedSharding for an input/output array, by logical names."""
+    assert _STATE.mesh is not None, "configure(mesh) first"
+    return NamedSharding(_STATE.mesh, resolve_axes(shape, names))
+
+
+def shard_act(x, *names: Optional[str]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    if _STATE.mesh is None or _STATE.mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_STATE.mesh, resolve_axes(x.shape, names)))
+
+
+def param_spec(path: str, shape: Tuple[int, ...],
+               stacked: bool = False) -> P:
+    """Positional parameter sharding (ZeRO-3-ish).
+
+    2D+ params: dim0 -> param_dim0 rule, dim1 -> param_dim1; expert-stacked
+    params put 'experts' on their leading expert dim. 1D params replicate.
+    `stacked`: a leading layer-period axis (from scan-over-layers) is
+    replicated and the positional rules shift right by one.
+    """
+    lead: list = [None] if stacked else []
+    dims = shape[len(lead):]
+    if "expert" in path and len(dims) >= 3:
+        # experts take the 'model' axis; dims shard over 'data' only
+        names = ["param_experts", "param_dim0", None]
+        names += [None] * (len(dims) - 3)
+    elif len(dims) >= 2:
+        names = ["param_dim0", "param_dim1"] + [None] * (len(dims) - 2)
+    else:
+        names = [None] * len(dims)
+    entries = [None] * len(lead) + [_resolve(n) for n in names]
+    # never shard a dim the mesh axis doesn't divide
+    mesh = _STATE.mesh
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        full = [1] * len(lead) + list(dims)
+        for i, e in enumerate(entries):
+            if e is None:
+                continue
+            axes = (e,) if isinstance(e, str) else tuple(e)
+            ax_size = 1
+            for a in axes:
+                ax_size *= sizes.get(a, 1)
+            if full[i] % max(ax_size, 1):
+                entries[i] = None
+    return P(*_dedupe(entries))
+
+
+def make_param_shardings(params, mesh: Mesh, stacked_paths=()):
+    """NamedShardings for a parameter pytree (path-aware)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for keypath, leaf in flat:
+        path = "/".join(str(k) for k in keypath)
+        stacked = any(sp in path for sp in stacked_paths) \
+            if stacked_paths else "blocks" in path
+        out.append(NamedSharding(
+            mesh, param_spec(path, leaf.shape, stacked=stacked)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,10 @@
+from repro.train.step import (TrainState, init_train_state, make_train_step,
+                              batch_shardings, state_shardings)
+from repro.train.checkpoint import Checkpointer
+from repro.train.loop import (FailureInjector, LoopConfig, StragglerWatchdog,
+                              TrainResult, train)
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "batch_shardings", "state_shardings", "Checkpointer",
+           "FailureInjector", "LoopConfig", "StragglerWatchdog",
+           "TrainResult", "train"]

@@ -1,0 +1,205 @@
+"""Fault-tolerant training loop: checkpoint/restart, stragglers, elasticity.
+
+The loop composes the pure train step (train.step) with the runtime
+concerns a 1000-node job actually has:
+
+  * **checkpoint/restart** — async step-atomic snapshots every
+    ``ckpt_every`` steps (train.checkpoint); on start the loop resumes
+    from the newest complete checkpoint automatically.
+  * **straggler mitigation** — a wall-clock watchdog keeps a robust EMA of
+    step time; steps slower than ``straggler_factor``× the EMA are counted
+    and reported (on real pods this signal feeds the re-scheduler; here it
+    drives the `on_straggler` hook + tests inject delays to exercise it).
+  * **failure handling / elasticity** — any exception from the step
+    triggers ``elastic_restart``: rebuild a (possibly smaller) mesh from
+    the surviving device count, re-jit against it, restore the last
+    checkpoint *onto the new mesh* (checkpoints are mesh-agnostic), and
+    continue. ``FailureInjector`` simulates device loss for tests.
+  * **data determinism** — batches are pure functions of the step index
+    (data.lm), so restart/elastic paths replay the exact stream with no
+    cursor state.
+
+The loop is deliberately host-driven and synchronous-dispatch: one jitted
+step per iteration, metrics fetched every ``log_every`` (fetching forces a
+sync; keeping it sparse preserves dispatch pipelining).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import step as step_lib
+from repro.train.checkpoint import Checkpointer
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_ckpts: int = 3
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 5      # steps before the EMA is trusted
+    ema_beta: float = 0.9
+    max_restarts: int = 3
+
+
+class StragglerWatchdog:
+    """Robust step-time EMA + slow-step detector (the mitigation signal)."""
+
+    def __init__(self, cfg: LoopConfig):
+        self.cfg = cfg
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.events: List[Dict[str, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n == 1:
+            return False        # first step is compile time; never seed EMA
+        if self.ema is None:
+            self.ema = dt
+            return False
+        slow = (self.n > self.cfg.straggler_warmup
+                and dt > self.cfg.straggler_factor * self.ema)
+        if slow:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        else:
+            # stragglers are excluded from the EMA (robustness)
+            b = self.cfg.ema_beta
+            self.ema = b * self.ema + (1 - b) * dt
+        return slow
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples.
+
+    ``fail_at``: steps at which the injected exception fires (once each).
+    """
+
+    def __init__(self, fail_at=(), exc_factory=None):
+        self.pending = set(fail_at)
+        self.exc_factory = exc_factory or (
+            lambda s: RuntimeError(f"injected device failure at step {s}"))
+
+    def maybe_fail(self, step: int):
+        if step in self.pending:
+            self.pending.discard(step)
+            raise self.exc_factory(step)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_step: int
+    metrics_history: List[Dict[str, float]]
+    straggler_events: List[Dict[str, float]]
+    restarts: int
+    losses: List[float]
+
+
+def _jit_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
+              state_shapes, compress: bool):
+    fn = step_lib.make_train_step(cfg, opt_cfg, compress=compress)
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=(0,))
+    state_sh = step_lib.state_shardings(state_shapes, mesh)
+    return jax.jit(fn, in_shardings=(state_sh, None),
+                   out_shardings=(state_sh, None), donate_argnums=(0,))
+
+
+def train(cfg: ModelConfig,
+          batch_fn: Callable[[int], Dict[str, Any]],
+          loop_cfg: LoopConfig = LoopConfig(),
+          opt_cfg: AdamWConfig = AdamWConfig(),
+          ckpt_dir: Optional[str] = None,
+          mesh=None,
+          seed: int = 0,
+          compress: bool = False,
+          failure_injector: Optional[FailureInjector] = None,
+          make_mesh_after_failure: Optional[Callable[[int], Any]] = None,
+          on_straggler: Optional[Callable[[int, float], None]] = None,
+          verbose: bool = True) -> TrainResult:
+    """Run the loop; returns the metric history (losses fetched to host)."""
+    ckpt = Checkpointer(ckpt_dir, keep=loop_cfg.keep_ckpts) \
+        if ckpt_dir else None
+
+    key = jax.random.PRNGKey(seed)
+    state = step_lib.init_train_state(key, cfg, compress=compress)
+    state_shapes = jax.eval_shape(lambda: state)
+    step_fn = _jit_step(cfg, opt_cfg, mesh, state_shapes, compress)
+
+    start = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        shardings = (step_lib.state_shardings(state_shapes, mesh)
+                     if mesh is not None else None)
+        state, extra = ckpt.restore(state_shapes, shardings=shardings)
+        start = int(extra.get("next_step", ckpt.latest_step()))
+        if verbose:
+            print(f"[loop] resumed from checkpoint at step {start}")
+
+    watchdog = StragglerWatchdog(loop_cfg)
+    history: List[Dict[str, float]] = []
+    losses: List[float] = []
+    restarts = 0
+    i = start
+    while i < loop_cfg.total_steps:
+        t0 = time.time()
+        try:
+            if failure_injector is not None:
+                failure_injector.maybe_fail(i)
+            batch = batch_fn(i)
+            state, metrics = step_fn(state, batch)
+        except Exception as e:  # noqa: BLE001 — any step failure
+            if restarts >= loop_cfg.max_restarts or ckpt is None:
+                raise
+            restarts += 1
+            if verbose:
+                print(f"[loop] step {i} failed ({e}); elastic restart "
+                      f"#{restarts}")
+            if make_mesh_after_failure is not None:
+                mesh = make_mesh_after_failure(restarts)
+            # re-jit against the (new) mesh and restore the newest snapshot
+            step_fn = _jit_step(cfg, opt_cfg, mesh, state_shapes, compress)
+            shardings = (step_lib.state_shardings(state_shapes, mesh)
+                         if mesh is not None else None)
+            if ckpt.latest_step() is not None:
+                state, extra = ckpt.restore(state_shapes,
+                                            shardings=shardings)
+                i = int(extra.get("next_step", ckpt.latest_step()))
+            else:
+                key = jax.random.PRNGKey(seed)
+                state = step_lib.init_train_state(key, cfg,
+                                                  compress=compress)
+                i = 0
+            continue
+
+        if (i + 1) % loop_cfg.log_every == 0 or i + 1 == loop_cfg.total_steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            history.append(m)
+            losses.append(m["loss"])
+            if verbose:
+                print(f"[loop] step {i:5d} loss={m['loss']:.4f} "
+                      f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f}")
+        dt = time.time() - t0
+        if watchdog.observe(i, dt) and on_straggler is not None:
+            on_straggler(i, dt)
+
+        i += 1
+        if ckpt is not None and i % loop_cfg.ckpt_every == 0:
+            ckpt.save_async(i, state, extra={"next_step": i})
+
+    if ckpt is not None:
+        ckpt.save(loop_cfg.total_steps, state,
+                  extra={"next_step": loop_cfg.total_steps})
+    return TrainResult(final_step=i, metrics_history=history,
+                       straggler_events=watchdog.events, restarts=restarts,
+                       losses=losses)

@@ -1,0 +1,130 @@
+"""Training step: loss -> grad -> clip -> (optional compression) -> AdamW.
+
+The step is a pure function over a TrainState pytree; launchers jit it with
+NamedShardings derived from the logical rule table (sharding.partition) and
+donate the state. Gradient int8 compression with error feedback
+(train.grad_compress) is an optional all-reduce transform, off by default
+(a §Perf lever for collective-bound cells).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_update, clip_by_global_norm, \
+    init_opt_state
+from repro.sharding import make_param_shardings, named_sharding
+from repro.train import grad_compress as gc
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jnp.ndarray            # int32 scalar
+    ef: Any = None               # error-feedback residuals (compression)
+
+
+def init_train_state(key, cfg: ModelConfig,
+                     compress: bool = False) -> TrainState:
+    params = T.init_model(key, cfg)
+    ef = jax.tree.map(jnp.zeros_like, params) if compress else None
+    return TrainState(params=params, opt=init_opt_state(params),
+                      step=jnp.zeros((), jnp.int32), ef=ef)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    compress: bool = False, accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens"| "embeds", "labels", optional "mask"}.
+
+    ``accum_steps > 1``: gradient accumulation — the batch is split into
+    microbatches scanned sequentially, dividing peak activation memory by
+    ``accum_steps`` at the cost of serializing the microbatch forwards.
+    This is the production knob for the cells whose dry-run
+    ``temp_size_in_bytes`` exceeds HBM (EXPERIMENTS.md §Dry-run note);
+    results match the single-pass step up to fp reassociation (tested).
+    """
+
+    def loss_for(params, mb):
+        logits, aux, _ = T.apply_model(
+            params, cfg, tokens=mb.get("tokens"),
+            embeds=mb.get("embeds"), mode="train")
+        loss, metrics = T.lm_loss(logits, mb["labels"], mb.get("mask"))
+        return loss + aux, (metrics, aux)
+
+    def grads_single(params, batch):
+        return jax.value_and_grad(loss_for, has_aux=True)(params, batch)
+
+    def grads_accum(params, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+        micro = {k: split(v) for k, v in batch.items()}
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            (l, (mets, aux)), g = grads_single(params, mb)
+            acc = jax.tree.map(
+                lambda a, gi: a + gi.astype(jnp.float32) / accum_steps,
+                acc, g)
+            return acc, (l, mets, aux)
+
+        grads, (ls, mets, auxs) = jax.lax.scan(body, zeros, micro)
+        metrics = jax.tree.map(jnp.mean, mets)
+        return (jnp.mean(ls), (metrics, jnp.mean(auxs))), grads
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        fn = grads_single if accum_steps <= 1 else grads_accum
+        (loss, (metrics, aux)), grads = fn(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+
+        ef = state.ef
+        if compress:
+            grads, ef = gc.compress_decompress(grads, ef)
+
+        new_params, new_opt, lr = adamw_update(grads, state.opt,
+                                               state.params, opt_cfg)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1, ef=ef)
+        metrics = dict(metrics, loss=loss, aux=aux, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers for launchers
+# ---------------------------------------------------------------------------
+
+def state_shardings(state_shapes: TrainState, mesh) -> TrainState:
+    """NamedShardings for a TrainState (from its eval_shape pytree)."""
+    p_sh = make_param_shardings(state_shapes.params, mesh)
+    mu_sh = make_param_shardings(state_shapes.opt["mu"], mesh)
+    nu_sh = make_param_shardings(state_shapes.opt["nu"], mesh)
+    rep = named_sharding((), ())
+    ef_sh = (make_param_shardings(state_shapes.ef, mesh)
+             if state_shapes.ef is not None else None)
+    return TrainState(params=p_sh,
+                      opt={"mu": mu_sh, "nu": nu_sh, "count": rep},
+                      step=rep, ef=ef_sh)
+
+
+def batch_shardings(cfg: ModelConfig, batch_shapes: Dict[str, Any]):
+    out = {}
+    for k, v in batch_shapes.items():
+        names: tuple
+        if k == "embeds":
+            names = ("batch", "seq", None)
+        else:                       # tokens / labels / mask: (B, S)
+            names = ("batch", "seq")
+        out[k] = named_sharding(v.shape, names)
+    return out

@@ -1,0 +1,91 @@
+"""Chain kernel: all execution modes vs the unbanded numpy oracle, the
+band-truncation claim machinery, and backtracking invariants."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import chain as C
+from repro.data import genomics
+
+
+def _anchors(n, seed=0, noise=30):
+    return genomics.anchor_set(n, seed=seed, noise=noise)
+
+
+@pytest.mark.parametrize("mode", ["sequential", "fission", "blocked"])
+@pytest.mark.parametrize("n,seed", [(100, 0), (333, 1), (1024, 2)])
+def test_chain_matches_oracle(mode, n, seed):
+    q, r = _anchors(n, seed=seed)
+    f_ref, p_ref = C.chain_ref_unbanded(q, r, T=64)
+    f, p = C.chain_anchors(jnp.asarray(q), jnp.asarray(r), T=64, mode=mode)
+    np.testing.assert_allclose(np.asarray(f), f_ref, rtol=1e-4, atol=1e-3)
+    # predecessors may differ only on exact ties; scores must agree
+    diff = np.asarray(p) != p_ref
+    if diff.any():
+        for i in np.where(diff)[0]:
+            np.testing.assert_allclose(np.asarray(f)[i], f_ref[i], atol=1e-3)
+
+
+@pytest.mark.parametrize("block", [4, 16, 64])
+def test_blocked_block_sizes(block):
+    q, r = _anchors(257, seed=3)
+    f_seq, _ = C.chain_anchors(jnp.asarray(q), jnp.asarray(r), T=32,
+                               mode="sequential")
+    f_blk, _ = C.chain_anchors(jnp.asarray(q), jnp.asarray(r), T=32,
+                               mode="blocked", block=block)
+    np.testing.assert_allclose(np.asarray(f_blk), np.asarray(f_seq),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_anchor_validity_mask():
+    """Padding anchors (fixed-capacity pipelines) must not affect scores."""
+    q, r = _anchors(200, seed=4)
+    f_ref, _ = C.chain_anchors(jnp.asarray(q), jnp.asarray(r), T=64)
+    pad = 56
+    qp = np.concatenate([q, np.zeros(pad, q.dtype)])
+    rp = np.concatenate([r, np.full(pad, 2**30, r.dtype)])
+    valid = np.concatenate([np.ones(200, bool), np.zeros(pad, bool)])
+    f, _ = C.chain_anchors(jnp.asarray(qp), jnp.asarray(rp), T=64,
+                           anchor_valid=jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(f)[:200], np.asarray(f_ref),
+                               atol=1e-3)
+    assert (np.asarray(f)[200:] < -1e17).all()
+
+
+def test_band_truncation_t64_misprediction_low():
+    """Paper §V-B: T=5000 -> 64 changes <9e-6 of predecessors. On synthetic
+    anchors the rate depends on the generator; assert it is *small*."""
+    q, r = _anchors(4000, seed=5)
+    f64, p64 = C.chain_ref_unbanded(q, r, T=64)
+    f5k, p5k = C.chain_ref_unbanded(q, r, T=2000)
+    mis = np.mean(np.abs(f64 - f5k) > 1e-6)
+    assert mis < 0.01, f"band truncation misprediction {mis:.2%}"
+
+
+def test_backtrack_chains_are_consistent():
+    q, r = _anchors(500, seed=6)
+    f, p = C.chain_anchors(jnp.asarray(q), jnp.asarray(r), T=64)
+    chains = C.backtrack(np.asarray(f), np.asarray(p), min_score=20.0)
+    assert chains, "no chains found on collinear anchors"
+    seen = set()
+    for score, members in chains:
+        assert len(members) >= 2
+        assert score >= 20.0
+        for m in members:
+            assert m not in seen       # node-disjoint
+            seen.add(m)
+        # members follow predecessor links
+        for a, b in zip(members[:-1], members[1:]):
+            assert np.asarray(p)[b] == a
+
+
+def test_chain_scores_masking_rules():
+    q = jnp.asarray([0, 10, 20, 10_000], jnp.int32)
+    r = jnp.asarray([0, 10, 20, 10_000], jnp.int32)
+    s = C.chain_scores(q, r, T=4)
+    s = np.asarray(s)
+    assert s[1, 0] > -1e17          # 10,10 after 0,0: valid
+    assert s[3, 0] < -1e17          # 10k jump exceeds max_dist
+    assert (s[0] < -1e17).all()     # no predecessors for anchor 0

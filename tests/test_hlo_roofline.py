@@ -1,0 +1,131 @@
+"""Roofline machinery unit tests: collective-byte HLO parsing, term
+arithmetic, and the trip-count-aware HLO walk (hlo_analysis)."""
+
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis, roofline
+
+HLO_COLL = """HloModule m
+
+ENTRY %main (p0: f32[8,128]) -> f32[64,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[64,128]{1,0} all-reduce(%ag), to_apply=%add
+  %t = (f32[4,2]{1,0}, f32[4,2]{1,0}) all-reduce-start(%p0), to_apply=%add
+  %d = f32[4,2]{1,0} all-reduce-done(%t)
+  %rs = bf16[32]{0} reduce-scatter(%p0), dimensions={0}
+  ROOT %cp = f32[64,128]{1,0} collective-permute(%ar)
+}
+"""
+
+
+def test_collective_bytes_parses_kinds():
+    mc = hlo_analysis.analyze(HLO_COLL)
+    assert mc.collectives["all-gather"] == 64 * 128 * 4
+    # plain all-reduce result + async start payload (max array in tuple)
+    assert mc.collectives["all-reduce"] == 64 * 128 * 4 + 4 * 2 * 4
+    assert mc.collectives["reduce-scatter"] == 32 * 2
+    assert mc.collectives["collective-permute"] == 64 * 128 * 4
+    assert mc.collective_bytes == sum(mc.collectives.values())
+
+
+def test_done_variants_not_double_counted():
+    hlo = """HloModule m
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  %t = (f32[8]{0}, f32[8]{0}) all-reduce-start(%p0), to_apply=%add
+  ROOT %d = f32[8]{0} all-reduce-done(%t)
+}
+"""
+    mc = hlo_analysis.analyze(hlo)
+    # -done carries no new traffic; -start counts its payload once
+    assert mc.collectives["all-reduce"] == 8 * 4
+
+
+def test_roofline_terms_dominance():
+    t = roofline.roofline_terms(197e12, 0.0, 0.0)     # 1s of pure compute
+    assert t["dominant"] == "compute"
+    np.testing.assert_allclose(t["compute_s"], 1.0)
+    t2 = roofline.roofline_terms(0.0, 819e9, 0.0)
+    assert t2["dominant"] == "memory"
+    t3 = roofline.roofline_terms(0.0, 0.0, 50e9)
+    assert t3["dominant"] == "collective"
+    assert t3["step_lower_bound_s"] == pytest.approx(1.0)
+
+
+def test_model_flops():
+    assert roofline.model_flops(1000, 10, "train") == 6e4
+    assert roofline.model_flops(1000, 10, "inference") == 2e4
+
+
+WHILE_HLO = """HloModule m
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %a = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %dot = f32[8,8]{1,0} dot(%a, %a), lhs_contracting_dims={1}, \
+rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %r = (s32[], f32[8,8]) tuple(%i, %dot)
+}
+
+ENTRY %main (init: (s32[], f32[8,8])) -> f32[8,8] {
+  %init = (s32[], f32[8,8]) parameter(0)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, \
+backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies():
+    mc = hlo_analysis.analyze(WHILE_HLO)
+    assert any(n == 12 for _, n in mc.while_trips), mc.while_trips
+    # the dot inside the while must be counted 12x
+    assert mc.flops == pytest.approx(12 * 2 * 8 * 8 * 8)
+
+
+def test_collectives_inside_while_trip_multiplied():
+    hlo = """HloModule m
+
+%body (p: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %p = (s32[], f32[16]) parameter(0)
+  %x = f32[16]{0} get-tuple-element(%p), index=1
+  %ag = f32[16]{0} all-reduce(%x), to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %r = (s32[], f32[16]) tuple(%i, %ag)
+}
+
+ENTRY %main (init: (s32[], f32[16])) -> f32[16] {
+  %init = (s32[], f32[16]) parameter(0)
+  %w = (s32[], f32[16]) while(%init), condition=%cond, body=%body, \
+backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[16]{0} get-tuple-element(%w), index=1
+}
+"""
+    mc = hlo_analysis.analyze(hlo)
+    assert mc.collectives["all-reduce"] == 5 * 16 * 4
+
+
+def test_real_dryrun_artifacts_have_sane_terms():
+    """Spot-check the recorded dry-run JSONs: every OK cell's roofline
+    terms are positive and the dominant term matches the max."""
+    import json
+    from pathlib import Path
+    d = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("no dry-run artifacts")
+    checked = 0
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "OK":
+            continue
+        r = rec["roofline"]
+        terms = {k: r[k] for k in ("compute_s", "memory_s", "collective_s")}
+        assert all(v >= 0 for v in terms.values()), f.name
+        assert r["dominant"] == max(terms, key=terms.get).replace("_s", "")
+        assert r["hlo_flops_per_device"] > 0, f.name
+        checked += 1
+    assert checked >= 30, f"only {checked} OK cells recorded"

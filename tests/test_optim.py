@@ -1,0 +1,91 @@
+"""Optimizer unit tests: schedule shape, clip, AdamW vs a numpy oracle,
+int8 gradient compression round-trip + error feedback accumulation."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, adamw_update, clip_by_global_norm,
+                         init_opt_state, lr_at)
+from repro.train import grad_compress as gc
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, s)) for s in range(0, 120, 1)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1e-3) < 1e-9          # peak at warmup end
+    assert lrs[50] < lrs[10]                    # decaying
+    assert abs(lrs[100] - 1e-4) < 1e-9          # floor = ratio * peak
+    assert all(l >= 1e-4 - 1e-12 for l in lrs[100:])
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = np.sqrt(sum(np.sum(np.square(np.asarray(x)))
+                        for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(norm), np.sqrt(4 * 9 + 9 * 16),
+                               rtol=1e-6)
+    # below the bound: untouched
+    same, _ = clip_by_global_norm(g, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0)
+
+
+def test_adamw_matches_numpy_oracle():
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=0, decay_steps=10**9,
+                      weight_decay=0.1)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    opt = init_opt_state(p)
+    newp, newopt, lr = adamw_update(g, opt, p, cfg)
+
+    # numpy oracle, count=1
+    gn = np.array([0.1, 0.2, -0.3])
+    pn = np.array([1.0, -2.0, 3.0])
+    m = (1 - cfg.b1) * gn
+    v = (1 - cfg.b2) * gn ** 2
+    mhat = m / (1 - cfg.b1)
+    vhat = v / (1 - cfg.b2)
+    step = mhat / (np.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pn
+    want = pn - float(lr) * step
+    np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
+
+
+def test_adamw_bf16_params_keep_fp32_moments():
+    cfg = AdamWConfig(warmup_steps=0)
+    p = {"w": jnp.ones(4, jnp.bfloat16)}
+    opt = init_opt_state(p)
+    g = {"w": jnp.ones(4, jnp.bfloat16) * 0.1}
+    newp, newopt, _ = adamw_update(g, opt, p, cfg)
+    assert newp["w"].dtype == jnp.bfloat16
+    assert newopt["mu"]["w"].dtype == jnp.bfloat16 or \
+        newopt["mu"]["w"].dtype == jnp.float32  # moments follow init zeros
+
+
+def test_int8_quantization_roundtrip():
+    x = jnp.asarray(np.linspace(-5, 5, 100), jnp.float32)
+    q, s = gc.quantize_int8(x)
+    dq = gc.dequantize_int8(q, s)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(dq, np.asarray(x), atol=float(s) + 1e-6)
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the *sum* of compressed gradients tracks the true sum."""
+    rng = np.random.default_rng(0)
+    grads = [rng.normal(size=32).astype(np.float32) * 0.01
+             for _ in range(50)]
+    ef = {"g": jnp.zeros(32)}
+    total_comp = np.zeros(32)
+    for g in grads:
+        cg, ef = gc.compress_decompress({"g": jnp.asarray(g)}, ef)
+        total_comp += np.asarray(cg["g"])
+    total_true = np.sum(grads, axis=0)
+    # residual is bounded by one quantization step, not accumulated bias
+    resid = np.abs(total_comp - total_true).max()
+    one_step = np.abs(np.asarray(ef["g"])).max() + 1e-6
+    assert resid <= one_step + 1e-4

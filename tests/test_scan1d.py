@@ -1,0 +1,87 @@
+"""scan1d: sequential == chunked == associative, for every semiring
+(property), plus the matrix-state diag_rank1 recurrence vs a numpy oracle.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan1d import affine_scan, diag_rank1_scan
+from repro.core.semiring import SEMIRINGS
+
+finite = st.floats(min_value=-10, max_value=10, allow_nan=False, width=32)
+
+
+@st.composite
+def scan_cases(draw):
+    t = draw(st.integers(1, 64))
+    a = draw(st.lists(finite, min_size=t, max_size=t))
+    b = draw(st.lists(finite, min_size=t, max_size=t))
+    x0 = draw(finite)
+    chunks = draw(st.sampled_from([1, 2, 3, 4, 8]))
+    return (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+            jnp.asarray(x0, jnp.float32), chunks)
+
+
+@given(scan_cases(), st.sampled_from(sorted(SEMIRINGS)))
+@settings(max_examples=60, deadline=None)
+def test_modes_agree(case, srname):
+    sr = SEMIRINGS[srname]
+    a, b, x0, chunks = case
+    seq = affine_scan(a, b, x0, sr, mode="sequential")
+    chk = affine_scan(a, b, x0, sr, mode="chunked", num_chunks=chunks)
+    ass = affine_scan(a, b, x0, sr, mode="associative")
+    np.testing.assert_allclose(chk, seq, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(ass, seq, rtol=1e-4, atol=1e-3)
+
+
+@given(scan_cases())
+@settings(max_examples=30, deadline=None)
+def test_chunked_boundary_modes_agree(case):
+    sr = SEMIRINGS["maxplus"]
+    a, b, x0, chunks = case
+    s1 = affine_scan(a, b, x0, sr, mode="chunked", num_chunks=chunks,
+                     boundary_mode="sequential")
+    s2 = affine_scan(a, b, x0, sr, mode="chunked", num_chunks=chunks,
+                     boundary_mode="associative")
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-3)
+
+
+def _dr1_oracle(w, k, v, s0):
+    t, dk = w.shape
+    dv = v.shape[-1]
+    s = np.array(s0, np.float64)
+    out = np.zeros((t, dk, dv))
+    for i in range(t):
+        s = w[i][:, None] * s + np.outer(k[i], v[i])
+        out[i] = s
+    return out
+
+
+def test_diag_rank1_scan_modes():
+    rng = np.random.default_rng(0)
+    t, dk, dv = 50, 8, 6
+    w = rng.uniform(0.5, 1.0, (t, dk)).astype(np.float32)
+    k = rng.normal(size=(t, dk)).astype(np.float32)
+    v = rng.normal(size=(t, dv)).astype(np.float32)
+    s0 = rng.normal(size=(dk, dv)).astype(np.float32)
+    want = _dr1_oracle(w, k, v, s0)
+    got_seq = diag_rank1_scan(jnp.asarray(w), jnp.asarray(k), jnp.asarray(v),
+                              jnp.asarray(s0), mode="sequential")
+    got_chk = diag_rank1_scan(jnp.asarray(w), jnp.asarray(k), jnp.asarray(v),
+                              jnp.asarray(s0), mode="chunked", chunk=16)
+    np.testing.assert_allclose(got_seq, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_chk, want, rtol=1e-3, atol=1e-3)
+
+
+def test_scan_shapes_and_dtypes():
+    for t in (1, 7, 64, 129):
+        a = jnp.ones((t, 3))
+        b = jnp.zeros((t, 3))
+        x0 = jnp.zeros((3,))
+        for mode in ("sequential", "chunked", "associative"):
+            out = affine_scan(a, b, x0, SEMIRINGS["real"], mode=mode)
+            assert out.shape == (t, 3)
+            assert out.dtype == jnp.float32

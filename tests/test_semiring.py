@@ -1,0 +1,84 @@
+"""Property tests for the semiring algebra (hypothesis).
+
+The engine's exactness rests on two algebraic facts: affine maps over a
+semiring compose associatively, and composition distributes the way
+affine_compose claims. These are the invariants that let Squire's ordered
+counters dissolve into chunked/associative scans — so they get property
+tests, not just examples.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.semiring import MAXPLUS, MINPLUS, REAL, SEMIRINGS
+
+finite = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   width=32)
+
+
+def _vec(draw, n):
+    return jnp.asarray(draw(st.lists(finite, min_size=n, max_size=n)),
+                       jnp.float32)
+
+
+@st.composite
+def affine_triples(draw):
+    n = draw(st.integers(1, 8))
+    return tuple(_vec(draw, n) for _ in range(7))  # a1,b1,a2,b2,a3,b3,x
+
+
+@given(affine_triples(), st.sampled_from(sorted(SEMIRINGS)))
+@settings(max_examples=100, deadline=None)
+def test_affine_compose_is_apply_twice(tr, srname):
+    sr = SEMIRINGS[srname]
+    a1, b1, a2, b2, _, _, x = tr
+    ca, cb = sr.affine_compose(a1, b1, a2, b2)
+    lhs = sr.affine_apply(ca, cb, x)
+    rhs = sr.affine_apply(a2, b2, sr.affine_apply(a1, b1, x))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-4)
+
+
+@given(affine_triples(), st.sampled_from(sorted(SEMIRINGS)))
+@settings(max_examples=100, deadline=None)
+def test_affine_compose_associative(tr, srname):
+    sr = SEMIRINGS[srname]
+    a1, b1, a2, b2, a3, b3, x = tr
+    l_a, l_b = sr.affine_compose(*sr.affine_compose(a1, b1, a2, b2), a3, b3)
+    r_a, r_b = sr.affine_compose(a1, b1, *sr.affine_compose(a2, b2, a3, b3))
+    np.testing.assert_allclose(sr.affine_apply(l_a, l_b, x),
+                               sr.affine_apply(r_a, r_b, x),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_tropical_matmul_matches_dense_def():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(5, 7)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(7, 3)), jnp.float32)
+    got = MAXPLUS.matmul(a, b)
+    want = np.max(np.asarray(a)[:, :, None] + np.asarray(b)[None, :, :],
+                  axis=1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    got_min = MINPLUS.matmul(a, b)
+    want_min = np.min(np.asarray(a)[:, :, None] + np.asarray(b)[None, :, :],
+                      axis=1)
+    np.testing.assert_allclose(got_min, want_min, atol=1e-6)
+
+
+def test_real_semiring_is_plain_linear_algebra():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    np.testing.assert_allclose(REAL.matmul(a, b), np.asarray(a) @
+                               np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_identity_elements():
+    for sr in SEMIRINGS.values():
+        x = jnp.asarray([1.5, -2.0, 3.0], jnp.float32)
+        one = jnp.full_like(x, sr.one)
+        np.testing.assert_allclose(sr.mul(one, x), x)
+        if np.isfinite(sr.zero):
+            zero = jnp.full_like(x, sr.zero)
+            np.testing.assert_allclose(sr.add(zero, x), x)

@@ -1,0 +1,135 @@
+"""Chunk-parallel radix sort (property: == np.sort, stability) and the
+seeding stage (minimizers, index lookup, anchors)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import seeding as S
+from repro.core import sort as R
+
+
+# --------------------------------------------------------------------------
+# radix sort
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=500),
+       st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_radix_sort_matches_npsort(keys, chunks):
+    k = jnp.asarray(np.array(keys, np.uint32))
+    sk, sv = R.radix_sort(k, num_chunks=chunks, min_parallel=0)
+    np.testing.assert_array_equal(np.asarray(sk),
+                                  np.sort(np.array(keys, np.uint32)))
+
+
+def test_radix_sort_is_stable():
+    """Equal keys keep input order (required for the seeding pipeline)."""
+    keys = np.array([5, 3, 5, 3, 5, 1] * 50, np.uint32)
+    vals = np.arange(len(keys), dtype=np.int32)
+    sk, sv = R.radix_sort(jnp.asarray(keys), jnp.asarray(vals),
+                          num_chunks=4, min_parallel=0)
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    for key in (1, 3, 5):
+        idx = sv[sk == key]
+        assert (np.diff(idx) > 0).all(), f"key {key} unstable"
+
+
+def test_radix_sort_carries_values():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**31, 10_000).astype(np.uint32)
+    vals = rng.integers(0, 2**31, 10_000).astype(np.int32)
+    sk, sv = R.radix_sort(jnp.asarray(keys), jnp.asarray(vals), num_chunks=8)
+    order = np.argsort(keys, kind="stable")
+    np.testing.assert_array_equal(np.asarray(sk), keys[order])
+    np.testing.assert_array_equal(np.asarray(sv), vals[order])
+
+
+def test_small_input_skips_worker_path():
+    """Paper Alg. 1 line 2: arrays below the threshold sort on the host."""
+    keys = jnp.asarray(np.array([3, 1, 2], np.uint32))
+    sk, _ = R.radix_sort(keys, num_chunks=8, min_parallel=10)
+    np.testing.assert_array_equal(np.asarray(sk), [1, 2, 3])
+
+
+def test_sort_i32_signed():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(-2**31, 2**31 - 1, 5000).astype(np.int32)
+    sk, _ = R.sort_i32(jnp.asarray(keys), num_chunks=4, min_parallel=0)
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(keys))
+
+
+@given(st.integers(2, 9), st.integers(0, 300), st.integers(0, 300))
+@settings(max_examples=20, deadline=None)
+def test_merge_sorted_property(seed, na, nb):
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.integers(0, 1000, na).astype(np.uint32))
+    b = np.sort(rng.integers(0, 1000, nb).astype(np.uint32))
+    mk, _ = R.merge_sorted(jnp.asarray(a), jnp.zeros(na, jnp.int32),
+                           jnp.asarray(b), jnp.zeros(nb, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(mk),
+                                  np.sort(np.concatenate([a, b])))
+
+
+# --------------------------------------------------------------------------
+# seeding
+# --------------------------------------------------------------------------
+
+def test_kmer_codes():
+    seq = jnp.asarray([0, 1, 2, 3, 0], jnp.int32)
+    codes = S.kmer_codes(seq, 3)
+    assert codes.shape == (3,)
+    assert int(codes[0]) == 0b000110          # 0,1,2
+    assert int(codes[1]) == 0b011011          # 1,2,3
+    assert int(codes[2]) == 0b101100          # 2,3,0
+
+
+def test_minimizers_shift_invariance():
+    """A window minimizer set is a subsequence property: shifting the whole
+    sequence does not change which relative positions are minimizers."""
+    rng = np.random.default_rng(2)
+    seq = rng.integers(0, 4, 300).astype(np.int32)
+    pos1, h1, keep1 = S.minimizers(jnp.asarray(seq), 15, 10)
+    pos2, h2, keep2 = S.minimizers(jnp.asarray(seq), 15, 10)
+    np.testing.assert_array_equal(np.asarray(pos1), np.asarray(pos2))
+
+
+def test_index_lookup_finds_planted_matches():
+    rng = np.random.default_rng(3)
+    ref = rng.integers(0, 4, 5000).astype(np.int8)
+    idx = S.build_index(ref, 15, 10)
+    # a read copied verbatim from the reference must anchor to its origin
+    start = 1234
+    read = ref[start:start + 300].astype(np.int32)
+    q, r, valid = S.seed(idx, jnp.asarray(read), 15, 10, max_occ=8)
+    q, r, valid = map(np.asarray, (q, r, valid))
+    hits = r[valid] - q[valid]
+    assert (np.abs(hits - start) <= 2).mean() > 0.8, \
+        "anchors do not cluster at the true position"
+    # anchors sorted by reference position
+    assert (np.diff(r[valid]) >= 0).all()
+
+
+def test_seed_valid_len_masks_padding():
+    rng = np.random.default_rng(4)
+    ref = rng.integers(0, 4, 5000).astype(np.int8)
+    idx = S.build_index(ref, 15, 10)
+    read = ref[100:400].astype(np.int32)
+    padded = np.zeros(512, np.int32)
+    padded[:300] = read
+    q1, r1, v1 = S.seed(idx, jnp.asarray(read), 15, 10)
+    q2, r2, v2 = S.seed(idx, jnp.asarray(padded), 15, 10,
+                        valid_len=jnp.asarray(300))
+    a1 = set(zip(np.asarray(q1)[np.asarray(v1)].tolist(),
+                 np.asarray(r1)[np.asarray(v1)].tolist()))
+    a2 = set(zip(np.asarray(q2)[np.asarray(v2)].tolist(),
+                 np.asarray(r2)[np.asarray(v2)].tolist()))
+    assert a1 == a2, "padding changed the anchor set"
+
+
+def test_hash32_is_permutation_like():
+    xs = jnp.arange(10_000, dtype=jnp.uint32)
+    hs = np.asarray(S.hash32(xs))
+    assert len(np.unique(hs)) == len(hs)      # murmur finalizer is injective

@@ -1,0 +1,99 @@
+"""SpMV (paper Fig. 1c) and Needleman-Wunsch (paper §V-C): the remaining
+motivating kernels, exact vs dense/numpy oracles for any chunking."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import spmv as S
+from repro.core.align import SWParams, nw_ref, nw_tiled, sw_ref
+
+
+# --------------------------------------------------------------------------
+# SpMV
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_rows,n_cols,density,skew,chunks", [
+    (32, 40, 0.2, 0.0, 4),
+    (100, 64, 0.1, 0.5, 8),     # power-law row lengths (load imbalance)
+    (17, 23, 0.3, 0.0, 5),      # odd sizes
+])
+def test_spmv_matches_dense(n_rows, n_cols, density, skew, chunks):
+    m = S.random_csr(n_rows, n_cols, density, seed=n_rows, skew=skew)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=n_cols).astype(np.float32))
+    want = S.to_dense(m, n_rows) @ np.asarray(x)
+    got_chunk = S.spmv_chunked(m, x, n_rows, num_chunks=chunks)
+    got_seg = S.spmv_segsum(m, x, n_rows)
+    np.testing.assert_allclose(np.asarray(got_chunk), want, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_seg), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(st.integers(1, 12), st.integers(0, 6))
+@settings(max_examples=15, deadline=None)
+def test_spmv_chunk_invariance(chunks, seed):
+    """Any worker chunking gives identical results (the Squire claim)."""
+    n_rows, n_cols = 24, 16
+    m = S.random_csr(n_rows, n_cols, 0.25, seed=seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n_cols).astype(np.float32))
+    base = S.spmv_segsum(m, x, n_rows)
+    got = S.spmv_chunked(m, x, n_rows, num_chunks=chunks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Needleman-Wunsch
+# --------------------------------------------------------------------------
+
+def _nw_numpy(a, b, match=2.0, mismatch=-4.0, gap=4.0):
+    n, m = len(a), len(b)
+    h = np.zeros((n + 1, m + 1))
+    h[0, :] = -gap * np.arange(m + 1)
+    h[:, 0] = -gap * np.arange(n + 1)
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            sub = match if a[i - 1] == b[j - 1] else mismatch
+            h[i, j] = max(h[i - 1, j - 1] + sub, h[i - 1, j] - gap,
+                          h[i, j - 1] - gap)
+    return h[1:, 1:]
+
+
+@pytest.mark.parametrize("n,m,tile", [(16, 16, 8), (24, 40, 8), (13, 9, 4)])
+def test_nw_matches_numpy(n, m, tile):
+    rng = np.random.default_rng(n * 100 + m)
+    a = rng.integers(0, 4, n).astype(np.int32)
+    b = rng.integers(0, 4, m).astype(np.int32)
+    want = _nw_numpy(a, b)
+    got_ref = nw_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got_ref), want, rtol=1e-5,
+                               atol=1e-4)
+    mat, score = nw_tiled(jnp.asarray(a), jnp.asarray(b),
+                          tile_r=tile, tile_c=tile)
+    np.testing.assert_allclose(np.asarray(mat), want, rtol=1e-5, atol=1e-4)
+    assert float(score) == pytest.approx(want[-1, -1], abs=1e-4)
+
+
+def test_nw_identical_sequences_score():
+    a = jnp.asarray(np.arange(12) % 4, jnp.int32)
+    mat, score = nw_tiled(a, a, tile_r=4, tile_c=4)
+    assert float(score) == pytest.approx(2.0 * 12)   # all matches
+
+
+def test_nw_vs_sw_global_vs_local():
+    """NW must pay for flanking mismatches that SW ignores."""
+    rng = np.random.default_rng(3)
+    core = rng.integers(0, 4, 10).astype(np.int32)
+    a = np.concatenate([np.full(5, 0, np.int32), core])
+    b = np.concatenate([np.full(5, 3, np.int32), core])  # mismatched flank
+    p = SWParams()
+    sw_best = float(jnp.max(sw_ref(jnp.asarray(a), jnp.asarray(b), p)))
+    _, nw_score = nw_tiled(jnp.asarray(a), jnp.asarray(b), p,
+                           tile_r=5, tile_c=5)
+    assert sw_best >= 2.0 * 10 - 1e-6
+    assert float(nw_score) < sw_best

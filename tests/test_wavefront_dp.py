@@ -1,0 +1,119 @@
+"""2-D wavefront engine: DTW and Smith-Waterman vs sequential oracles,
+tile-size invariance (the Squire worker-partitioning claim: any chunking
+is exact), and padding behaviour."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import align as A
+from repro.core import dtw as D
+from repro.core import wavefront as W
+
+
+def _dtw_numpy(s, r):
+    n, m = len(s), len(r)
+    big = np.float64(1e30)
+    mat = np.full((n + 1, m + 1), big)
+    mat[0, 0] = 0.0
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            mat[i, j] = abs(s[i - 1] - r[j - 1]) + min(
+                mat[i - 1, j - 1], mat[i - 1, j], mat[i, j - 1])
+    return mat[1:, 1:]
+
+
+def _sw_numpy(a, b, match=2.0, mismatch=-4.0, gap=4.0):
+    n, m = len(a), len(b)
+    h = np.zeros((n + 1, m + 1))
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            sub = match if a[i - 1] == b[j - 1] else mismatch
+            h[i, j] = max(0.0, h[i - 1, j - 1] + sub,
+                          h[i - 1, j] - gap, h[i, j - 1] - gap)
+    return h[1:, 1:]
+
+
+@pytest.mark.parametrize("n,m", [(16, 16), (24, 40), (7, 13)])
+def test_dtw_ref_matches_numpy(n, m):
+    rng = np.random.default_rng(0)
+    s = rng.normal(size=n).astype(np.float32)
+    r = rng.normal(size=m).astype(np.float32)
+    got = D.dtw_ref(jnp.asarray(s), jnp.asarray(r))
+    np.testing.assert_allclose(got, _dtw_numpy(s, r), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("tiles", [(4, 4), (8, 8), (16, 8), (5, 7)])
+def test_dtw_tiled_tile_invariance(tiles):
+    """Any tile partitioning gives the identical matrix (exactness of the
+    local-counter decomposition)."""
+    rng = np.random.default_rng(1)
+    s = rng.normal(size=40).astype(np.float32)
+    r = rng.normal(size=56).astype(np.float32)
+    ref = D.dtw_ref(jnp.asarray(s), jnp.asarray(r))
+    tr, tc = tiles
+    mat, dist = D.dtw_tiled(jnp.asarray(s), jnp.asarray(r),
+                            tile_r=tr, tile_c=tc)
+    np.testing.assert_allclose(mat, ref, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(dist, np.asarray(ref)[-1, -1], atol=1e-4)
+
+
+def test_dtw_diag_matches_ref():
+    rng = np.random.default_rng(2)
+    s = rng.normal(size=20).astype(np.float32)
+    r = rng.normal(size=30).astype(np.float32)
+    got = D.dtw_diag(jnp.asarray(s), jnp.asarray(r))
+    np.testing.assert_allclose(got, D.dtw_ref(jnp.asarray(s),
+                                              jnp.asarray(r)),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,tile", [(32, 32, 8), (48, 24, 16), (17, 29, 8)])
+def test_sw_tiled_vs_numpy(n, m, tile):
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 4, n).astype(np.int32)
+    b = rng.integers(0, 4, m).astype(np.int32)
+    want = _sw_numpy(a, b)
+    mat, best = A.sw_tiled(jnp.asarray(a), jnp.asarray(b),
+                           tile_r=tile, tile_c=tile)
+    np.testing.assert_allclose(mat, want, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(best, want.max(), atol=1e-4)
+
+
+def test_sw_detects_planted_alignment():
+    rng = np.random.default_rng(4)
+    ref = rng.integers(0, 4, 200).astype(np.int32)
+    read = ref[60:110].copy()
+    mat, best = A.sw_tiled(jnp.asarray(read), jnp.asarray(ref),
+                           tile_r=16, tile_c=16)
+    assert float(best) == pytest.approx(2.0 * 50)     # perfect match score
+    ei, ej = A.sw_end_position(mat)
+    assert int(ej) == 109
+
+
+def test_wavefront_requires_tile_multiple():
+    with pytest.raises(ValueError):
+        W.run_wavefront(lambda *a: None, jnp.zeros(10), jnp.zeros(8),
+                        jnp.zeros(8), jnp.zeros(10), jnp.zeros(()), 4, 3)
+
+
+def test_pad_to_multiple():
+    x = jnp.arange(10.0)
+    y = W.pad_to_multiple(x, 8, 0, -1.0)
+    assert y.shape == (16,)
+    assert float(y[10]) == -1.0
+    z = W.pad_to_multiple(x, 5, 0, 0.0)
+    assert z.shape == (10,)
+
+
+def test_dp_tile_diagonal_boundaries():
+    """Tile function must honor top/left/corner exactly: computing a matrix
+    in one tile equals computing it in four quadrant tiles."""
+    rng = np.random.default_rng(5)
+    s = rng.normal(size=16).astype(np.float32)
+    r = rng.normal(size=16).astype(np.float32)
+    full = D.dtw_ref(jnp.asarray(s), jnp.asarray(r))
+    mat, _ = D.dtw_tiled(jnp.asarray(s), jnp.asarray(r), tile_r=8, tile_c=8)
+    np.testing.assert_allclose(mat, full, rtol=1e-5, atol=1e-4)
