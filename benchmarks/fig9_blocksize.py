@@ -71,6 +71,15 @@ def run(rows=None):
     print("# fig9: BlockSpec/VMEM design-space sweep (cache-size analogue)")
     bench_dtw_tiles(rows)
     bench_ssm_chunks(rows)
+    # seed the runtime autotuner: the sweep's fastest tile/chunk become the
+    # serving defaults (ServiceConfig.tuned() reads them back).
+    try:
+        from repro.runtime.autotune import seed_from_fig9
+        best = seed_from_fig9(rows)
+        if best:
+            print(f"# fig9: autotune cache seeded: {best}")
+    except OSError as e:                      # read-only cache dir etc.
+        print(f"# fig9: autotune cache not written ({e})")
     return rows
 
 

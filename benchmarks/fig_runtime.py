@@ -1,0 +1,84 @@
+"""Runtime throughput suite: requests/sec vs batch size, per-request
+dispatch vs the batched KernelService (beyond-paper, the ROADMAP's
+traffic-scale story).
+
+The paper measures per-kernel speedup for one caller; serving millions of
+users means the dispatch layer itself must amortize: one compiled program
+per shape bucket, one launch per bucket batch instead of per request.
+Rows report the batched wall-clock per request (``us_per_call``) and, as
+``derived``, the measured speedup over dispatching the same (warm,
+compiled) requests one at a time — the quantity the ISSUE acceptance
+gate checks (>= 2x at batch >= 32).
+
+Both paths produce bit-identical results (asserted here), so the
+comparison is pure dispatch-efficiency.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.runtime import KernelService, Request, ServiceConfig
+
+BATCHES = (1, 8, 32, 128)
+
+
+def _chain_request(rng, n: int) -> Request:
+    r = np.sort(rng.integers(0, 5000, n)).astype(np.int32)
+    q = np.sort(rng.integers(0, 400, n)).astype(np.int32)
+    return Request("chain", {"q": q, "r": r})
+
+
+def _dtw_request(rng, n: int, m: int) -> Request:
+    return Request("dtw", {"s": rng.normal(size=n).astype(np.float32),
+                           "r": rng.normal(size=m).astype(np.float32)})
+
+
+def _throughput(svc: KernelService, reqs, repeats: int = 3):
+    """(batched_us_per_req, per_request_us_per_req); both warm."""
+    batched = svc.submit(reqs)                      # warm the bucket compiles
+    singles = [svc.submit([r])[0] for r in reqs]    # warm the B=1 compiles
+    for a, b in zip(batched, singles):              # dispatch must be exact
+        for k in a:
+            assert np.array_equal(a[k], b[k]), f"batched != single on {k}"
+
+    def med(fn):
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2] * 1e6 / len(reqs)
+
+    us_b = med(lambda: svc.submit(reqs))
+    us_s = med(lambda: [svc.submit([r]) for r in reqs])
+    return us_b, us_s
+
+
+def bench_kernel(rows, name: str, make_request, svc: KernelService):
+    rng = np.random.default_rng(0)
+    for bsz in BATCHES:
+        reqs = [make_request(rng) for _ in range(bsz)]
+        us_b, us_s = _throughput(svc, reqs)
+        rows.append(common.emit(
+            f"fig_runtime.{name}.batch{bsz}", us_b,
+            f"speedup_vs_per_request={us_s / us_b:.2f}"))
+
+
+def run(rows=None):
+    rows = rows if rows is not None else []
+    print("# fig_runtime: batched KernelService vs per-request dispatch")
+    svc = KernelService(ServiceConfig(dtw_tile=16, seq_bucket=64))
+    bench_kernel(rows, "chain",
+                 lambda r: _chain_request(r, int(r.integers(64, 256))), svc)
+    bench_kernel(rows, "dtw",
+                 lambda r: _dtw_request(r, int(r.integers(24, 64)),
+                                        int(r.integers(24, 64))), svc)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -21,17 +21,19 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig6,fig7,fig8,fig9,fig_band")
+                    help="comma list: fig6,fig7,fig8,fig9,fig_band,"
+                         "fig_runtime")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig6_kernels, fig7_sync, fig8_end2end,
-                            fig9_blocksize, fig_band)
+                            fig9_blocksize, fig_band, fig_runtime)
     suites = {
         "fig6": fig6_kernels.run,
         "fig7": fig7_sync.run,
         "fig8": fig8_end2end.run,
         "fig9": fig9_blocksize.run,
         "fig_band": fig_band.run,
+        "fig_runtime": fig_runtime.run,
     }
     want = args.only.split(",") if args.only else list(suites)
 

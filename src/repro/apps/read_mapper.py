@@ -13,10 +13,13 @@ module is that application on the JAX substrate:
   3. **align** — Smith-Waterman of the read against the reference window
      the chain selected, on the tiled wavefront engine (core.align).
 
-TPU-style static shapes: reads, anchor sets and SW windows are padded to
-shape *buckets* (sentinel-masked), so every stage compiles once per bucket
-and is reused across reads — the same fixed-capacity discipline the MoE
-dispatch uses, and what a production mapper on accelerators does.
+Shape discipline and execution both come from ``repro.runtime``: stage
+inputs are padded to shape buckets (``runtime.bucketing``, sentinel-masked)
+and dispatched through a ``runtime.dispatch.Dispatcher`` whose compile
+cache holds one program per bucket. The stage payload builders and stage
+functions are module-level so the batched ``runtime.service.KernelService``
+path runs the *same* computations over whole request batches — per-read
+and batched mapping are bit-identical.
 
 ``mode`` selects the execution strategy per stage, mirroring the paper's
 baseline-vs-Squire comparison (Fig. 8):
@@ -31,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -42,6 +45,8 @@ from repro.core import align as align_lib
 from repro.core import chain as chain_lib
 from repro.core import seeding
 from repro.core.chain import ChainParams
+from repro.runtime import bucketing
+from repro.runtime.dispatch import Dispatcher
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,17 +75,59 @@ class MapResult:
     align_cells: int            # SW matrix cells (the align-stage work)
 
 
-def _bucket(n: int, b: int) -> int:
-    return -(-n // b) * b
+# --------------------------------------------------------------------------
+# stage payload builders (runtime.bucketing; shared with runtime.service)
+# --------------------------------------------------------------------------
+
+def seed_payload(read: np.ndarray, cfg: MapperConfig
+                 ) -> Tuple[np.ndarray, np.int32]:
+    """Read padded to its read bucket + its true length."""
+    nb = bucketing.round_up(len(read), cfg.read_bucket)
+    padded = bucketing.pad_to(np.asarray(read, np.int32), nb, 0)
+    return padded, np.int32(len(read))
+
+
+def chain_payload(q: np.ndarray, r: np.ndarray, cfg: MapperConfig
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Anchors padded to their anchor bucket with sentinel positions."""
+    nv = len(q)
+    nb = bucketing.round_up(max(nv, 1), cfg.anchor_bucket)
+    qp = bucketing.pad_to(np.asarray(q, np.int32), nb, 0)
+    rp = bucketing.pad_to(np.asarray(r, np.int32), nb, 2**30)  # far sentinel
+    vp = bucketing.pad_to(np.ones(nv, bool), nb, False)
+    return qp, rp, vp
+
+
+def align_payload(read: np.ndarray, window: np.ndarray, cfg: MapperConfig
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Read/window padded to buckets with mutually-mismatching sentinels."""
+    na = bucketing.round_up(len(read), cfg.read_bucket)
+    nb = bucketing.round_up(len(window), cfg.read_bucket)
+    a = bucketing.pad_to(np.asarray(read, np.int32), na, 254)
+    b = bucketing.pad_to(np.asarray(window, np.int32), nb, 255)
+    return a, b
+
+
+def chain_window(qv: np.ndarray, rv: np.ndarray, members: List[int],
+                 read_len: int, ref_len: int, cfg: MapperConfig
+                 ) -> Tuple[int, int]:
+    """Best chain's span -> reference window for the align stage."""
+    lo_anchor, hi_anchor = members[0], members[-1]
+    ref_lo = max(0, int(rv[lo_anchor]) - int(qv[lo_anchor])
+                 - cfg.sw_window_pad)
+    ref_hi = min(ref_len,
+                 int(rv[hi_anchor]) + (read_len - int(qv[hi_anchor]))
+                 + cfg.sw_window_pad)
+    return ref_lo, ref_hi
 
 
 # --------------------------------------------------------------------------
-# jitted per-bucket stage functions (compiled once per shape bucket)
+# per-bucket stage functions (plain; the Dispatcher jits + caches them, and
+# the service vmaps the same objects — one compile cache either way)
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
 def _seed_fn(k: int, w: int, max_occ: int, n_chunks: int):
-    @jax.jit
     def run(idx_h, idx_p, read, valid_len):
         return seeding.seed(seeding.Index(idx_h, idx_p), read, k, w,
                             max_occ=max_occ, num_sort_chunks=n_chunks,
@@ -90,7 +137,6 @@ def _seed_fn(k: int, w: int, max_occ: int, n_chunks: int):
 
 @functools.lru_cache(maxsize=None)
 def _chain_fn(T: int, mode: str, block: int):
-    @jax.jit
     def run(q, r, valid):
         return chain_lib.chain_anchors(q, r, T=T, mode=mode, block=block,
                                        anchor_valid=valid)
@@ -115,6 +161,12 @@ def _chain_fn_pallas(T: int):
 @functools.lru_cache(maxsize=None)
 def _sw_fn(mode: str, tile: int, use_pallas: bool,
            params: align_lib.SWParams):
+    """-> (fn(a, b) -> (mat, score), whole_jit: bool).
+
+    ``whole_jit=False`` marks eager wavefront schedules (only the tile is
+    jitted — tracing the whole matrix would unroll thousands of tiles);
+    the Dispatcher passes such fns through un-jitted.
+    """
     if use_pallas:
         from repro.kernels import ops
         fn = ops.make_sw_tile_fn(params.match, params.mismatch, params.gap)
@@ -122,76 +174,66 @@ def _sw_fn(mode: str, tile: int, use_pallas: bool,
         def run(a, b):
             return align_lib.sw_tiled(a, b, params, tile_r=tile,
                                       tile_c=tile, tile_fn=fn)
-        return run
+        return run, False
     if mode == "squire":
-        # jit the *tile*, keep the wavefront schedule eager: one compiled
-        # program per tile shape, reused across every tile of every read
-        # (tracing the whole matrix would unroll thousands of tiles).
         tile_fn = jax.jit(functools.partial(align_lib._sw_tile_fn, params))
 
         def run(a, b):
             return align_lib.sw_tiled(a, b, params, tile_r=tile,
                                       tile_c=tile, tile_fn=tile_fn)
-        return run
+        return run, False
 
-    @jax.jit
     def run_base(a, b):
         mat = align_lib.sw_ref(a, b, params)
         return mat, jnp.max(mat)
-    return run_base
+    return run_base, True
 
 
 class ReadMapper:
-    def __init__(self, reference: np.ndarray, cfg: MapperConfig):
+    def __init__(self, reference: np.ndarray, cfg: MapperConfig,
+                 runtime: Optional[Dispatcher] = None):
         self.cfg = cfg
         self.reference = np.asarray(reference, np.int8)
         self.index = seeding.build_index(self.reference, cfg.k, cfg.w)
+        self.runtime = runtime or Dispatcher()
 
     # -- stages --------------------------------------------------------------
 
     def _seed(self, read: np.ndarray):
         cfg = self.cfg
         n_chunks = cfg.num_workers if cfg.mode == "squire" else 1
-        nb = _bucket(len(read), cfg.read_bucket)
-        padded = np.zeros(nb, np.int32)
-        padded[:len(read)] = read
+        padded, true_len = seed_payload(read, cfg)
         fn = _seed_fn(cfg.k, cfg.w, cfg.max_occ, n_chunks)
-        q, r, valid = fn(self.index.hashes, self.index.positions,
-                         jnp.asarray(padded),
-                         jnp.asarray(len(read), jnp.int32))
+        q, r, valid = self.runtime.run_one(
+            fn, (self.index.hashes, self.index.positions,
+                 jnp.asarray(padded), jnp.asarray(true_len)))
         return np.asarray(q), np.asarray(r), np.asarray(valid)
 
     def _chain(self, q: np.ndarray, r: np.ndarray):
         cfg = self.cfg
         nv = len(q)
-        nb = _bucket(max(nv, 1), cfg.anchor_bucket)
-        qp = np.zeros(nb, np.int32)
-        rp = np.full(nb, 2**30, np.int32)   # sentinel far position
-        vp = np.zeros(nb, bool)
-        qp[:nv], rp[:nv], vp[:nv] = q, r, True
+        qp, rp, vp = chain_payload(q, r, cfg)
         if cfg.use_pallas:
-            f, pred = _chain_fn_pallas(cfg.band_T)(
-                jnp.asarray(qp), jnp.asarray(rp), jnp.asarray(vp))
+            f, pred = self.runtime.run_one(
+                _chain_fn_pallas(cfg.band_T),
+                (jnp.asarray(qp), jnp.asarray(rp), jnp.asarray(vp)),
+                jit=False)
         else:
             mode = "blocked" if cfg.mode == "squire" else "sequential"
-            f, pred = _chain_fn(cfg.band_T, mode, 16)(
-                jnp.asarray(qp), jnp.asarray(rp), jnp.asarray(vp))
+            f, pred = self.runtime.run_one(
+                _chain_fn(cfg.band_T, mode, 16),
+                (jnp.asarray(qp), jnp.asarray(rp), jnp.asarray(vp)))
         return np.asarray(f)[:nv], np.asarray(pred)[:nv]
 
     def _align(self, read: np.ndarray, ref_lo: int, ref_hi: int
                ) -> Tuple[float, int, int]:
         cfg = self.cfg
         window = self.reference[ref_lo:ref_hi].astype(np.int32)
-        # pad to buckets with mutually-mismatching sentinels
-        na = _bucket(len(read), cfg.read_bucket)
-        nb = _bucket(len(window), cfg.read_bucket)
-        a = np.full(na, 254, np.int32)
-        b = np.full(nb, 255, np.int32)
-        a[:len(read)] = read
-        b[:len(window)] = window
-        tile = cfg.sw_tile if cfg.mode == "squire" else cfg.sw_tile
-        fn = _sw_fn(cfg.mode, tile, cfg.use_pallas, cfg.sw_params)
-        mat, score = fn(jnp.asarray(a), jnp.asarray(b))
+        a, b = align_payload(read, window, cfg)
+        fn, whole_jit = _sw_fn(cfg.mode, cfg.sw_tile, cfg.use_pallas,
+                               cfg.sw_params)
+        mat, score = self.runtime.run_one(
+            fn, (jnp.asarray(a), jnp.asarray(b)), jit=whole_jit)
         end_i, end_j = align_lib.sw_end_position(mat)
         return float(score), int(end_j), len(read) * len(window)
 
@@ -216,13 +258,8 @@ class ReadMapper:
             return MapResult(-1, 0.0, 0.0, nv, 0)
         score, members = chains[0]
 
-        lo_anchor, hi_anchor = members[0], members[-1]
-        # chain span -> reference window for the align stage
-        ref_lo = max(0, int(rv[lo_anchor]) - int(qv[lo_anchor])
-                     - cfg.sw_window_pad)
-        ref_hi = min(len(self.reference),
-                     int(rv[hi_anchor]) + (len(read) - int(qv[hi_anchor]))
-                     + cfg.sw_window_pad)
+        ref_lo, ref_hi = chain_window(qv, rv, members, len(read),
+                                      len(self.reference), cfg)
         if ref_hi - ref_lo < cfg.k:
             return MapResult(-1, 0.0, score, nv, 0)
 

@@ -61,11 +61,12 @@ def run_wavefront(tile_fn: TileFn, a: Array, b: Array, top0: Array,
     them as independent ops (the parallelism Squire's workers exploit). The
     Python loop only fixes the partial order, exactly like the counters.
     """
-    n, m = a.shape[0], b.shape[0]
+    n, m = a.shape[-1], b.shape[-1]
     if n % tile_r or m % tile_c:
         raise ValueError(f"inputs ({n},{m}) not multiples of tile "
                          f"({tile_r},{tile_c}); pad first")
     nr, nc = n // tile_r, m // tile_c
+    lead = a.shape[:-1]          # () here; (B,) via run_wavefront_batched
 
     # boundary state, indexed by tile coordinates
     bottoms = [[None] * nc for _ in range(nr)]   # (tc,) below tile (r,c)
@@ -73,40 +74,70 @@ def run_wavefront(tile_fn: TileFn, a: Array, b: Array, top0: Array,
     corners = [[None] * nc for _ in range(nr)]   # () at tile (r,c) low-right
     tiles = [[None] * nc for _ in range(nr)] if assemble else None
 
-    a_t = a.reshape(nr, tile_r)
-    b_t = b.reshape(nc, tile_c)
-    top_t = top0.reshape(nc, tile_c)
-    left_t = left0.reshape(nr, tile_r)
+    a_t = a.reshape(lead + (nr, tile_r))
+    b_t = b.reshape(lead + (nc, tile_c))
+    top_t = top0.reshape(lead + (nc, tile_c))
+    left_t = left0.reshape(lead + (nr, tile_r))
 
     for d in range(nr + nc - 1):                 # wavefront order
         r_lo, r_hi = max(0, d - nc + 1), min(nr - 1, d)
         for r in range(r_lo, r_hi + 1):          # independent tiles of diag d
             c = d - r
-            top = bottoms[r - 1][c] if r > 0 else top_t[c]
-            left = rights[r][c - 1] if c > 0 else left_t[r]
+            top = bottoms[r - 1][c] if r > 0 else top_t[..., c, :]
+            left = rights[r][c - 1] if c > 0 else left_t[..., r, :]
             if r > 0 and c > 0:
                 corner = corners[r - 1][c - 1]
             elif r > 0:
-                corner = left_t[r - 1][-1]       # == M[r*tr-1, -1]
+                corner = left_t[..., r - 1, -1]  # == M[r*tr-1, -1]
             elif c > 0:
-                corner = top_t[c - 1][-1]        # == M[-1, c*tc-1]
+                corner = top_t[..., c - 1, -1]   # == M[-1, c*tc-1]
             else:
                 corner = corner0
             tile, bottom, right, corner_out = tile_fn(
-                top, left, corner, a_t[r], b_t[c])
+                top, left, corner, a_t[..., r, :], b_t[..., c, :])
             bottoms[r][c], rights[r][c] = bottom, right
             corners[r][c] = corner_out
             if assemble:
                 tiles[r][c] = tile
 
-    bottom_row = jnp.concatenate([bottoms[nr - 1][c] for c in range(nc)])
-    right_col = jnp.concatenate([rights[r][nc - 1] for r in range(nr)])
+    bottom_row = jnp.concatenate([bottoms[nr - 1][c] for c in range(nc)],
+                                 axis=-1)
+    right_col = jnp.concatenate([rights[r][nc - 1] for r in range(nr)],
+                                axis=-1)
     final_corner = corners[nr - 1][nc - 1]
     if assemble:
         matrix = jnp.concatenate(
-            [jnp.concatenate(row, axis=1) for row in tiles], axis=0)
+            [jnp.concatenate(row, axis=-1) for row in tiles], axis=-2)
         return matrix, bottom_row, right_col, final_corner
     return None, bottom_row, right_col, final_corner
+
+
+def run_wavefront_batched(tile_fn_b: TileFn, a: Array, b: Array, top0: Array,
+                          left0: Array, corner0: Array, tile_r: int,
+                          tile_c: int, assemble: bool = True):
+    """Batched run_wavefront: every operand carries a leading batch axis.
+
+    This is the runtime's "accelerator pool" schedule: one wavefront walk
+    serves a whole batch of same-shape DP problems, each tile call landing
+    on the batched tile function (``jax.vmap`` of a TileFn — the pool of
+    per-core Squire workers attacking one tile each). Host scheduling cost
+    is paid once per tile instead of once per tile *per request*.
+
+    Args:
+      tile_fn_b: batched tile function taking top (B, tc), left (B, tr),
+        corner (B,), a (B, tr), b (B, tc) and returning (tile (B, tr, tc),
+        bottom (B, tc), right (B, tr), corner_out (B,)).
+      a: (B, n) row inputs; b: (B, m) column inputs (tile multiples).
+      top0: (B, m); left0: (B, n); corner0: (B,).
+
+    Returns (matrix (B, n, m) or None, bottom (B, m), right (B, n),
+    corner (B,)); identical per-row to run_wavefront on that row.
+    """
+    if a.ndim != 2 or b.shape[0] != a.shape[0]:
+        raise ValueError(f"expected (B, n)/(B, m) inputs, got "
+                         f"{a.shape} / {b.shape}")
+    return run_wavefront(tile_fn_b, a, b, top0, left0, corner0,
+                         tile_r, tile_c, assemble=assemble)
 
 
 def dp_tile_diagonal(cell_update, top: Array, left: Array, corner: Array,

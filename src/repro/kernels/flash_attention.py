@@ -73,7 +73,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         m_ref[...] = m_new
         return 0
 
-    jax.lax.fori_loop(0, n_kv, body, 0, unroll=False)
+    jax.lax.fori_loop(0, n_kv, body, 0)
     out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
     o_ref[0, 0] = out.astype(o_ref.dtype)
 

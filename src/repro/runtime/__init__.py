@@ -1,0 +1,43 @@
+"""repro.runtime — batched kernel-dispatch runtime (the software Squire
+accelerator pool).
+
+The paper attaches low-overhead worker pools to host cores so dependency-
+bound kernels accelerate behind one dispatch interface; this package is
+that layer for the JAX reproduction, and the entry point for running
+kernel work at traffic scale:
+
+  * bucketing  — shape buckets, sentinel padding, pad/mask/unpad
+  * dispatch   — vmap worker pools + shard_map over the device mesh
+  * service    — KernelService: heterogeneous submit(requests) -> results
+  * pipeline   — double-buffered host/device overlap
+  * autotune   — persistent block-size/worker tuner (fig9-seeded)
+"""
+
+from repro.runtime.autotune import Autotuner, seed_from_fig9
+from repro.runtime.bucketing import (BucketSpec, group_by_bucket,
+                                     group_by_key, lengths_of, pad_stack,
+                                     pad_to, round_up, round_up_pow2,
+                                     shape_key, unpad, valid_mask)
+from repro.runtime.dispatch import Dispatcher, make_worker_mesh
+from repro.runtime.pipeline import prefetched, run_pipelined
+
+_SERVICE_NAMES = ("KernelService", "Request", "ServiceConfig")
+
+
+def __getattr__(name):
+    # service imports apps.read_mapper, which imports runtime.bucketing;
+    # loading it lazily keeps `import repro.apps` acyclic.
+    if name in _SERVICE_NAMES:
+        from repro.runtime import service
+        return getattr(service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Autotuner", "seed_from_fig9",
+    "BucketSpec", "group_by_bucket", "group_by_key", "lengths_of",
+    "pad_stack", "pad_to", "round_up", "round_up_pow2", "shape_key",
+    "unpad", "valid_mask",
+    "Dispatcher", "make_worker_mesh",
+    "prefetched", "run_pipelined",
+    "KernelService", "Request", "ServiceConfig",
+]

@@ -1,0 +1,115 @@
+"""Worker-pool dispatcher — "one Squire accelerator pool per core", in JAX.
+
+The paper attaches a pool of low-overhead workers to each host core; kernel
+calls are farmed to the pool instead of running on the core. Here the pool
+is the device mesh: a bucket's batch of same-shape requests is ``vmap``-ed
+(the fine-grain parallel workers) and, when a mesh is installed, the batch
+axis is mapped over devices with ``jax.shard_map`` (one pool per device,
+mirroring ``repro.sharding``'s data axis). On the single-CPU container the
+shard_map path is degenerate but identical in results, so tests exercise it
+and production meshes (``repro.launch.mesh``) drop in unchanged.
+
+Two entry points:
+  * ``run(fn, leaves)``     — batched dispatch: jit(vmap(fn)) [+ shard_map],
+    compiled once per (fn, in_axes, shapes) — the per-bucket compile cache.
+  * ``run_one(fn, leaves)`` — single-request dispatch with the same cache
+    discipline (used by ReadMapper's per-read path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                                    # jax >= 0.6 re-exports at top level
+    _shard_map = jax.shard_map
+except AttributeError:                  # 0.4.x experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def make_worker_mesh(num_workers: Optional[int] = None,
+                     axis: str = "workers") -> Mesh:
+    """1-D mesh over the first ``num_workers`` local devices (default all)."""
+    devs = jax.devices()
+    n = len(devs) if num_workers is None else min(num_workers, len(devs))
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+# Process-wide compile caches: the stage fns are already identity-stable
+# (module-level / lru_cache factories), so every Dispatcher instance —
+# each ReadMapper, each KernelService — shares one compiled program per
+# (fn, in_axes, mesh) instead of retracing per instance.
+
+@functools.lru_cache(maxsize=None)
+def _jit_single(fn):
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_batched(fn, in_axes: Tuple, mesh: Optional[Mesh], axis):
+    vfn = jax.vmap(fn, in_axes=in_axes)
+    if mesh is not None:
+        specs = tuple(P(axis) if ax == 0 else P() for ax in in_axes)
+        vfn = _shard_map(vfn, mesh=mesh, in_specs=specs,
+                         out_specs=P(axis))
+    return jax.jit(vfn)
+
+
+class Dispatcher:
+    """Batched kernel dispatch over an optional device mesh.
+
+    ``mesh=None`` (the default) runs jit(vmap(fn)) on the default device;
+    with a 1-D mesh the vmapped program is shard_mapped over ``axis`` and
+    the batch is padded to a multiple of the worker count (padding rows
+    repeat the last request and are sliced off — results are positionally
+    identical to the vmap path).
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, axis: Optional[str] = None):
+        self.mesh = mesh
+        self.axis = axis or (mesh.axis_names[0] if mesh is not None else None)
+
+    @property
+    def num_workers(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.devices.shape[0]
+
+    # -- dispatch ------------------------------------------------------------
+
+    def run(self, fn, leaves: Sequence, in_axes: Optional[Sequence] = None):
+        """Dispatch one bucket batch. ``leaves`` are positional args of the
+        single-request ``fn``; batched leaves carry the batch on axis 0,
+        shared leaves (in_axes entry None) are broadcast to every worker.
+
+        Returns fn's outputs with a leading batch axis (device arrays —
+        dispatch is async; the pipeline fences with block_until_ready).
+        """
+        leaves = tuple(leaves)
+        axes = tuple(0 for _ in leaves) if in_axes is None else tuple(in_axes)
+        bsz = next(np.asarray(l).shape[0]
+                   for l, ax in zip(leaves, axes) if ax == 0)
+        w = self.num_workers
+        pad = (-bsz) % w
+        if pad:
+            leaves = tuple(
+                np.concatenate([np.asarray(l),
+                                np.repeat(np.asarray(l)[-1:], pad, axis=0)])
+                if ax == 0 else l
+                for l, ax in zip(leaves, axes))
+        out = _jit_batched(fn, axes, self.mesh, self.axis)(*leaves)
+        if pad:
+            out = jax.tree_util.tree_map(lambda x: x[:bsz], out)
+        return out
+
+    def run_one(self, fn, leaves: Sequence, jit: bool = True):
+        """Single-request dispatch; jit-compiled and cached per fn unless
+        ``jit=False`` (tile-jitted eager schedules manage their own cache)."""
+        if not jit:
+            return fn(*leaves)
+        return _jit_single(fn)(*leaves)

@@ -3,6 +3,9 @@
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

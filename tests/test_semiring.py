@@ -8,6 +8,9 @@ tests, not just examples.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -3,6 +3,8 @@ motivating kernels, exact vs dense/numpy oracles for any chunking."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
