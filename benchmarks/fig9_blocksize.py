@@ -23,6 +23,9 @@ from repro.core.dtw import _cell
 
 TILES = (16, 32, 64, 128)
 CHUNKS = (16, 32, 64)
+CHAIN_BLOCKS = (8, 16, 32)
+SORT_CHUNKS = (1, 2, 4)
+BUCKETS = (256, 1024)       # anchor/sort shape buckets swept per-bucket
 
 
 def vmem_dtw_tile(t: int) -> int:
@@ -66,11 +69,51 @@ def bench_ssm_chunks(rows):
                                 f"vmem_bytes={vmem_ssm_chunk(c, d)}"))
 
 
+def bench_chain_blocks(rows):
+    """Chain DP block size, swept PER ANCHOR BUCKET: the best block moves
+    with the bucket (short chains want small blocks), so rows carry the
+    ``@b<bucket>`` suffix and land on per-bucket autotune keys."""
+    from repro.apps import read_mapper as rm
+    from repro.runtime.dispatch import Dispatcher
+    rng = np.random.default_rng(2)
+    d = Dispatcher()
+    for nb in BUCKETS:
+        r = np.sort(rng.integers(0, 50 * nb, (8, nb))).astype(np.int32)
+        q = np.sort(rng.integers(0, 4 * nb, (8, nb))).astype(np.int32)
+        vp = np.ones((8, nb), bool)
+        for blk in CHAIN_BLOCKS:
+            fn = rm._chain_fn(64, "blocked", blk)
+            us = common.time_fn(lambda: d.run(fn, (q, r, vp)))
+            rows.append(common.emit(
+                f"fig9.chain.block{blk}@b{nb}", us,
+                f"depth={common.depth_chain(nb, 64, blk)[1]}"))
+
+
+def bench_sort_chunks(rows):
+    """Radix-sort chunk count per sort bucket (Alg. 1 worker count)."""
+    from repro.core import sort as rsort
+    from repro.runtime.dispatch import Dispatcher
+    rng = np.random.default_rng(3)
+    d = Dispatcher()
+    for nb in BUCKETS:
+        keys = rng.integers(0, 2**32, (8, nb), dtype=np.uint32)
+        vals = np.tile(np.arange(nb, dtype=np.int32), (8, 1))
+        for c in SORT_CHUNKS:
+            def fn(k, v, c=c):
+                return rsort.radix_sort(k, v, num_chunks=c, min_parallel=0)
+            us = common.time_fn(lambda: d.run(fn, (keys, vals)))
+            rows.append(common.emit(
+                f"fig9.sort.chunks{c}@b{nb}", us,
+                f"depth={common.depth_radix(nb, max(c, 1))[1]}"))
+
+
 def run(rows=None):
     rows = rows if rows is not None else []
     print("# fig9: BlockSpec/VMEM design-space sweep (cache-size analogue)")
     bench_dtw_tiles(rows)
     bench_ssm_chunks(rows)
+    bench_chain_blocks(rows)
+    bench_sort_chunks(rows)
     # seed the runtime autotuner: the sweep's fastest tile/chunk become the
     # serving defaults (ServiceConfig.tuned() reads them back).
     try:

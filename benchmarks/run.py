@@ -22,11 +22,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,fig_band,"
-                         "fig_runtime")
+                         "fig_runtime,fig_serve")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig6_kernels, fig7_sync, fig8_end2end,
-                            fig9_blocksize, fig_band, fig_runtime)
+                            fig9_blocksize, fig_band, fig_runtime,
+                            fig_serve)
     suites = {
         "fig6": fig6_kernels.run,
         "fig7": fig7_sync.run,
@@ -34,6 +35,7 @@ def main(argv=None) -> int:
         "fig9": fig9_blocksize.run,
         "fig_band": fig_band.run,
         "fig_runtime": fig_runtime.run,
+        "fig_serve": fig_serve.run,
     }
     want = args.only.split(",") if args.only else list(suites)
 

@@ -71,6 +71,11 @@ def blockwise_attention(q: Array, k: Array, v: Array, q_pos: Array,
     skv, kv_heads = k.shape[1], k.shape[2]
     grp = h // kv_heads
     scale = hd ** -0.5
+    # MXU input dtype: bf16 for bf16 models (halves score traffic), but a
+    # model running in fp32 must get fp32 scores — MoE routing sits on
+    # near-ties that bf16 score noise (~1e-3) flips between the cached
+    # decode path and the full forward (olmoe divergence, ROADMAP item).
+    mxu_dt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
 
     blk = min(kv_block, skv)
     pad = (-skv) % blk
@@ -97,7 +102,7 @@ def blockwise_attention(q: Array, k: Array, v: Array, q_pos: Array,
         # bf16 MXU inputs with fp32 accumulation (flash-attention numerics;
         # §Perf MoE-cell iteration 2 — halves the dominant score traffic)
         s = jnp.einsum("bkgsh,bkth->bkgst",
-                       qr.astype(jnp.bfloat16), kblk.astype(jnp.bfloat16),
+                       qr.astype(mxu_dt), kblk.astype(mxu_dt),
                        preferred_element_type=jnp.float32)  # (B,KV,G,Sq,blk)
         ok = (posb[:, None, None, None, :] <=
               q_pos[:, None, None, :, None])            # causal
@@ -169,9 +174,10 @@ def banded_attention(q: Array, k: Array, v: Array, q_pos: Array,
         [jnp.full_like(pb[:, :1], -1), pb[:, :-1]], axis=1)
     p_band = jnp.concatenate([p_band, pb], axis=2)      # (b, nb, 2w)
 
-    qg = (qb.reshape(b, nb, wb, kvh, grp, hd).astype(jnp.bfloat16))
+    mxu_dt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+    qg = (qb.reshape(b, nb, wb, kvh, grp, hd).astype(mxu_dt))
     sc = jnp.einsum("bnqkgh,bntkh->bnkgqt", qg,
-                    k_band.astype(jnp.bfloat16),
+                    k_band.astype(mxu_dt),
                     preferred_element_type=jnp.float32) * scale
     ok = (p_band[:, :, None, None, None, :] <=
           pb[:, :, None, None, :, None])                # causal
@@ -189,18 +195,28 @@ def banded_attention(q: Array, k: Array, v: Array, q_pos: Array,
 
 class KVCache(NamedTuple):
     """Static-shape decode cache. `pos`: absolute position per slot
-    (-1 empty). Local layers allocate `window` slots (ring buffer)."""
+    (-1 empty). Local layers allocate `window` slots (ring buffer).
+
+    Two position layouts:
+      * shared  — ``pos: (S,)``: every batch row decodes at the same
+        position (the classic synchronous-batch serve path).
+      * per-row — ``pos: (B, S)``: each row carries its own clock, which
+        is what continuous batching needs (serve.scheduler slots decode
+        at different depths in one fused step).
+    """
     k: Array      # (B, S, KV, hd)
     v: Array      # (B, S, KV, hd)
-    pos: Array    # (S,) int32
+    pos: Array    # (S,) int32, or (B, S) int32 per-row
 
 
 def make_cache(batch: int, slots: int, kv_heads: int, head_dim: int,
-               dtype=jnp.bfloat16) -> KVCache:
+               dtype=jnp.bfloat16, per_row_pos: bool = False) -> KVCache:
+    pos = (jnp.full((batch, slots), -1, jnp.int32) if per_row_pos
+           else jnp.full((slots,), -1, jnp.int32))
     return KVCache(
         k=jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
         v=jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
-        pos=jnp.full((slots,), -1, jnp.int32))
+        pos=pos)
 
 
 def _shard_cache(c: KVCache) -> KVCache:
@@ -214,15 +230,42 @@ def _shard_cache(c: KVCache) -> KVCache:
 
 def cache_update(cache: KVCache, k_new: Array, v_new: Array,
                  position: Array) -> KVCache:
-    """Insert one step (Sq=1). Ring addressing: slot = pos % slots."""
+    """Insert new entries. Ring addressing: slot = pos % slots.
+
+    ``position`` scalar: legacy single-step path (Sq=1, shared clock).
+    ``position`` vector (B,): per-row path — k_new/v_new carry a chunk of
+    Sq >= 1 consecutive tokens per row starting at ``position[b]``
+    (Sq == 1 is plain per-slot decode; Sq > 1 is chunked prefill).
+    Requires the per-row ``pos: (B, S)`` cache layout.
+    """
     slots = cache.k.shape[1]
-    slot = position % slots
-    k = jax.lax.dynamic_update_slice(
-        cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(
-        cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
-    pos = jax.lax.dynamic_update_slice(
-        cache.pos, position[None].astype(jnp.int32), (slot,))
+    if position.ndim == 0:
+        slot = position % slots
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+        pos = jax.lax.dynamic_update_slice(
+            cache.pos, position[None].astype(jnp.int32), (slot,))
+        return _shard_cache(KVCache(k, v, pos))
+
+    assert cache.pos.ndim == 2, \
+        "vector positions need the per-row pos=(B, S) cache layout"
+    b, sq = k_new.shape[0], k_new.shape[1]
+    # chunk longer than the ring: only the last `slots` tokens survive —
+    # drop the rest up front so the scatter never writes a slot twice
+    # (duplicate scatter indices with different values are unordered).
+    if sq > slots:
+        k_new, v_new = k_new[:, -slots:], v_new[:, -slots:]
+        position = position + (sq - slots)
+        sq = slots
+    pos_mat = (position[:, None]
+               + jnp.arange(sq, dtype=jnp.int32)[None, :])   # (B, Sq)
+    slot = pos_mat % slots
+    bidx = jnp.arange(b)[:, None]
+    k = cache.k.at[bidx, slot].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(v_new.astype(cache.v.dtype))
+    pos = cache.pos.at[bidx, slot].set(pos_mat)
     return _shard_cache(KVCache(k, v, pos))
 
 
@@ -299,11 +342,32 @@ def attention(params, cfg: AttnConfig, x: Array, positions: Array,
                      if make_cache_slots else None)
     else:
         new_cache = cache_update(cache, k, v, position_scalar)
-        kv_pos = jnp.broadcast_to(new_cache.pos[None, :],
-                                  (b, new_cache.pos.shape[0]))
-        out = blockwise_attention(q, new_cache.k.astype(dt),
-                                  new_cache.v.astype(dt), positions, kv_pos,
-                                  window=cfg.window, kv_block=cfg.kv_block)
+        if position_scalar is not None and position_scalar.ndim >= 1 \
+                and s > 1:
+            # per-row chunked prefill: attend over the PRE-update cache
+            # plus the appended chunk — mid-chunk queries may need ring
+            # entries the chunk's own tail just evicted, and absolute-
+            # position masking makes the concat exact (causal within the
+            # chunk for free). cache.pos is (B, S): cache_update already
+            # requires the per-row layout for vector positions.
+            kv_pos = jnp.concatenate(
+                [cache.pos, positions.astype(jnp.int32)], axis=1)
+            k_cat = jnp.concatenate([cache.k.astype(dt), k], axis=1)
+            v_cat = jnp.concatenate([cache.v.astype(dt), v], axis=1)
+            out = blockwise_attention(q, k_cat, v_cat, positions, kv_pos,
+                                      window=cfg.window,
+                                      kv_block=cfg.kv_block)
+        else:
+            # single-token step (shared or per-row clock): attend over
+            # the post-update cache — the only entry a one-token write
+            # can evict sits exactly `window` back, already masked out.
+            kv_pos = (new_cache.pos if new_cache.pos.ndim == 2 else
+                      jnp.broadcast_to(new_cache.pos[None, :],
+                                       (b, new_cache.pos.shape[0])))
+            out = blockwise_attention(q, new_cache.k.astype(dt),
+                                      new_cache.v.astype(dt), positions,
+                                      kv_pos, window=cfg.window,
+                                      kv_block=cfg.kv_block)
     out = shard_act(out, "batch", "seq", "heads", "head_dim")
     out = out.reshape(b, s, h * hd) @ params["wo"].astype(dt)
     return out, new_cache

@@ -152,16 +152,24 @@ def _apply_layer(p, cfg: ModelConfig, spec: LayerSpec, x: Array,
     elif spec.mixer == "rwkv":
         rcfg = _rwkv_cfg(cfg)
         if mode == "decode":
-            y, st = ssm.rwkv_time_mix_decode(p["rwkv"], rcfg, h,
-                                             cache["rwkv"])
+            if h.shape[1] == 1:
+                y, st = ssm.rwkv_time_mix_decode(p["rwkv"], rcfg, h,
+                                                 cache["rwkv"])
+            else:       # chunked prefill: state-carried chunk-parallel scan
+                y, st = ssm.rwkv_time_mix(p["rwkv"], rcfg, h,
+                                          cache["rwkv"])
         else:
             y, st = ssm.rwkv_time_mix(p["rwkv"], rcfg, h, None)
         new_cache = {"rwkv": st}
     elif spec.mixer == "mamba":
         mcfg = _mamba_cfg(cfg)
         if mode == "decode":
-            y, st = ssm.mamba_block_decode(p["mamba"], mcfg, h,
-                                           cache["mamba"])
+            if h.shape[1] == 1:
+                y, st = ssm.mamba_block_decode(p["mamba"], mcfg, h,
+                                               cache["mamba"])
+            else:       # chunked prefill continuation
+                y, st = ssm.mamba_block(p["mamba"], mcfg, h,
+                                        cache["mamba"])
         else:
             y, st = ssm.mamba_block(p["mamba"], mcfg, h, None)
         new_cache = {"mamba": st}
@@ -213,7 +221,13 @@ def apply_model(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
 
     if positions is None:
         if mode == "decode":
-            positions = jnp.broadcast_to(pos_scalar, (b, 1)).astype(jnp.int32)
+            # pos_scalar: scalar (shared clock) or (B,) vector — per-row
+            # clocks for continuous batching; x may carry a chunk (S >= 1)
+            # of consecutive tokens starting at that position per row.
+            p0 = jnp.asarray(pos_scalar, jnp.int32)
+            if p0.ndim == 0:
+                p0 = jnp.broadcast_to(p0, (b,))
+            positions = p0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
         else:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
                                          (b, s))
@@ -251,8 +265,8 @@ def apply_model(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
     new_caches = ys.get("caches")
 
     x = L.rmsnorm(params["final_norm"], x)
-    if mode == "prefill":
-        x = x[:, -1:]
+    if mode == "prefill" or (mode == "decode" and s > 1):
+        x = x[:, -1:]       # chunk steps only ever need the last logits
     if cfg.tie_embeddings and cfg.input_mode == "tokens":
         table = params["embed"]["table"]
     else:
@@ -266,19 +280,29 @@ def apply_model(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
 # decode-cache allocation (static shapes for serving / dry-run)
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg: ModelConfig, batch: int, slots: int):
-    """Zero caches for decode: dict p<i> -> stacked-over-periods leaves."""
+def init_caches(cfg: ModelConfig, batch: int, slots: int,
+                per_slot_pos: bool = False):
+    """Zero caches for decode: dict p<i> -> stacked-over-periods leaves.
+
+    ``per_slot_pos=True`` allocates the per-row KV position layout
+    (pos: (periods, batch, slots)) so every batch row carries its own
+    decode clock — the layout serve.slots.SlotManager pools. With it,
+    EVERY cache leaf has the batch axis at position 1, which is what
+    makes slot gather/scatter a single-axis indexing op.
+    """
     np_, d = cfg.num_periods, cfg.d_model
     caches = {}
     for i, spec in enumerate(cfg.pattern):
         if spec.mixer == "attn":
             sl = min(slots, spec.window) if spec.window else slots
+            pos = (jnp.full((np_, batch, sl), -1, jnp.int32)
+                   if per_slot_pos else jnp.full((np_, sl), -1, jnp.int32))
             caches[f"p{i}"] = {"attn": attention.KVCache(
                 k=jnp.zeros((np_, batch, sl, cfg.num_kv_heads,
                              cfg.head_dim), jnp.bfloat16),
                 v=jnp.zeros((np_, batch, sl, cfg.num_kv_heads,
                              cfg.head_dim), jnp.bfloat16),
-                pos=jnp.full((np_, sl), -1, jnp.int32))}
+                pos=pos)}
         elif spec.mixer == "rwkv":
             h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
             caches[f"p{i}"] = {

@@ -49,6 +49,20 @@ class Autotuner:
         entry = self._cache.get(key)
         return entry["value"] if entry else default
 
+    def get_bucketed(self, key: str, bucket: int, default=None):
+        """Per-bucket knob lookup: ``<kernel>.<knob>@b<bucket>`` first,
+        then the per-kernel ``<kernel>.<knob>`` entry, then ``default``.
+
+        The paper tunes one design point per kernel; serving sees the
+        same kernel at many shape buckets, and the best block/chunk moves
+        with the bucket (a 64-anchor chain wants a smaller block than a
+        4096-anchor one), so sweeps persist per-bucket keys and the
+        service resolves through this fallback chain."""
+        got = self.get(f"{key}@b{int(bucket)}")
+        if got is not None:
+            return got
+        return self.get(key, default)
+
     def put(self, key: str, value, us: Optional[float] = None):
         self._cache[key] = {"value": value, "us": us, "when": time.time()}
         self.save()
@@ -99,23 +113,26 @@ class Autotuner:
 # --------------------------------------------------------------------------
 
 _FIG9_ROW = re.compile(r"^fig9\.(?P<kernel>\w+)\.(?P<knob>[a-z]+)"
-                       r"(?P<value>\d+),(?P<us>[0-9.]+),")
+                       r"(?P<value>\d+)(?P<bucket>@b\d+)?,(?P<us>[0-9.]+),")
 
 
 def seed_from_fig9(rows: Iterable[str],
                    path: Optional[str] = None) -> Dict[str, int]:
-    """Parse ``fig9.<kernel>.<knob><value>,<us>,...`` benchmark rows and
-    persist the fastest value per ``<kernel>.<knob>`` knob.
+    """Parse ``fig9.<kernel>.<knob><value>[@b<bucket>],<us>,...`` rows and
+    persist the fastest value per ``<kernel>.<knob>[@b<bucket>]`` knob.
 
     Called by benchmarks/fig9_blocksize.py after its sweep, so running the
     paper's design-space exploration tunes the serving runtime for free.
+    Bucketed rows (``@b<n>`` suffix — chain block / sort chunks swept per
+    shape bucket) land on per-bucket keys that
+    ``Autotuner.get_bucketed`` resolves ahead of the per-kernel entry.
     """
     best: Dict[str, tuple] = {}
     for row in rows:
         m = _FIG9_ROW.match(row)
         if not m:
             continue
-        key = f"{m['kernel']}.{m['knob']}"
+        key = f"{m['kernel']}.{m['knob']}{m['bucket'] or ''}"
         us = float(m["us"])
         if key not in best or us < best[key][1]:
             best[key] = (int(m["value"]), us)

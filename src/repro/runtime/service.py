@@ -241,8 +241,14 @@ class ChainAdapter(KernelAdapter):
         return qp, rp, vp
 
     def launch(self, key, leaves):
-        fn = rm._chain_fn(self.cfg.chain_T, self.cfg.chain_mode,
-                          self.cfg.chain_block)
+        block = self.cfg.chain_block
+        if self.cfg.chain_mode == "blocked":
+            # per-bucket autotuned block (fig9 sweep); only the blocked
+            # schedule consumes a block size — fission/sequential ignore
+            # it, so the lookup would be misleading there
+            block = int(self.svc.tuner.get_bucketed("chain.block", key[0],
+                                                    block))
+        fn = rm._chain_fn(self.cfg.chain_T, self.cfg.chain_mode, block)
         return self.svc.dispatcher.run(fn, leaves)
 
     def collect(self, key, out, payloads):
@@ -335,8 +341,9 @@ class SortAdapter(KernelAdapter):
         return keys, vals
 
     def launch(self, key, leaves):
-        return self.svc.dispatcher.run(_sort_fn(self.cfg.sort_chunks),
-                                       leaves)
+        chunks = self.svc.tuner.get_bucketed("sort.chunks", key[0],
+                                             self.cfg.sort_chunks)
+        return self.svc.dispatcher.run(_sort_fn(int(chunks)), leaves)
 
     def collect(self, key, out, payloads):
         keys, vals = out
@@ -530,8 +537,38 @@ class MapperAdapter(KernelAdapter):
         return mats
 
 
+class GenerateAdapter(KernelAdapter):
+    """payload {prompt[, max_new_tokens, temperature]} -> {"tokens",
+    "reason"}: LM decode traffic through the same front door as the
+    dependency-bound kernels (ROADMAP serving-integration item).
+
+    Decode is the request-scale 1-D recurrence, so batching happens in
+    *time* (continuous batching), not in the request list: the adapter
+    forwards the whole bulk to the attached ``serve.Scheduler``, whose
+    slot pool interleaves prefill/decode/retire per step. Attach with
+    ``KernelService(lm=Scheduler(...))``."""
+
+    name = "generate"
+
+    def run(self, payloads: List[Dict]) -> List[Any]:
+        sched = self.svc.lm
+        if sched is None:
+            raise ValueError(
+                "generate kernel needs KernelService(lm=serve.Scheduler)")
+        rids = []
+        for p in payloads:
+            rids.extend(sched.submit(
+                [np.asarray(p["prompt"], np.int32)],
+                max_new_tokens=p.get("max_new_tokens"),
+                temperature=p.get("temperature")))
+        sched.drain()
+        # pop: a long-lived service must not accumulate Completions
+        done = [sched.results.pop(r) for r in rids]
+        return [{"tokens": c.tokens, "reason": c.reason} for c in done]
+
+
 _ADAPTERS = (ChainAdapter, SWAdapter, DTWAdapter, SortAdapter, SeedAdapter,
-             ScanAdapter, MapperAdapter)
+             ScanAdapter, MapperAdapter, GenerateAdapter)
 
 
 class KernelService:
@@ -540,11 +577,15 @@ class KernelService:
 
     def __init__(self, cfg: ServiceConfig = ServiceConfig(),
                  reference: Optional[np.ndarray] = None,
-                 dispatcher: Optional[Dispatcher] = None):
+                 dispatcher: Optional[Dispatcher] = None,
+                 lm: Optional[Any] = None,
+                 tuner: Optional[Autotuner] = None):
         self.cfg = cfg
         self.dispatcher = dispatcher or Dispatcher()
         self.reference = (None if reference is None
                           else np.asarray(reference, np.int8))
+        self.lm = lm            # serve.Scheduler for the 'generate' kernel
+        self.tuner = tuner or Autotuner()
         self._index = None
         self._adapters: Dict[str, KernelAdapter] = {
             a.name: a(self) for a in _ADAPTERS}

@@ -1,5 +1,21 @@
-from repro.serve.engine import (cache_shardings, make_decode_step,
-                                make_prefill_step, sample_token)
+"""repro.serve — LM serving: stateless engine steps + continuous batching.
 
-__all__ = ["cache_shardings", "make_decode_step", "make_prefill_step",
-           "sample_token"]
+  * engine    — prefill / decode / chunked-prefill step builders, per-slot
+                position vectors, sampling, per-request ``generate``.
+  * slots     — SlotManager: the fixed pool of static-shape cache slots.
+  * scheduler — Scheduler: admit -> chunk-prefill -> fused decode ->
+                retire continuous batching, plus the memoizing
+                RequestCache for zipfian traffic.
+"""
+
+from repro.serve.engine import (cache_shardings, generate, make_chunk_step,
+                                make_decode_step, make_prefill_step,
+                                make_slot_decode_step, sample_token)
+from repro.serve.scheduler import (Completion, RequestCache, Scheduler,
+                                   SchedulerConfig)
+from repro.serve.slots import SlotManager
+
+__all__ = ["cache_shardings", "generate", "make_chunk_step",
+           "make_decode_step", "make_prefill_step", "make_slot_decode_step",
+           "sample_token", "Completion", "RequestCache", "Scheduler",
+           "SchedulerConfig", "SlotManager"]

@@ -9,6 +9,7 @@ context length (the long_500k story).
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -20,12 +21,25 @@ from repro.sharding import named_sharding
 
 
 def sample_token(logits: jnp.ndarray, key=None,
-                 temperature: float = 0.0) -> jnp.ndarray:
-    """logits: (B, 1, V) -> (B,) int32. temperature 0 = greedy."""
+                 temperature=0.0) -> jnp.ndarray:
+    """logits: (B, 1, V) -> (B,) int32. temperature 0 = greedy.
+
+    ``temperature`` may be a python float (shared) or a (B,) array —
+    per-slot temperatures for continuous batching. The array path uses
+    the Gumbel-max identity (categorical(l/T) == argmax(l/T + g)) with a
+    per-row where() so greedy rows stay exactly argmax.
+    """
     lg = logits[:, -1].astype(jnp.float32)
-    if temperature <= 0.0 or key is None:
-        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    if isinstance(temperature, (int, float)):
+        if temperature <= 0.0 or key is None:
+            return greedy
+        return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+    temps = jnp.asarray(temperature, jnp.float32)
+    g = jax.random.gumbel(key, lg.shape, jnp.float32)
+    scaled = lg / jnp.maximum(temps, 1e-6)[:, None] + g
+    sampled = jnp.argmax(scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)
 
 
 def make_prefill_step(cfg: ModelConfig, cache_slots: int):
@@ -61,6 +75,115 @@ def make_decode_step(cfg: ModelConfig, temperature: float = 0.0):
 
 
 # ---------------------------------------------------------------------------
+# continuous-batching steps: per-slot position vectors (serve.scheduler)
+# ---------------------------------------------------------------------------
+
+def make_slot_decode_step(cfg: ModelConfig):
+    """decode(params, caches, tokens, pos, temps, key) ->
+    (next_tok, logits, caches) with PER-SLOT clocks.
+
+    tokens: (B, 1) int32; pos: (B,) int32 — each row's absolute position;
+    temps: (B,) fp32 per-slot temperature (0 = greedy). Caches must use
+    the per-row position layout (init_caches(per_slot_pos=True)).
+    """
+
+    def decode(params, caches, tokens: jnp.ndarray, pos: jnp.ndarray,
+               temps: jnp.ndarray, key: jnp.ndarray):
+        logits, _, caches = T.apply_model(
+            params, cfg, tokens=tokens, mode="decode", caches=caches,
+            pos_scalar=pos)
+        nxt = sample_token(logits, key, temps)
+        return nxt, logits, caches
+
+    return decode
+
+
+def make_chunk_step(cfg: ModelConfig):
+    """chunk(params, caches, tokens, pos) -> (last_logits, caches).
+
+    Chunked prefill: tokens (B, C) are C consecutive prompt tokens per
+    row, starting at absolute position pos[b]. Attention appends the
+    chunk to the cache and masks by absolute position (causal within the
+    chunk for free); SSM layers run the state-carried chunk-parallel
+    scan. Every row must carry a FULL chunk — exactness comes from never
+    padding inside a chunk (remainder tokens go through the decode ramp).
+    """
+
+    def chunk(params, caches, tokens: jnp.ndarray, pos: jnp.ndarray):
+        logits, _, caches = T.apply_model(
+            params, cfg, tokens=tokens, mode="decode", caches=caches,
+            pos_scalar=pos)
+        return logits, caches
+
+    return chunk
+
+
+# ModelConfig is a frozen dataclass, so jitted step programs are shared
+# process-wide per config (one compile per (cfg, shape) — a new Scheduler
+# or generate() call never retraces; same discipline as runtime.dispatch).
+# The caches argument is donated: the pool is the scarce resource, and
+# without donation every step materializes a second full copy of it.
+# Callers must drop their reference (`_, caches = step(params, caches, …)`).
+
+@functools.lru_cache(maxsize=None)
+def jit_chunk_step(cfg: ModelConfig):
+    return jax.jit(make_chunk_step(cfg), donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_slot_decode_step(cfg: ModelConfig):
+    return jax.jit(make_slot_decode_step(cfg), donate_argnums=(1,))
+
+
+def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
+             *, temperature: float = 0.0, eos_token: Optional[int] = None,
+             prefill_chunk: int = 32, cache_slots: int = 0,
+             key: Optional[jnp.ndarray] = None):
+    """Per-request generation — the scheduler's single-request oracle.
+
+    Consumes the prompt with the SAME chunked-prefill + decode-ramp
+    policy the continuous scheduler uses (full ``prefill_chunk`` chunks
+    over the first L-1 tokens, remainder teacher-forced through decode),
+    so a Scheduler run is token-identical to mapping this over requests
+    under greedy sampling. Returns (tokens: np-able (g,) int32, reason).
+    """
+    import numpy as np
+
+    prompt = jnp.asarray(prompt, jnp.int32)
+    ln = int(prompt.shape[0])
+    assert ln >= 1, "empty prompt"
+    slots = cache_slots or (ln + max_new_tokens)
+    caches = T.init_caches(cfg, batch=1, slots=slots, per_slot_pos=True)
+    chunk_fn = jit_chunk_step(cfg)
+    decode_fn = jit_slot_decode_step(cfg)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    ctx = 0
+    while ln - 1 - ctx >= prefill_chunk:
+        toks = prompt[None, ctx:ctx + prefill_chunk]
+        _, caches = chunk_fn(params, caches, toks,
+                             jnp.asarray([ctx], jnp.int32))
+        ctx += prefill_chunk
+
+    temps = jnp.asarray([temperature], jnp.float32)
+    out, reason, last = [], "length", None
+    while len(out) < max_new_tokens:
+        tok = prompt[ctx] if ctx < ln else last
+        key, ks = jax.random.split(key)
+        nxt, _, caches = decode_fn(params, caches, tok.reshape(1, 1),
+                                   jnp.asarray([ctx], jnp.int32), temps, ks)
+        ctx += 1
+        last = nxt[0]
+        if ctx >= ln:                       # prompt consumed: real sample
+            out.append(int(last))
+            if eos_token is not None and out[-1] == eos_token:
+                reason = "eos"
+                break
+    return np.asarray(out, np.int32), reason
+
+
+# ---------------------------------------------------------------------------
 # cache shardings (mirror transformer.init_caches structure)
 # ---------------------------------------------------------------------------
 
@@ -87,7 +210,9 @@ def cache_shardings(cfg: ModelConfig, cache_shapes: Any):
                      "cache_head_dim"),
                 v=ns(kv.v, "cache_batch", "cache_seq", "cache_kv_heads",
                      "cache_head_dim"),
-                pos=ns(kv.pos, None))
+                # shared pos is (periods, S); per-row pos (periods, B, S)
+                pos=(ns(kv.pos, "cache_batch", None)
+                     if len(kv.pos.shape) == 3 else ns(kv.pos, None)))
         elif spec.mixer == "rwkv":
             st = c["rwkv"]
             entry["rwkv"] = {

@@ -1,0 +1,328 @@
+"""Continuous-batching LM scheduler on the serve engine's slot pool.
+
+Decode is serving's request-scale 1-D dependency-bound recurrence: each
+step consumes the previous step's cache. A static batch pads every
+request to the slowest member; this scheduler instead admits, interleaves
+and retires requests *per decode step* (the paper's fine-grain scheduling
+argument applied to traffic):
+
+  admit    — FCFS queue; a request claims a free cache slot the moment
+             one exists (SlotManager.alloc zeroes the slot rows).
+  prefill  — prompts are consumed as full ``prefill_chunk`` chunks
+             through the batched chunk step (exact: chunks are never
+             padded), the < chunk remainder rides the decode ramp as
+             teacher-forced single tokens.
+  decode   — ONE fused step over the whole pool each tick: per-slot
+             position vector, per-slot temperature, masked sampling;
+             free slots compute junk that is never read.
+  retire   — EOS / max-tokens eviction frees the slot immediately; the
+             next queued request is admitted on the same tick.
+
+Under greedy sampling the emitted streams are token-identical to
+per-request ``engine.generate`` (same chunk policy, same kernels) for
+dense/SSM architectures. MoE capacity is shared across the pool batch,
+so MoE token streams can legitimately diverge from B=1 at tight capacity
+(documented per-group semantics, models/moe.py).
+
+A memoizing request cache (prompt+params -> tokens) fronts the pool for
+zipfian traffic — deterministic (greedy) requests only; hit/miss
+counters feed the fig_serve benchmark.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime import bucketing
+from repro.serve import engine
+from repro.serve.slots import SlotManager
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    num_slots: int = 8          # pool width B (the fused decode batch)
+    max_len: int = 256          # cache slots per request (prompt + gen)
+    prefill_chunk: int = 32     # C: full-chunk prefill quantum
+    max_new_tokens: int = 32    # default generation budget
+    temperature: float = 0.0    # default sampling temperature (0 = greedy)
+    eos_token: Optional[int] = None
+    cache_requests: bool = True
+    request_cache_size: int = 1024
+    seed: int = 0
+    # 'continuous': admit whenever a slot is free (per-step interleaving).
+    # 'static': admit a full batch only when the pool is EMPTY — the
+    # pad-to-slowest baseline fig_serve compares against.
+    admit: str = "continuous"
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side per-slot request state (the validity mask's payload)."""
+    rid: int
+    prompt: np.ndarray          # int32 (L,)
+    max_new_tokens: int
+    temperature: float
+    ctx: int = 0                # tokens consumed into the slot's cache
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray          # int32 (g,)
+    reason: str                 # 'eos' | 'length' | 'cached'
+    prompt_len: int
+    submit_t: float
+    finish_t: float
+
+    @property
+    def latency(self) -> float:
+        return self.finish_t - self.submit_t
+
+
+class RequestCache:
+    """LRU memo: (prompt, params) -> completed tokens (greedy only).
+
+    Zipfian traffic repeats a few hot prompts; serving them from the memo
+    costs zero decode steps (ROADMAP 'runtime caching' item). Sampled
+    (temperature > 0) requests bypass the cache — they are not
+    deterministic functions of the key.
+    """
+
+    def __init__(self, maxsize: int = 1024):
+        self.maxsize = maxsize
+        self._d: "collections.OrderedDict[Tuple, Tuple[np.ndarray, str]]" \
+            = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(prompt: np.ndarray, max_new_tokens: int,
+            eos_token: Optional[int]) -> Tuple:
+        return (bytes(np.asarray(prompt, np.int32).tobytes()),
+                max_new_tokens, eos_token)
+
+    def get(self, key: Tuple) -> Optional[Tuple[np.ndarray, str]]:
+        got = self._d.get(key)
+        if got is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return got
+
+    def put(self, key: Tuple, tokens: np.ndarray, reason: str):
+        self._d[key] = (tokens, reason)
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class Scheduler:
+    """submit(prompts) / step() / drain() continuous-batching engine."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 sched: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.sched = sched
+        self.slots = SlotManager(cfg, sched.num_slots, sched.max_len)
+        # process-wide jit cache: a fresh Scheduler never retraces
+        self._decode_fn = engine.jit_slot_decode_step(cfg)
+        self._queue: "collections.deque[_Slot]" = collections.deque()
+        self._by_slot: Dict[int, _Slot] = {}
+        self._inflight: Dict[Tuple, List[int]] = {}
+        self._fresh: List[int] = []     # finished, not yet handed out
+        self._submit_t: Dict[int, float] = {}
+        self.results: Dict[int, Completion] = {}
+        self.request_cache = RequestCache(sched.request_cache_size)
+        self._key = jax.random.PRNGKey(sched.seed)
+        self._next_rid = 0
+        self.counters = collections.Counter()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, prompts: Sequence, max_new_tokens: Optional[int] = None,
+               temperature: Optional[float] = None) -> List[int]:
+        """Enqueue prompts (FCFS); returns request ids. Cached greedy
+        repeats complete immediately without touching the pool."""
+        mnt = self.sched.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens
+        temp = self.sched.temperature if temperature is None else temperature
+        rids = []
+        assert mnt >= 1, "max_new_tokens must be >= 1"
+        for p in prompts:
+            p = np.asarray(p, np.int32).reshape(-1)
+            assert 1 <= len(p) <= self.sched.max_len - mnt, \
+                f"prompt length {len(p)} + max_new {mnt} exceeds " \
+                f"max_len {self.sched.max_len}"
+            rid = self._next_rid
+            self._next_rid += 1
+            self._submit_t[rid] = time.time()
+            self.counters["submitted"] += 1
+            if self.sched.cache_requests and temp <= 0.0:
+                key = RequestCache.key(p, mnt, self.sched.eos_token)
+                if key in self._inflight:
+                    # coalesce: an identical request is already queued or
+                    # decoding — ride its completion (memo-layer hit: a
+                    # zipfian burst of one hot prompt decodes ONCE)
+                    self._inflight[key].append(rid)
+                    self.request_cache.hits += 1
+                    rids.append(rid)
+                    continue
+                got = self.request_cache.get(key)
+                if got is not None:
+                    toks, _ = got
+                    self._finish(rid, len(p), toks.copy(), "cached")
+                    rids.append(rid)
+                    continue
+                self._inflight[key] = []
+            self._queue.append(_Slot(rid=rid, prompt=p, max_new_tokens=mnt,
+                                     temperature=temp))
+            rids.append(rid)
+        return rids
+
+    # -- the scheduling loop -------------------------------------------------
+
+    def step(self) -> List[Completion]:
+        """One tick: admit, chunk-prefill, one fused decode, retire.
+        Returns every completion not yet handed out — including requests
+        finished at submit time by the request cache."""
+        self._admit()
+        self._prefill_chunks()
+        self._decode_once()
+        self.counters["steps"] += 1
+        out = [self.results[rid] for rid in self._fresh]
+        self._fresh.clear()
+        return out
+
+    def drain(self) -> List[Completion]:
+        """Run until queue and pool are empty; all completions, rid order.
+
+        ``results`` accumulates until the caller removes entries — a
+        long-lived scheduler (KernelService front door) should
+        ``results.pop(rid)`` once a completion is delivered."""
+        while self._queue or self._by_slot:
+            self.step()
+        self._fresh.clear()     # drain hands everything out below
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def live(self) -> int:
+        return len(self._by_slot)
+
+    def stats(self) -> dict:
+        return {**{k: int(v) for k, v in self.counters.items()},
+                "cache_hits": self.request_cache.hits,
+                "cache_misses": self.request_cache.misses,
+                "cache_hit_rate": round(self.request_cache.hit_rate, 4),
+                **self.slots.stats()}
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self):
+        if self.sched.admit == "static" and self._by_slot:
+            return      # static batching: wait for the whole batch
+        while self._queue and self.slots.free_count:
+            st = self._queue.popleft()
+            slot = self.slots.alloc(st.rid)
+            self._by_slot[slot] = st
+            self.counters["admitted"] += 1
+
+    def _prefill_chunks(self):
+        """Consume every pending full chunk (first L-1 prompt tokens only;
+        the final token always rides the decode step so decode is the one
+        sampler). Bucketed pow2 gather keeps compiles O(log pool)."""
+        ch = self.sched.prefill_chunk
+        while True:
+            need = [s for s, st in sorted(self._by_slot.items())
+                    if len(st.prompt) - 1 - st.ctx >= ch]
+            if not need:
+                return
+            m = len(need)
+            bsz = bucketing.round_up_pow2(m, 1)
+            idx = need + [need[0]] * (bsz - m)      # pad-by-repeat
+            toks = np.stack([
+                self._by_slot[s].prompt[self._by_slot[s].ctx:
+                                        self._by_slot[s].ctx + ch]
+                for s in idx])
+            pos = np.asarray([self._by_slot[s].ctx for s in idx], np.int32)
+            # pad rows duplicate row 0 bit-for-bit -> scatter deterministic
+            self.slots.run_chunk(self.params, idx, toks, pos)
+            for s in need:
+                self._by_slot[s].ctx += ch
+            self.counters["chunk_steps"] += 1
+            self.counters["prefill_tokens"] += m * ch
+
+    def _decode_once(self):
+        """One fused decode over the FULL pool: per-slot tokens, positions
+        and temperatures; free slots run on masked junk (never read)."""
+        if not self._by_slot:
+            return
+        b = self.slots.num_slots
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        for s, st in self._by_slot.items():
+            toks[s, 0] = (st.prompt[st.ctx] if st.ctx < len(st.prompt)
+                          else st.out[-1])
+            pos[s] = st.ctx
+            temps[s] = st.temperature
+        self._key, ks = jax.random.split(self._key)
+        nxt, _, caches = self._decode_fn(
+            self.params, self.slots.caches, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(temps), ks)
+        self.slots.caches = caches
+        nxt = np.asarray(nxt)
+        self.counters["decode_steps"] += 1
+
+        for s in sorted(self._by_slot):
+            st = self._by_slot[s]
+            st.ctx += 1
+            if st.ctx < len(st.prompt):
+                continue                            # still teacher-forcing
+            tok = int(nxt[s])
+            st.out.append(tok)
+            self.counters["generated_tokens"] += 1
+            eos = (self.sched.eos_token is not None
+                   and tok == self.sched.eos_token)
+            if eos or len(st.out) >= st.max_new_tokens:
+                self._retire(s, "eos" if eos else "length")
+
+    def _retire(self, slot: int, reason: str):
+        st = self._by_slot.pop(slot)
+        self.slots.release(slot)
+        toks = np.asarray(st.out, np.int32)
+        if self.sched.cache_requests and st.temperature <= 0.0:
+            key = RequestCache.key(st.prompt, st.max_new_tokens,
+                                   self.sched.eos_token)
+            self.request_cache.put(key, toks, reason)
+            for rid in self._inflight.pop(key, ()):     # coalesced waiters
+                self._finish(rid, len(st.prompt), toks.copy(), "cached")
+        self._finish(st.rid, len(st.prompt), toks, reason)
+
+    def _finish(self, rid: int, prompt_len: int, tokens: np.ndarray,
+                reason: str):
+        self.counters["completed"] += 1
+        self._fresh.append(rid)
+        self.results[rid] = Completion(
+            rid=rid, tokens=tokens, reason=reason, prompt_len=prompt_len,
+            submit_t=self._submit_t.pop(rid), finish_t=time.time())

@@ -1,0 +1,159 @@
+"""SlotManager — a fixed pool of cache slots for continuous batching.
+
+The paper's runtime keeps a pool of workers saturated on dependency-bound
+work; at LM-serving scale the scarce resource is the static-shape decode
+cache. This module owns a pool of B cache slots over the engine's
+KV/recurrent caches (``transformer.init_caches(per_slot_pos=True)``):
+requests are *allocated* a slot, their prefilled state lives in that
+slot's rows of every cache leaf, and eviction on EOS/max-tokens frees the
+slot for the next admission — the batch shape never changes, only the
+masks do.
+
+With the per-row position layout every cache leaf carries the slot axis
+at position 1 ((periods, B, ...)), so gather/scatter/reset are single-axis
+indexing ops over the whole pytree, jitted once per sub-batch shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+_SLOT_AXIS = 1      # every per_slot_pos cache leaf: (periods, B, ...)
+
+
+@jax.jit
+def _gather(caches, idx):
+    return jax.tree_util.tree_map(
+        lambda l: jnp.take(l, idx, axis=_SLOT_AXIS), caches)
+
+
+# pool-sized updates donate the pool: without donation every scatter /
+# reset / chunk step materializes a second full copy of the cache pool
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter(caches, sub, idx):
+    return jax.tree_util.tree_map(
+        lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), caches, sub)
+
+
+@functools.lru_cache(maxsize=None)
+def _pooled_chunk_step(cfg: ModelConfig):
+    """Fused gather -> chunk-prefill -> scatter over the pooled caches.
+
+    One jitted program (per cfg and sub-batch shape) instead of three
+    dispatches: at small sub-batches the per-call overhead of separate
+    gather/chunk/scatter calls rivals the chunk compute itself."""
+    from repro.serve import engine     # local: slots is engine-agnostic
+
+    step = engine.make_chunk_step(cfg)
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(params, caches, idx, tokens, pos):
+        sub = jax.tree_util.tree_map(
+            lambda l: jnp.take(l, idx, axis=_SLOT_AXIS), caches)
+        _, sub = step(params, sub, tokens, pos)
+        return jax.tree_util.tree_map(
+            lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), caches, sub)
+
+    return run
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset(caches, template, idx):
+    """Write the zero-state template (slot axis = 1) into slots ``idx``."""
+
+    def wipe(l, t):
+        fresh = jnp.broadcast_to(
+            t, t.shape[:_SLOT_AXIS] + (idx.shape[0],) + t.shape[2:])
+        return l.at[:, idx].set(fresh.astype(l.dtype))
+
+    return jax.tree_util.tree_map(wipe, caches, template)
+
+
+class SlotManager:
+    """Fixed pool of ``num_slots`` decode-cache slots.
+
+    Host-side bookkeeping (free list, per-slot owner + validity mask)
+    plus jitted whole-pytree gather/scatter/reset over the pooled caches.
+    Each slot's clock lives in the caches' per-row ``pos`` leaves (and
+    the scheduler's request state); ``valid[i]`` masks live slots (the
+    scheduler decodes the full pool every step; dead rows compute but
+    are never read).
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_slots = cache_slots
+        self.caches = T.init_caches(cfg, num_slots, cache_slots,
+                                    per_slot_pos=True)
+        # one-slot zero template: reset = scatter-broadcast of this
+        self._template = T.init_caches(cfg, 1, cache_slots,
+                                       per_slot_pos=True)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self.owner: List[Optional[int]] = [None] * num_slots
+        self.valid = np.zeros(num_slots, bool)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live(self) -> List[int]:
+        return [i for i in range(self.num_slots) if self.valid[i]]
+
+    def alloc(self, owner: int) -> Optional[int]:
+        """Claim a free slot for request ``owner``; zero its cache rows.
+        Returns the slot index, or None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.caches = _reset(self.caches, self._template,
+                             jnp.asarray([slot], jnp.int32))
+        self.owner[slot] = owner
+        self.valid[slot] = True
+        return slot
+
+    def release(self, slot: int):
+        """Evict (EOS / max-tokens / abort): mark free; the stale cache
+        rows are masked out by ``valid`` until the next alloc resets them."""
+        assert self.valid[slot], f"slot {slot} is not live"
+        self.owner[slot] = None
+        self.valid[slot] = False
+        self._free.append(slot)
+
+    # -- pooled-cache data movement -----------------------------------------
+
+    def gather(self, idx: Sequence[int]):
+        """Sub-caches for slots ``idx`` (batch axis = len(idx))."""
+        return _gather(self.caches, jnp.asarray(idx, jnp.int32))
+
+    def scatter(self, sub, idx: Sequence[int]):
+        """Write sub-caches (from a bucketed chunk step) back into slots.
+        Duplicate indices must carry identical rows (the pad-by-repeat
+        contract): the scatter then stays deterministic."""
+        self.caches = _scatter(self.caches, sub,
+                               jnp.asarray(idx, jnp.int32))
+
+    def run_chunk(self, params, idx: Sequence[int], tokens, pos):
+        """Chunk-prefill slots ``idx`` in place (fused gather -> chunk ->
+        scatter, one dispatch). Same pad-by-repeat contract as scatter."""
+        self.caches = _pooled_chunk_step(self.cfg)(
+            params, self.caches, jnp.asarray(idx, jnp.int32),
+            jnp.asarray(tokens), jnp.asarray(pos))
+
+    def stats(self) -> dict:
+        return {"num_slots": self.num_slots,
+                "live": int(self.valid.sum()),
+                "free": self.free_count,
+                "cache_slots": self.cache_slots}

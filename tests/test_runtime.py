@@ -284,3 +284,54 @@ def test_autotune_seed_from_fig9(tmp_path):
     tuned = CFG.tuned(Autotuner(path))
     assert tuned.dtw_tile == 32 and tuned.sw_tile == 32
     assert tuned.scan_bucket == 64
+
+
+def test_autotune_bucketed_keys(tmp_path):
+    """Per-bucket knobs resolve ahead of per-kernel, then default."""
+    path = str(tmp_path / "cache.json")
+    t = Autotuner(path)
+    t.put("chain.block", 16)
+    t.put("chain.block@b256", 8)
+    assert t.get_bucketed("chain.block", 256, 32) == 8    # bucketed wins
+    assert t.get_bucketed("chain.block", 1024, 32) == 16  # kernel fallback
+    assert t.get_bucketed("sort.chunks", 256, 4) == 4     # default
+
+
+def test_autotune_seed_from_fig9_bucketed(tmp_path):
+    """fig9's chain-block / sort-chunk sweeps carry @b<bucket> suffixes
+    and land on per-bucket keys (fastest per bucket wins)."""
+    path = str(tmp_path / "cache.json")
+    rows = ["fig9.chain.block8@b256,50.0,depth=1",
+            "fig9.chain.block16@b256,20.0,depth=2",
+            "fig9.chain.block16@b1024,90.0,depth=3",
+            "fig9.chain.block32@b1024,30.0,depth=4",
+            "fig9.sort.chunks2@b256,15.0,depth=5",
+            "fig9.dtw.tile32,40.0,vmem_bytes=2"]
+    best = seed_from_fig9(rows, path=path)
+    assert best == {"chain.block@b256": 16, "chain.block@b1024": 32,
+                    "sort.chunks@b256": 2, "dtw.tile": 32}
+    t = Autotuner(path)
+    assert t.get_bucketed("chain.block", 256, 64) == 16
+    assert t.get_bucketed("chain.block", 1024, 64) == 32
+    assert t.get_bucketed("chain.block", 512, 64) == 64   # unswept bucket
+
+
+def test_service_uses_bucketed_chain_block(tmp_path):
+    """ChainAdapter consults the per-bucket tuned block in blocked mode
+    (the schedule that consumes it); results stay bit-identical to the
+    default knob — block size is perf-only."""
+    import dataclasses
+    path = str(tmp_path / "cache.json")
+    t = Autotuner(path)
+    t.put("chain.block@b64", 8)
+    cfg = dataclasses.replace(CFG, chain_mode="blocked", chain_block=16)
+    rng = np.random.default_rng(0)
+    q = np.sort(rng.integers(0, 400, 40)).astype(np.int32)
+    r = np.sort(rng.integers(0, 5000, 40)).astype(np.int32)
+    req = [Request("chain", {"q": q, "r": r})]
+    # untuned cache (empty file path) vs per-bucket tuned block
+    tuned = KernelService(cfg, tuner=t).submit(req)[0]
+    default = KernelService(
+        cfg, tuner=Autotuner(str(tmp_path / "empty.json"))).submit(req)[0]
+    np.testing.assert_array_equal(tuned["f"], default["f"])
+    np.testing.assert_array_equal(tuned["pred"], default["pred"])

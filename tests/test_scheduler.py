@@ -1,0 +1,308 @@
+"""Continuous-batching scheduler: token identity vs per-request generate
+(staggered arrivals, slot reuse), SlotManager pool mechanics, chunked
+prefill exactness, per-slot sampling, the memoizing request cache, and
+the KernelService 'generate' front door."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import (RequestCache, Scheduler, SchedulerConfig,
+                         SlotManager, engine, generate)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = configs.reduced_config("gemma-2b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def rwkv():
+    cfg = configs.reduced_config("rwkv6-1.6b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(rng, vocab, lens):
+    return [rng.integers(0, vocab, l).astype(np.int32) for l in lens]
+
+
+# --------------------------------------------------------------------------
+# token identity: continuous batching == per-request generate (greedy)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gemma", "rwkv"])
+def test_staggered_arrivals_match_per_request_generate(model, request):
+    """Mixed prompt lengths, arrivals mid-stream, N > pool (slot reuse
+    after eviction): every emitted stream must equal engine.generate's
+    (same chunk policy) under greedy sampling."""
+    cfg, params = request.getfixturevalue(model)
+    rng = np.random.default_rng(1)
+    lens = [3, 11, 20, 33, 9, 5]
+    mnts = [4, 7, 3, 6, 9, 5]
+    prompts = _prompts(rng, cfg.vocab, lens)
+    eos = 7
+    sc = SchedulerConfig(num_slots=2, max_len=64, prefill_chunk=8,
+                         eos_token=eos)
+    sched = Scheduler(cfg, params, sc)
+
+    rid2i = {}
+    submitted = 0
+    for i in range(3):                        # wave 1
+        rid2i[sched.submit([prompts[i]], max_new_tokens=mnts[i])[0]] = i
+        submitted += 1
+    steps = 0
+    while sched.pending or sched.live or submitted < len(prompts):
+        sched.step()
+        steps += 1
+        if steps % 3 == 0 and submitted < len(prompts):   # mid-stream
+            rid2i[sched.submit([prompts[submitted]],
+                               max_new_tokens=mnts[submitted])[0]] \
+                = submitted
+            submitted += 1
+    done = sched.drain()
+    assert len(done) == len(prompts)
+    assert sched.counters["completed"] == len(prompts)
+    for c in done:
+        i = rid2i[c.rid]
+        ref, reason = generate(params, cfg, prompts[i], mnts[i],
+                               eos_token=eos, prefill_chunk=8)
+        assert c.tokens.tolist() == ref.tolist(), \
+            f"request {i}: {c.tokens.tolist()} != {ref.tolist()}"
+        assert c.reason == reason
+
+
+def test_property_random_arrival_patterns(gemma):
+    """Property test: random prompt lengths / budgets / arrival patterns
+    keep the scheduler token-identical to per-request generate."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg, params = gemma
+    oracle = {}
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.data())
+    def prop(data):
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        n = data.draw(st.integers(2, 5))
+        lens = [data.draw(st.integers(1, 24)) for _ in range(n)]
+        mnts = [data.draw(st.integers(1, 6)) for _ in range(n)]
+        stagger = data.draw(st.integers(1, 4))
+        prompts = _prompts(rng, cfg.vocab, lens)
+        sc = SchedulerConfig(num_slots=2, max_len=48, prefill_chunk=8,
+                             cache_requests=False)
+        sched = Scheduler(cfg, params, sc)
+        rid2i = {}
+        submitted = 0
+        steps = 0
+        while submitted < n or sched.pending or sched.live:
+            if submitted < n and steps % stagger == 0:
+                rid2i[sched.submit([prompts[submitted]],
+                                   max_new_tokens=mnts[submitted])[0]] \
+                    = submitted
+                submitted += 1
+            sched.step()
+            steps += 1
+        for c in sched.drain():
+            i = rid2i[c.rid]
+            key = (prompts[i].tobytes(), mnts[i])
+            if key not in oracle:
+                oracle[key] = generate(params, cfg, prompts[i], mnts[i],
+                                       prefill_chunk=8)[0].tolist()
+            assert c.tokens.tolist() == oracle[key]
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# slot manager
+# --------------------------------------------------------------------------
+
+def test_slot_manager_alloc_release_reset(rwkv):
+    cfg, _ = rwkv
+    sm = SlotManager(cfg, num_slots=3, cache_slots=16)
+    a = sm.alloc(owner=10)
+    b = sm.alloc(owner=11)
+    assert {a, b} == {0, 1} and sm.free_count == 1
+    assert sm.valid[a] and sm.owner[b] == 11
+
+    # dirty slot a, release, realloc -> rows must be zeroed again
+    dirty = jax.tree_util.tree_map(lambda l: l + 1, sm.gather([a]))
+    sm.scatter(dirty, [a])
+    sm.release(a)
+    assert not sm.valid[a] and sm.free_count == 2
+    a2 = sm.alloc(owner=12)
+    assert a2 == a                      # LIFO free list reuses the slot
+    fresh = sm.gather([a2])
+    zeros = T.init_caches(cfg, 1, 16, per_slot_pos=True)
+    for x, z in zip(jax.tree_util.tree_leaves(fresh),
+                    jax.tree_util.tree_leaves(zeros)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+def test_slot_gather_scatter_roundtrip(gemma):
+    cfg, _ = gemma
+    sm = SlotManager(cfg, num_slots=4, cache_slots=8)
+    ref = jax.tree_util.tree_map(np.asarray, sm.caches)
+    marked = jax.tree_util.tree_map(lambda l: l + 2, sm.gather([1, 3]))
+    sm.scatter(marked, [1, 3])
+    got = jax.tree_util.tree_map(np.asarray, sm.caches)
+    for g, r in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(g[:, [0, 2]], r[:, [0, 2]])
+        np.testing.assert_array_equal(g[:, [1, 3]], r[:, [1, 3]] + 2)
+
+
+def test_pool_exhaustion_queues_fcfs(gemma):
+    cfg, params = gemma
+    sc = SchedulerConfig(num_slots=1, max_len=32, prefill_chunk=8,
+                         cache_requests=False)
+    sched = Scheduler(cfg, params, sc)
+    rng = np.random.default_rng(2)
+    rids = sched.submit(_prompts(rng, cfg.vocab, [4, 4, 4]),
+                        max_new_tokens=2)
+    sched.step()
+    assert sched.live == 1 and sched.pending == 2       # FCFS backlog
+    done = sched.drain()
+    assert [c.rid for c in done] == sorted(rids)        # completion order
+
+
+# --------------------------------------------------------------------------
+# chunked prefill / per-slot steps
+# --------------------------------------------------------------------------
+
+def test_chunked_prefill_matches_full_prefill_logits(gemma):
+    """Chunk steps over the full prompt == one-shot prefill (tolerance:
+    online-softmax accumulation order differs across chunk boundaries)."""
+    cfg, params = gemma
+    b, s, ch = 2, 24, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab)
+    logits_full, caches_full = jax.jit(
+        engine.make_prefill_step(cfg, cache_slots=s))(params,
+                                                      {"tokens": toks})
+    caches = T.init_caches(cfg, b, s, per_slot_pos=True)
+    chunk = jax.jit(engine.make_chunk_step(cfg))
+    for c0 in range(0, s, ch):
+        logits, caches = chunk(params, caches, toks[:, c0:c0 + ch],
+                               jnp.full((b,), c0, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits[:, -1], np.float32),
+                               np.asarray(logits_full[:, -1], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_per_slot_positions_match_shared_clock(gemma):
+    """A per-row position vector with equal entries must reproduce the
+    scalar-clock decode step (same tokens, same caches)."""
+    cfg, params = gemma
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, s), 0, cfg.vocab)
+    prefill = jax.jit(engine.make_prefill_step(cfg, cache_slots=s + 4))
+    logits, caches = prefill(params, {"tokens": toks})
+    tok = engine.sample_token(logits)
+
+    caches2 = T.init_caches(cfg, b, s + 4, per_slot_pos=True)
+    chunk = jax.jit(engine.make_chunk_step(cfg))
+    _, caches2 = chunk(params, caches2, toks,
+                       jnp.zeros((b,), jnp.int32))
+    sdec = jax.jit(engine.make_slot_decode_step(cfg))
+    decode = jax.jit(engine.make_decode_step(cfg))
+    key = jax.random.PRNGKey(0)
+    for i in range(3):
+        ref_tok, ref_logits, caches = decode(
+            params, caches, {"tokens": tok[:, None]},
+            jnp.asarray(s + i, jnp.int32))
+        got_tok, got_logits, caches2 = sdec(
+            params, caches2, tok[:, None],
+            jnp.full((b,), s + i, jnp.int32),
+            jnp.zeros((b,), jnp.float32), key)
+        np.testing.assert_allclose(
+            np.asarray(got_logits[:, 0], np.float32),
+            np.asarray(ref_logits[:, 0], np.float32),
+            rtol=3e-2, atol=3e-2)
+        assert got_tok.tolist() == ref_tok.tolist()
+        tok = ref_tok
+
+
+def test_sample_token_per_slot_temperatures():
+    """temps vector: greedy rows exactly argmax, hot rows vary."""
+    logits = jnp.tile(jnp.asarray([[[0.0, 3.0, 1.0, 2.9]]]), (2, 1, 1))
+    temps = jnp.asarray([0.0, 5.0])
+    toks = [engine.sample_token(logits, jax.random.PRNGKey(i), temps)
+            for i in range(40)]
+    greedy = [int(t[0]) for t in toks]
+    hot = [int(t[1]) for t in toks]
+    assert set(greedy) == {1}
+    assert len(set(hot)) > 1
+
+
+# --------------------------------------------------------------------------
+# request cache (zipfian traffic)
+# --------------------------------------------------------------------------
+
+def test_request_cache_hits_and_eviction():
+    rc = RequestCache(maxsize=2)
+    k1 = RequestCache.key(np.asarray([1, 2], np.int32), 4, None)
+    k2 = RequestCache.key(np.asarray([1, 2], np.int32), 5, None)  # differs
+    assert k1 != k2 and rc.get(k1) is None
+    rc.put(k1, np.asarray([9], np.int32), "length")
+    got = rc.get(k1)
+    assert got is not None and got[0].tolist() == [9]
+    rc.put(k2, np.asarray([8], np.int32), "length")
+    rc.put(RequestCache.key(np.asarray([3], np.int32), 4, None),
+           np.asarray([7], np.int32), "length")
+    assert rc.get(k1) is None           # LRU evicted (maxsize=2)
+    assert rc.hit_rate == pytest.approx(1 / 3)
+
+
+def test_scheduler_zipf_repeats_served_from_cache(rwkv):
+    cfg, params = rwkv
+    sc = SchedulerConfig(num_slots=2, max_len=32, prefill_chunk=8)
+    sched = Scheduler(cfg, params, sc)
+    rng = np.random.default_rng(3)
+    hot = _prompts(rng, cfg.vocab, [6])[0]
+    r1 = sched.submit([hot], max_new_tokens=3)
+    sched.drain()
+    r2 = sched.submit([hot, hot], max_new_tokens=3)     # repeats: no decode
+    steps_before = sched.counters["decode_steps"]
+    sched.drain()
+    assert sched.counters["decode_steps"] == steps_before
+    for r in r2:
+        assert sched.results[r].reason == "cached"
+        assert sched.results[r].tokens.tolist() == \
+            sched.results[r1[0]].tokens.tolist()
+    assert sched.request_cache.hit_rate > 0
+    # sampled requests must bypass the memo (not deterministic)
+    r3 = sched.submit([hot], max_new_tokens=3, temperature=0.9)
+    sched.drain()
+    assert sched.results[r3[0]].reason != "cached"
+
+
+# --------------------------------------------------------------------------
+# KernelService front door
+# --------------------------------------------------------------------------
+
+def test_kernel_service_generate_adapter(rwkv):
+    from repro.runtime import KernelService, Request
+
+    cfg, params = rwkv
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=2, max_len=32, prefill_chunk=8))
+    svc = KernelService(lm=sched)
+    assert "generate" in svc.kernels
+    rng = np.random.default_rng(4)
+    prompts = _prompts(rng, cfg.vocab, [5, 9, 13])
+    got = svc.submit([Request("generate", {"prompt": p,
+                                           "max_new_tokens": 4})
+                      for p in prompts])
+    for p, g in zip(prompts, got):
+        ref, _ = generate(params, cfg, p, 4, prefill_chunk=8)
+        assert g["tokens"].tolist() == ref.tolist()
+
+    svc_no_lm = KernelService()
+    with pytest.raises(ValueError, match="generate kernel needs"):
+        svc_no_lm.submit([Request("generate", {"prompt": prompts[0]})])
