@@ -35,7 +35,9 @@ def main(argv=None) -> int:
         "fig9": fig9_blocksize.run,
         "fig_band": fig_band.run,
         "fig_runtime": fig_runtime.run,
-        "fig_serve": fig_serve.run,
+        # full sweep includes the paged-allocator occupancy comparison
+        # (CI smoke reaches it via `fig_serve --smoke --paged`)
+        "fig_serve": lambda rows: fig_serve.run(rows, paged=True),
     }
     want = args.only.split(",") if args.only else list(suites)
 

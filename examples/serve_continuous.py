@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--max-prompt", type=int, default=40)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-granular slot allocator (try with an "
+                         "attention arch, e.g. --arch gemma-2b)")
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = configs.reduced_config(args.arch)
@@ -40,7 +44,9 @@ def main():
 
     sched = Scheduler(cfg, params, SchedulerConfig(
         num_slots=args.slots, max_len=args.max_prompt + args.max_new + 8,
-        prefill_chunk=16, eos_token=cfg.vocab - 1))
+        prefill_chunk=16, eos_token=cfg.vocab - 1,
+        allocator="paged" if args.paged else "contiguous",
+        block_size=args.block_size))
 
     prompts = [rng.integers(0, cfg.vocab,
                             int(rng.integers(4, args.max_prompt))
@@ -84,6 +90,11 @@ def main():
     print(f"[serve_continuous] repeat submits: "
           f"{[sched.results[r].reason for r in rep]} "
           f"(cache hit rate {sched.request_cache.hit_rate:.2f})")
+    if args.paged:
+        print(f"[serve_continuous] paged allocator: "
+              f"{st['blocks_total']} blocks x {st['block_size']} positions, "
+              f"{st.get('preempted', 0)} preemptions, "
+              f"mean occupancy {st.get('mean_occupancy', 0):.2f}")
     print("[serve_continuous] OK")
 
 

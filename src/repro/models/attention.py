@@ -219,6 +219,53 @@ def make_cache(batch: int, slots: int, kv_heads: int, head_dim: int,
         pos=pos)
 
 
+def make_paged_cache(num_blocks: int, block_size: int, kv_heads: int,
+                     head_dim: int, dtype=jnp.bfloat16,
+                     periods: int = 1) -> KVCache:
+    """Flat physical block-pool cache: rows = (num_blocks + 1) * block_size
+    — one TRASH block appended past the pool as the gather/scatter sink
+    for unmapped page-table entries (serve.paging)."""
+    rows = (num_blocks + 1) * block_size
+    return KVCache(
+        k=jnp.zeros((periods, rows, kv_heads, head_dim), dtype),
+        v=jnp.zeros((periods, rows, kv_heads, head_dim), dtype),
+        pos=jnp.full((periods, rows), -1, jnp.int32))
+
+
+def paged_view(flat: KVCache, rows: Array, live_rows: int) -> KVCache:
+    """Gather a per-slot contiguous KVCache view through a page table —
+    the gather-before-attend step of the paged layout.
+
+    flat: physical pool, k/v (P, R, KV, hd), pos (P, R); rows: (B, V)
+    flat physical row per view position (PageTable.rows()); live_rows =
+    num_blocks * block_size — rows at or past it are trash. Trash view
+    positions read as the empty-slot encoding (k=v=0, pos=-1), which is
+    bit-identical to the freshly-zeroed rows of a contiguous slot, so
+    attending over the view reproduces the contiguous path exactly.
+    """
+    ok = rows < live_rows                                   # (B, V)
+    k = jnp.where(ok[None, :, :, None, None],
+                  jnp.take(flat.k, rows, axis=1), 0)
+    v = jnp.where(ok[None, :, :, None, None],
+                  jnp.take(flat.v, rows, axis=1), 0)
+    pos = jnp.where(ok[None], jnp.take(flat.pos, rows, axis=1), -1)
+    return KVCache(k=k, v=v, pos=pos)
+
+
+def paged_writeback(flat: KVCache, view: KVCache, rows: Array) -> KVCache:
+    """Scatter an updated per-slot view back into the physical pool.
+
+    Mapped rows are unique across the page table (BlockPool invariant),
+    so their writes are deterministic; writes for unmapped view positions
+    (including whole dead slots) land in the trash block, which is never
+    read unmasked.
+    """
+    return KVCache(
+        k=flat.k.at[:, rows].set(view.k.astype(flat.k.dtype)),
+        v=flat.v.at[:, rows].set(view.v.astype(flat.v.dtype)),
+        pos=flat.pos.at[:, rows].set(view.pos.astype(jnp.int32)))
+
+
 def _shard_cache(c: KVCache) -> KVCache:
     return KVCache(
         k=shard_act(c.k, "cache_batch", "cache_seq", "cache_kv_heads",

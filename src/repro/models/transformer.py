@@ -281,7 +281,8 @@ def apply_model(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg: ModelConfig, batch: int, slots: int,
-                per_slot_pos: bool = False):
+                per_slot_pos: bool = False,
+                paged_global_attn: bool = False):
     """Zero caches for decode: dict p<i> -> stacked-over-periods leaves.
 
     ``per_slot_pos=True`` allocates the per-row KV position layout
@@ -289,12 +290,22 @@ def init_caches(cfg: ModelConfig, batch: int, slots: int,
     decode clock — the layout serve.slots.SlotManager pools. With it,
     EVERY cache leaf has the batch axis at position 1, which is what
     makes slot gather/scatter a single-axis indexing op.
+
+    ``paged_global_attn=True`` leaves ``{"attn": None}`` for layers whose
+    slot axis would span the full ``slots`` (global attention, or a
+    window >= slots): those leaves live in a block pool owned by the
+    paged slot backing (serve.paging) instead of being reserved per slot.
+    Window rings shorter than ``slots`` and SSM state are O(window)/O(1)
+    per slot — they cannot strand pool memory and stay dense.
     """
     np_, d = cfg.num_periods, cfg.d_model
     caches = {}
     for i, spec in enumerate(cfg.pattern):
         if spec.mixer == "attn":
             sl = min(slots, spec.window) if spec.window else slots
+            if paged_global_attn and sl == slots:
+                caches[f"p{i}"] = {"attn": None}
+                continue
             pos = (jnp.full((np_, batch, sl), -1, jnp.int32)
                    if per_slot_pos else jnp.full((np_, sl), -1, jnp.int32))
             caches[f"p{i}"] = {"attn": attention.KVCache(

@@ -605,6 +605,15 @@ class KernelService:
     def kernels(self) -> Tuple[str, ...]:
         return tuple(sorted(self._adapters))
 
+    def stats(self) -> Dict[str, Any]:
+        """Service-level introspection: registered kernels plus, when an
+        LM scheduler is attached, its pool/occupancy counters (incl. the
+        paged allocator's block utilization — serve.SlotManager.stats)."""
+        out: Dict[str, Any] = {"kernels": list(self.kernels)}
+        if self.lm is not None:
+            out["lm"] = self.lm.stats()
+        return out
+
     def submit(self, requests: Sequence[Request]) -> List[Any]:
         """Run a heterogeneous batch; results align with ``requests``."""
         results: List[Any] = [None] * len(requests)

@@ -1,21 +1,27 @@
 """repro.serve — LM serving: stateless engine steps + continuous batching.
 
   * engine    — prefill / decode / chunked-prefill step builders, per-slot
-                position vectors, sampling, per-request ``generate``.
-  * slots     — SlotManager: the fixed pool of static-shape cache slots.
+                position vectors, sampling, per-request ``generate``,
+                fused paged (page-gather -> step -> page-scatter) steps.
+  * paging    — BlockPool / PageTable: block-granular allocation for the
+                slot pool's global-attention KV.
+  * slots     — SlotManager: the fixed pool of static-shape cache slots
+                (contiguous or paged backing behind one facade).
   * scheduler — Scheduler: admit -> chunk-prefill -> fused decode ->
                 retire continuous batching, plus the memoizing
-                RequestCache for zipfian traffic.
+                RequestCache for zipfian traffic and preempt-on-OOB for
+                the paged allocator.
 """
 
 from repro.serve.engine import (cache_shardings, generate, make_chunk_step,
                                 make_decode_step, make_prefill_step,
                                 make_slot_decode_step, sample_token)
+from repro.serve.paging import BlockPool, PageTable
 from repro.serve.scheduler import (Completion, RequestCache, Scheduler,
                                    SchedulerConfig)
 from repro.serve.slots import SlotManager
 
 __all__ = ["cache_shardings", "generate", "make_chunk_step",
            "make_decode_step", "make_prefill_step", "make_slot_decode_step",
-           "sample_token", "Completion", "RequestCache", "Scheduler",
-           "SchedulerConfig", "SlotManager"]
+           "sample_token", "BlockPool", "Completion", "PageTable",
+           "RequestCache", "Scheduler", "SchedulerConfig", "SlotManager"]

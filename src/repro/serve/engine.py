@@ -135,6 +135,102 @@ def jit_slot_decode_step(cfg: ModelConfig):
     return jax.jit(make_slot_decode_step(cfg), donate_argnums=(1,))
 
 
+# ---------------------------------------------------------------------------
+# paged steps: caches split into dense per-slot leaves + a physical block
+# pool read through a page table (serve.paging / serve.slots paged backing)
+# ---------------------------------------------------------------------------
+
+def _merge_paged(dense, paged, rows, live_rows):
+    """Rebuild the full cache tree the model steps expect: dense entries
+    pass through; paged attention layers (dense holds None) get a per-slot
+    view gathered through the page-table ``rows``."""
+    from repro.models import attention  # local: avoid import cycle
+
+    caches = {}
+    for key, entry in dense.items():
+        if key in paged:
+            entry = dict(entry)
+            entry["attn"] = attention.paged_view(paged[key], rows, live_rows)
+        caches[key] = entry
+    return caches
+
+
+def _split_paged(caches, paged, rows):
+    """Inverse of _merge_paged: scatter updated views back into the pool
+    and strip them from the dense tree (None placeholders restored)."""
+    from repro.models import attention
+
+    dense, paged_new = {}, {}
+    for key, entry in caches.items():
+        if key in paged:
+            entry = dict(entry)
+            view = entry["attn"]
+            entry["attn"] = None
+            paged_new[key] = attention.paged_writeback(paged[key], view, rows)
+        dense[key] = entry
+    return dense, paged_new
+
+
+@functools.lru_cache(maxsize=None)
+def jit_paged_decode_step(cfg: ModelConfig):
+    """Fused page-gather -> decode -> page-scatter over the whole pool.
+
+    dense: cache tree with None at paged attention entries (per-slot SSM
+    state, window rings, ...); paged: dict pattern-key -> flat KVCache
+    block pool; rows: (B, V) flat physical row per view position;
+    live_rows (static): rows at/past it are the trash block. One jitted
+    program per cfg — same one-fused-program-per-tick property as the
+    contiguous path, the page table is just an extra gather index.
+    """
+    step = make_slot_decode_step(cfg)
+
+    def run(params, dense, paged, rows, tokens, pos, temps, key,
+            live_rows: int):
+        caches = _merge_paged(dense, paged, rows, live_rows)
+        nxt, logits, caches = step(params, caches, tokens, pos, temps, key)
+        dense, paged = _split_paged(caches, paged, rows)
+        return nxt, logits, dense, paged
+
+    return jax.jit(run, donate_argnums=(1, 2), static_argnums=(8,))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_paged_chunk_step(cfg: ModelConfig):
+    """Fused gather -> chunk-prefill -> scatter for the paged layout.
+
+    ``idx`` selects the sub-batch of slots (pad-by-repeat contract as the
+    contiguous pooled chunk step); ``rows`` is already per-sub-row
+    (len(idx), V). Dense leaves gather/scatter on the slot axis, paged
+    leaves through the page table.
+    """
+    step = make_chunk_step(cfg)
+
+    def run(params, dense, paged, idx, rows, tokens, pos, live_rows: int):
+        sub = jax.tree_util.tree_map(
+            lambda l: jnp.take(l, idx, axis=1), dense)
+        caches = _merge_paged(sub, paged, rows, live_rows)
+        _, caches = step(params, caches, tokens, pos)
+        sub, paged = _split_paged(caches, paged, rows)
+        dense = jax.tree_util.tree_map(
+            lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), dense, sub)
+        return dense, paged
+
+    return jax.jit(run, donate_argnums=(1, 2), static_argnums=(7,))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_block_rows(paged, rows):
+    """Zero the physical rows of freshly-mapped blocks (k=v=0, pos=-1) —
+    the paged counterpart of SlotManager.alloc's slot reset. ``rows`` may
+    be padded with trash rows (identical writes: deterministic)."""
+    from repro.models.attention import KVCache
+
+    return {key: KVCache(k=c.k.at[:, rows].set(0),
+                         v=c.v.at[:, rows].set(0),
+                         pos=c.pos.at[:, rows].set(-1))
+            for key, c in paged.items()}
+
+
 def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
              *, temperature: float = 0.0, eos_token: Optional[int] = None,
              prefill_chunk: int = 32, cache_slots: int = 0,

@@ -1,0 +1,174 @@
+"""Block-granular (paged) allocation for the serving pool's cache slots.
+
+The contiguous SlotManager reserves ``cache_slots == max_len`` rows per
+request — worst-case reservation, exactly the coarse-grain allocation
+that strands the scarce shared resource (the paper's L2 argument at
+serving scale). This module carves the slot axis into fixed-size
+*blocks* instead:
+
+  * ``BlockPool``   — a free list of physical blocks; the unit of
+                      allocation and the unit the scheduler admits on.
+  * ``PageTable``   — per-slot logical-block -> physical-block map.
+                      Blocks are mapped on demand as a request's write
+                      position crosses a block boundary and freed in one
+                      batch at retire.
+
+Both are host-side numpy/python (like the SlotManager free list): the
+device only ever sees the *flat row index vectors* PageTable.rows()
+derives, which the fused serve steps use to gather a per-slot contiguous
+view before attending (models.attention.paged_view) and scatter updates
+back after.
+
+Unmapped logical blocks point at a single TRASH block appended past the
+pool (physical index ``num_blocks``): gathers through a trash row are
+masked to the empty-slot encoding (k=v=0, pos=-1), and scatters of rows
+the model computed for dead/unmapped positions land there instead of
+corrupting live blocks. Mapped physical blocks are unique across the
+table (the double-assignment invariant the property tests pin), so every
+scatter over mapped rows is deterministic.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class BlockPool:
+    """Free list of ``num_blocks`` physical cache blocks of ``block_size``
+    positions each. LIFO reuse (like the slot free list) keeps hot blocks
+    hot; ``allocated`` is the double-assignment guard."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 1 and block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.allocated = np.zeros(num_blocks, bool)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim one block; None when the pool is exhausted."""
+        if not self._free:
+            return None
+        b = self._free.pop()
+        assert not self.allocated[b], f"block {b} double-assigned"
+        self.allocated[b] = True
+        return b
+
+    def free(self, block: int):
+        assert self.allocated[block], f"block {block} is not allocated"
+        self.allocated[block] = False
+        self._free.append(block)
+
+
+class PageTable:
+    """Per-slot logical->physical block map over a shared BlockPool.
+
+    ``slot_positions`` is the logical slot length (the contiguous
+    allocator's ``cache_slots``); the view the fused steps gather is
+    exactly that long, so ring addressing (``pos % slot_positions``) and
+    blockwise-attention accumulation order are bit-identical to the
+    contiguous layout. The last block of a slot may be partially used
+    (internal fragmentation) when ``slot_positions % block_size != 0``.
+    """
+
+    def __init__(self, pool: BlockPool, num_slots: int, slot_positions: int):
+        self.pool = pool
+        self.num_slots = num_slots
+        self.slot_positions = slot_positions
+        self.block_size = pool.block_size
+        self.blocks_per_slot = -(-slot_positions // pool.block_size)
+        self.trash = pool.num_blocks        # sentinel physical block
+        self.table = np.full((num_slots, self.blocks_per_slot), self.trash,
+                             np.int32)
+
+    # -- sizing ---------------------------------------------------------
+
+    def blocks_for(self, n_positions: int) -> int:
+        """Blocks needed to back positions [0, n_positions)."""
+        return min(-(-max(n_positions, 0) // self.block_size),
+                   self.blocks_per_slot)
+
+    def can_map(self, n_blocks: int) -> bool:
+        return self.pool.free_count >= n_blocks
+
+    def mapped_blocks(self, slot: int) -> int:
+        return int(np.sum(self.table[slot] != self.trash))
+
+    # -- lifecycle ------------------------------------------------------
+
+    def ensure(self, slot: int, upto_pos: int) -> Tuple[bool, List[int]]:
+        """Map every unmapped logical block covering positions
+        [0, upto_pos]. Returns (fully_mapped, newly_mapped_physical).
+        On pool exhaustion the blocks mapped so far stay mapped (they are
+        valid — the caller either retries after preempting a victim or
+        frees the whole slot)."""
+        assert 0 <= upto_pos < self.slot_positions, \
+            f"position {upto_pos} outside slot of {self.slot_positions}"
+        new: List[int] = []
+        for lb in range(upto_pos // self.block_size + 1):
+            if self.table[slot, lb] != self.trash:
+                continue
+            b = self.pool.alloc()
+            if b is None:
+                return False, new
+            self.table[slot, lb] = b
+            new.append(b)
+        return True, new
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Unmap and free every block of ``slot`` (retire/preempt)."""
+        freed = [int(b) for b in self.table[slot] if b != self.trash]
+        for b in freed:
+            self.pool.free(b)
+        self.table[slot] = self.trash
+        return freed
+
+    # -- device-facing index vectors ------------------------------------
+
+    def rows(self, slots: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Flat physical row per view position: (len(slots),
+        slot_positions) int32. View position v of slot s lives at
+        physical row table[s, v // bs] * bs + v % bs; unmapped blocks
+        resolve to trash rows (>= num_blocks * bs), which the gather
+        masks and the scatter sacrifices."""
+        tab = self.table if slots is None else self.table[list(slots)]
+        bs = self.block_size
+        full = (tab[:, :, None] * bs
+                + np.arange(bs, dtype=np.int32)[None, None, :])
+        return full.reshape(tab.shape[0], -1)[:, :self.slot_positions] \
+                   .astype(np.int32)
+
+    @staticmethod
+    def block_rows(blocks: Sequence[int], block_size: int) -> np.ndarray:
+        """Flat physical rows covered by ``blocks`` (for block resets)."""
+        b = np.asarray(list(blocks), np.int32)
+        return (b[:, None] * block_size
+                + np.arange(block_size, dtype=np.int32)[None, :]).reshape(-1)
+
+    # -- introspection ---------------------------------------------------
+
+    def check_invariants(self):
+        """No physical block mapped twice; table and pool free list agree.
+        (Exercised by the property tests on every operation.)"""
+        mapped = self.table[self.table != self.trash]
+        assert len(mapped) == len(set(mapped.tolist())), \
+            "physical block mapped to two logical blocks"
+        assert set(mapped.tolist()) == set(np.flatnonzero(
+            self.pool.allocated).tolist()), "table / pool free list disagree"
+
+    def stats(self) -> Dict[str, float]:
+        used = self.pool.used_count
+        return {"blocks_total": self.pool.num_blocks,
+                "blocks_used": used,
+                "block_size": self.block_size,
+                "block_utilization": used / self.pool.num_blocks}

@@ -27,6 +27,15 @@ so MoE token streams can legitimately diverge from B=1 at tight capacity
 A memoizing request cache (prompt+params -> tokens) fronts the pool for
 zipfian traffic — deterministic (greedy) requests only; hit/miss
 counters feed the fig_serve benchmark.
+
+With ``allocator='paged'`` the slot pool stores global-attention KV at
+block granularity (serve.paging): admission gates on free *blocks*, live
+slots map blocks on demand as their write position grows, retire frees
+them, and a growth failure preempts the youngest slot back to the front
+of the queue (restart-from-scratch; greedy streams are unchanged by
+determinism). At the equal-memory default (num_blocks=None) scheduling
+is identical to contiguous; smaller pools admit more concurrent
+mixed-length requests per byte at the cost of preemptions.
 """
 
 from __future__ import annotations
@@ -43,7 +52,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.runtime import bucketing
-from repro.serve import engine
 from repro.serve.slots import SlotManager
 
 
@@ -62,6 +70,17 @@ class SchedulerConfig:
     # 'static': admit a full batch only when the pool is EMPTY — the
     # pad-to-slowest baseline fig_serve compares against.
     admit: str = "continuous"
+    # 'contiguous': every slot reserves max_len cache rows.
+    # 'paged': global-attn KV lives in a block pool (serve.paging) —
+    # admission gates on free BLOCKS, slots grow block-by-block as they
+    # decode, and a growth failure preempts the youngest slot.
+    allocator: str = "contiguous"
+    block_size: int = 16        # paged: cache positions per block
+    # paged: physical blocks in the pool. None = equal memory with the
+    # contiguous layout (num_slots * ceil(max_len / block_size)) — with
+    # that default no request can ever fail to grow, so scheduling is
+    # identical to contiguous; smaller pools trade preemptions for memory.
+    num_blocks: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -73,6 +92,7 @@ class _Slot:
     temperature: float
     ctx: int = 0                # tokens consumed into the slot's cache
     out: List[int] = dataclasses.field(default_factory=list)
+    admit_seq: int = -1         # admission order: preemption evicts max
 
 
 @dataclasses.dataclass
@@ -108,7 +128,11 @@ class RequestCache:
     @staticmethod
     def key(prompt: np.ndarray, max_new_tokens: int,
             eos_token: Optional[int]) -> Tuple:
-        return (bytes(np.asarray(prompt, np.int32).tobytes()),
+        # dtype + shape are part of the key: raw bytes alone collide for
+        # e.g. int64([1]) vs int32([1, 0]) (same little-endian bytes) or
+        # a (4,) vs (2, 2) view of the same buffer.
+        p = np.ascontiguousarray(prompt)
+        return (p.tobytes(), p.dtype.str, p.shape,
                 max_new_tokens, eos_token)
 
     def get(self, key: Tuple) -> Optional[Tuple[np.ndarray, str]]:
@@ -140,9 +164,11 @@ class Scheduler:
         self.cfg = cfg
         self.params = params
         self.sched = sched
-        self.slots = SlotManager(cfg, sched.num_slots, sched.max_len)
-        # process-wide jit cache: a fresh Scheduler never retraces
-        self._decode_fn = engine.jit_slot_decode_step(cfg)
+        assert sched.allocator in ("contiguous", "paged"), sched.allocator
+        self.slots = SlotManager(cfg, sched.num_slots, sched.max_len,
+                                 paged=sched.allocator == "paged",
+                                 block_size=sched.block_size,
+                                 num_blocks=sched.num_blocks)
         self._queue: "collections.deque[_Slot]" = collections.deque()
         self._by_slot: Dict[int, _Slot] = {}
         self._inflight: Dict[Tuple, List[int]] = {}
@@ -152,6 +178,7 @@ class Scheduler:
         self.request_cache = RequestCache(sched.request_cache_size)
         self._key = jax.random.PRNGKey(sched.seed)
         self._next_rid = 0
+        self._next_seq = 0          # admission sequence (preempt youngest)
         self.counters = collections.Counter()
 
     # -- submission ----------------------------------------------------------
@@ -170,6 +197,14 @@ class Scheduler:
             assert 1 <= len(p) <= self.sched.max_len - mnt, \
                 f"prompt length {len(p)} + max_new {mnt} exceeds " \
                 f"max_len {self.sched.max_len}"
+            if self.slots.paged:
+                # progress guarantee for preempt-on-OOB: with every other
+                # slot evicted the oldest request must fit the whole pool
+                pt = self.slots.backing.pt
+                need = pt.blocks_for(len(p) + mnt)
+                assert need <= pt.pool.num_blocks, \
+                    f"request needs {need} blocks > pool " \
+                    f"{pt.pool.num_blocks}"
             rid = self._next_rid
             self._next_rid += 1
             self._submit_t[rid] = time.time()
@@ -230,22 +265,61 @@ class Scheduler:
         return len(self._by_slot)
 
     def stats(self) -> dict:
-        return {**{k: int(v) for k, v in self.counters.items()},
-                "cache_hits": self.request_cache.hits,
-                "cache_misses": self.request_cache.misses,
-                "cache_hit_rate": round(self.request_cache.hit_rate, 4),
-                **self.slots.stats()}
+        out = {**{k: int(v) for k, v in self.counters.items()},
+               "cache_hits": self.request_cache.hits,
+               "cache_misses": self.request_cache.misses,
+               "cache_hit_rate": round(self.request_cache.hit_rate, 4),
+               **self.slots.stats()}
+        if self.counters["decode_steps"]:
+            out["mean_occupancy"] = round(
+                self.counters["live_decode_slots"]
+                / self.counters["decode_steps"], 4)
+        return out
 
     # -- internals -----------------------------------------------------------
 
     def _admit(self):
         if self.sched.admit == "static" and self._by_slot:
             return      # static batching: wait for the whole batch
-        while self._queue and self.slots.free_count:
+        # FCFS with head-of-line blocking: if the queue head's prompt
+        # blocks aren't free (paged), nothing behind it jumps the line —
+        # preserves arrival order and starves no request.
+        while self._queue and self.slots.can_admit(len(self._queue[0].prompt)):
             st = self._queue.popleft()
-            slot = self.slots.alloc(st.rid)
+            slot = self.slots.alloc(st.rid, prompt_len=len(st.prompt))
+            st.admit_seq = self._next_seq
+            self._next_seq += 1
             self._by_slot[slot] = st
             self.counters["admitted"] += 1
+
+    def _preempt(self, slot: int):
+        """Evict a live slot to free its blocks (paged growth failure):
+        the request restarts from scratch at the FRONT of the queue.
+        Greedy requests re-decode the identical stream, so completions
+        are unchanged; sampled requests may legitimately diverge (a new
+        sampling path), same as any restart."""
+        st = self._by_slot.pop(slot)
+        self.slots.release(slot)
+        st.ctx = 0
+        st.out = []
+        st.admit_seq = -1
+        self._queue.appendleft(st)
+        self.counters["preempted"] += 1
+
+    def _ensure_or_preempt(self, slot: int, upto_pos: int) -> bool:
+        """Grow ``slot``'s storage to cover ``upto_pos``; on block
+        exhaustion evict the youngest live slot and retry. The oldest
+        live request is only ever self-evicted (when nothing younger is
+        left), and the submit-time feasibility assert guarantees it fits
+        an empty pool — so the pool always makes forward progress.
+        Returns False iff ``slot`` itself was preempted."""
+        while not self.slots.ensure(slot, upto_pos):
+            victim = max(self._by_slot, key=lambda s:
+                         self._by_slot[s].admit_seq)
+            self._preempt(victim)
+            if victim == slot:
+                return False
+        return True
 
     def _prefill_chunks(self):
         """Consume every pending full chunk (first L-1 prompt tokens only;
@@ -257,6 +331,15 @@ class Scheduler:
                     if len(st.prompt) - 1 - st.ctx >= ch]
             if not need:
                 return
+            if self.slots.paged:
+                # prompts are fully mapped at admission (alloc_reset
+                # covers positions [0, prompt_len)), so a chunk write can
+                # never need a new block — block growth, and with it
+                # preempt-on-OOB, happens only on the decode path
+                for s in need:
+                    assert self.slots.ensure(
+                        s, self._by_slot[s].ctx + ch - 1), \
+                        "prefill chunk outgrew the admission mapping"
             m = len(need)
             bsz = bucketing.round_up_pow2(m, 1)
             idx = need + [need[0]] * (bsz - m)      # pad-by-repeat
@@ -277,6 +360,14 @@ class Scheduler:
         and temperatures; free slots run on masked junk (never read)."""
         if not self._by_slot:
             return
+        if self.slots.paged:
+            # every live slot writes its cache at position ctx this tick:
+            # map the covering blocks, preempting youngest-first on OOB
+            for s in sorted(self._by_slot):
+                if s in self._by_slot:
+                    self._ensure_or_preempt(s, self._by_slot[s].ctx)
+            if not self._by_slot:
+                return
         b = self.slots.num_slots
         toks = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
@@ -287,12 +378,14 @@ class Scheduler:
             pos[s] = st.ctx
             temps[s] = st.temperature
         self._key, ks = jax.random.split(self._key)
-        nxt, _, caches = self._decode_fn(
-            self.params, self.slots.caches, jnp.asarray(toks),
-            jnp.asarray(pos), jnp.asarray(temps), ks)
-        self.slots.caches = caches
+        nxt = self.slots.run_decode(
+            self.params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(temps), ks)
         nxt = np.asarray(nxt)
         self.counters["decode_steps"] += 1
+        # admitted-concurrency numerator: mean live slots per decode tick
+        # = live_decode_slots / decode_steps (fig_serve's occupancy gate)
+        self.counters["live_decode_slots"] += len(self._by_slot)
 
         for s in sorted(self._by_slot):
             st = self._by_slot[s]

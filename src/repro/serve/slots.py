@@ -9,6 +9,20 @@ slot's rows of every cache leaf, and eviction on EOS/max-tokens frees the
 slot for the next admission — the batch shape never changes, only the
 masks do.
 
+Two storage backings sit behind one facade:
+
+  * contiguous — every slot reserves ``cache_slots`` rows of every leaf
+    (worst-case reservation; the original layout).
+  * paged      — global-attention KV leaves live in a shared block pool
+    (``serve.paging``: BlockPool + PageTable, blocks mapped on demand as
+    a request's write position grows, freed at retire), so short
+    requests stop stranding pool memory the way coarse-grain reservation
+    strands the paper's L2. The fused steps gather a per-slot contiguous
+    view through the page table before attending and scatter updates
+    back (models.attention.paged_view / paged_writeback), keeping the
+    one-fused-program-per-tick property — and the view is bit-identical
+    to the contiguous layout, so greedy token streams are too.
+
 With the per-row position layout every cache leaf carries the slot axis
 at position 1 ((periods, B, ...)), so gather/scatter/reset are single-axis
 indexing ops over the whole pytree, jitted once per sub-batch shape.
@@ -25,7 +39,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import transformer as T
+from repro.models import attention, transformer as T
+from repro.runtime import bucketing
+from repro.serve import engine
+from repro.serve.paging import BlockPool, PageTable
 
 _SLOT_AXIS = 1      # every per_slot_pos cache leaf: (periods, B, ...)
 
@@ -51,8 +68,6 @@ def _pooled_chunk_step(cfg: ModelConfig):
     One jitted program (per cfg and sub-batch shape) instead of three
     dispatches: at small sub-batches the per-call overhead of separate
     gather/chunk/scatter calls rivals the chunk compute itself."""
-    from repro.serve import engine     # local: slots is engine-agnostic
-
     step = engine.make_chunk_step(cfg)
 
     @functools.partial(jax.jit, donate_argnums=(1,))
@@ -78,6 +93,176 @@ def _reset(caches, template, idx):
     return jax.tree_util.tree_map(wipe, caches, template)
 
 
+# ---------------------------------------------------------------------------
+# storage backings
+# ---------------------------------------------------------------------------
+
+class _ContiguousBacking:
+    """Every slot owns ``cache_slots`` rows of every leaf (the original
+    worst-case-reservation layout)."""
+
+    is_paged = False
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int):
+        self.cfg = cfg
+        self.caches = T.init_caches(cfg, num_slots, cache_slots,
+                                    per_slot_pos=True)
+        # one-slot zero template: reset = scatter-broadcast of this
+        self._template = T.init_caches(cfg, 1, cache_slots,
+                                       per_slot_pos=True)
+        self.position_capacity = num_slots * cache_slots
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return True                     # a free slot is the only gate
+
+    def alloc_reset(self, slot: int, prompt_len: int):
+        self.caches = _reset(self.caches, self._template,
+                             jnp.asarray([slot], jnp.int32))
+
+    def ensure(self, slot: int, upto_pos: int) -> bool:
+        return True                     # rows are pre-reserved
+
+    def release_slot(self, slot: int) -> List[int]:
+        return []                       # nothing block-granular to free
+
+    def gather(self, idx):
+        return _gather(self.caches, jnp.asarray(idx, jnp.int32))
+
+    def scatter(self, sub, idx):
+        self.caches = _scatter(self.caches, sub,
+                               jnp.asarray(idx, jnp.int32))
+
+    def run_chunk(self, params, idx, tokens, pos):
+        self.caches = _pooled_chunk_step(self.cfg)(
+            params, self.caches, jnp.asarray(idx, jnp.int32),
+            jnp.asarray(tokens), jnp.asarray(pos))
+
+    def run_decode(self, params, tokens, pos, temps, key):
+        nxt, _, self.caches = engine.jit_slot_decode_step(self.cfg)(
+            params, self.caches, tokens, pos, temps, key)
+        return nxt
+
+    def stats(self) -> dict:
+        return {"allocator": "contiguous"}
+
+
+class _PagedBacking:
+    """Global-attention KV lives in a shared block pool; per-slot dense
+    leaves (SSM state, sub-``cache_slots`` window rings) keep the
+    contiguous layout. The page table maps each slot's logical blocks to
+    physical ones on demand; the fused steps read/write through flat row
+    index vectors derived from it (gather-before-attend)."""
+
+    is_paged = True
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int,
+                 block_size: int, num_blocks: Optional[int]):
+        self.cfg = cfg
+        if num_blocks is None:
+            # equal-memory default: same position capacity as contiguous
+            num_blocks = num_slots * (-(-cache_slots // block_size))
+        self.pool = BlockPool(num_blocks, block_size)
+        self.pt = PageTable(self.pool, num_slots, cache_slots)
+        self.live_rows = num_blocks * block_size
+        self.position_capacity = self.live_rows
+        self.dense = T.init_caches(cfg, num_slots, cache_slots,
+                                   per_slot_pos=True, paged_global_attn=True)
+        self._template = T.init_caches(cfg, 1, cache_slots,
+                                       per_slot_pos=True,
+                                       paged_global_attn=True)
+        self.paged = {
+            key: attention.make_paged_cache(
+                num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim,
+                periods=cfg.num_periods)
+            for key, entry in self.dense.items()
+            if "attn" in entry and entry["attn"] is None}
+        self._rows_cache: Optional[jnp.ndarray] = None
+
+    # -- page-table lifecycle -------------------------------------------
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return self.pt.can_map(self.pt.blocks_for(max(prompt_len, 1)))
+
+    def alloc_reset(self, slot: int, prompt_len: int):
+        self.dense = _reset(self.dense, self._template,
+                            jnp.asarray([slot], jnp.int32))
+        ok = self.ensure(slot, max(prompt_len, 1) - 1)
+        assert ok, "alloc_reset after can_admit cannot run out of blocks"
+
+    def ensure(self, slot: int, upto_pos: int) -> bool:
+        """Map (and zero) every block covering positions [0, upto_pos].
+        False on pool exhaustion — the scheduler's preempt-on-OOB path."""
+        ok, new = self.pt.ensure(slot, upto_pos)
+        if new and self.paged:
+            # pow2-pad the reset batch with trash-block rows so the jitted
+            # reset compiles O(log blocks_per_slot) shapes, not one per count
+            n = bucketing.round_up_pow2(len(new), 1)
+            blocks = list(new) + [self.pt.trash] * (n - len(new))
+            rows = PageTable.block_rows(blocks, self.pool.block_size)
+            self.paged = engine.reset_block_rows(self.paged,
+                                                 jnp.asarray(rows))
+        if new:
+            self._rows_cache = None
+        return ok
+
+    def release_slot(self, slot: int) -> List[int]:
+        freed = self.pt.free_slot(slot)
+        if freed:
+            self._rows_cache = None
+        return freed
+
+    def _rows_all(self) -> jnp.ndarray:
+        if self._rows_cache is None:
+            self._rows_cache = jnp.asarray(self.pt.rows())
+        return self._rows_cache
+
+    # -- data movement ---------------------------------------------------
+
+    def gather(self, idx):
+        sub = _gather(self.dense, jnp.asarray(idx, jnp.int32))
+        rows = jnp.asarray(self.pt.rows(idx))
+        for key, flat in self.paged.items():
+            sub[key] = dict(sub[key])
+            sub[key]["attn"] = attention.paged_view(flat, rows,
+                                                    self.live_rows)
+        return sub
+
+    def scatter(self, sub, idx):
+        """Write a gathered sub-tree back. View positions whose blocks are
+        unmapped scatter into the trash block (dropped) — callers only
+        write back what gather handed out, so mapped data round-trips."""
+        rows = jnp.asarray(self.pt.rows(idx))
+        stripped = {}
+        for key, entry in sub.items():
+            if key in self.paged:
+                entry = dict(entry)
+                self.paged[key] = attention.paged_writeback(
+                    self.paged[key], entry["attn"], rows)
+                entry["attn"] = None
+            stripped[key] = entry
+        self.dense = _scatter(self.dense, stripped,
+                              jnp.asarray(idx, jnp.int32))
+
+    def run_chunk(self, params, idx, tokens, pos):
+        rows = jnp.asarray(self.pt.rows(idx))
+        self.dense, self.paged = engine.jit_paged_chunk_step(self.cfg)(
+            params, self.dense, self.paged, jnp.asarray(idx, jnp.int32),
+            rows, jnp.asarray(tokens), jnp.asarray(pos), self.live_rows)
+
+    def run_decode(self, params, tokens, pos, temps, key):
+        nxt, _, self.dense, self.paged = engine.jit_paged_decode_step(
+            self.cfg)(params, self.dense, self.paged, self._rows_all(),
+                      tokens, pos, temps, key, self.live_rows)
+        return nxt
+
+    def stats(self) -> dict:
+        return {"allocator": "paged", **self.pt.stats()}
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
 class SlotManager:
     """Fixed pool of ``num_slots`` decode-cache slots.
 
@@ -87,20 +272,49 @@ class SlotManager:
     the scheduler's request state); ``valid[i]`` masks live slots (the
     scheduler decodes the full pool every step; dead rows compute but
     are never read).
+
+    ``paged=True`` swaps the storage backing for the block-granular
+    allocator (module docstring): ``alloc`` then also needs the prompt's
+    blocks free, ``ensure`` must be called before a slot's write position
+    grows, and ``release`` returns the physical blocks it freed.
     """
 
-    def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int):
+    def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int,
+                 *, paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_slots = cache_slots
-        self.caches = T.init_caches(cfg, num_slots, cache_slots,
-                                    per_slot_pos=True)
-        # one-slot zero template: reset = scatter-broadcast of this
-        self._template = T.init_caches(cfg, 1, cache_slots,
-                                       per_slot_pos=True)
+        self.backing = (_PagedBacking(cfg, num_slots, cache_slots,
+                                      block_size, num_blocks)
+                        if paged else
+                        _ContiguousBacking(cfg, num_slots, cache_slots))
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self.owner: List[Optional[int]] = [None] * num_slots
         self.valid = np.zeros(num_slots, bool)
+
+    @property
+    def paged(self) -> bool:
+        return self.backing.is_paged
+
+    @property
+    def caches(self):
+        """The pooled cache pytree (contiguous backing only — the paged
+        backing's state is ``backing.dense`` + ``backing.paged``)."""
+        return self.backing.caches
+
+    @caches.setter
+    def caches(self, value):
+        assert not self.backing.is_paged, \
+            "caches is the contiguous backing's state; the paged backing " \
+            "holds backing.dense + backing.paged (use gather/scatter)"
+        self.backing.caches = value
+
+    @property
+    def position_capacity(self) -> int:
+        """Total cache positions backing the pool (the equal-memory axis
+        fig_serve compares allocators on)."""
+        return self.backing.position_capacity
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -112,48 +326,68 @@ class SlotManager:
     def live(self) -> List[int]:
         return [i for i in range(self.num_slots) if self.valid[i]]
 
-    def alloc(self, owner: int) -> Optional[int]:
-        """Claim a free slot for request ``owner``; zero its cache rows.
-        Returns the slot index, or None when the pool is full."""
-        if not self._free:
+    def can_admit(self, prompt_len: int = 0) -> bool:
+        """A free slot AND (paged) enough free blocks for the prompt."""
+        return bool(self._free) and self.backing.can_admit(prompt_len)
+
+    def alloc(self, owner: int, prompt_len: int = 0) -> Optional[int]:
+        """Claim a free slot for request ``owner``; zero its cache rows
+        (paged: map + zero the blocks covering the prompt). Returns the
+        slot index, or None when the pool/blocks are exhausted."""
+        if not self.can_admit(prompt_len):
             return None
         slot = self._free.pop()
-        self.caches = _reset(self.caches, self._template,
-                             jnp.asarray([slot], jnp.int32))
+        self.backing.alloc_reset(slot, prompt_len)
         self.owner[slot] = owner
         self.valid[slot] = True
         return slot
 
-    def release(self, slot: int):
-        """Evict (EOS / max-tokens / abort): mark free; the stale cache
-        rows are masked out by ``valid`` until the next alloc resets them."""
+    def ensure(self, slot: int, upto_pos: int) -> bool:
+        """Grow slot storage to cover writes up to ``upto_pos``. Always
+        True for contiguous; False when the paged pool is out of blocks
+        (the scheduler then preempts)."""
+        assert self.valid[slot], f"slot {slot} is not live"
+        return self.backing.ensure(slot, upto_pos)
+
+    def release(self, slot: int) -> List[int]:
+        """Evict (EOS / max-tokens / abort / preempt): mark free; returns
+        the physical blocks handed back (paged) — the stale cache rows are
+        masked out by ``valid`` until the next alloc resets them."""
         assert self.valid[slot], f"slot {slot} is not live"
         self.owner[slot] = None
         self.valid[slot] = False
         self._free.append(slot)
+        return self.backing.release_slot(slot)
 
     # -- pooled-cache data movement -----------------------------------------
 
     def gather(self, idx: Sequence[int]):
-        """Sub-caches for slots ``idx`` (batch axis = len(idx))."""
-        return _gather(self.caches, jnp.asarray(idx, jnp.int32))
+        """Sub-caches for slots ``idx`` (batch axis = len(idx)). The paged
+        backing materializes the page-table view — bit-identical to the
+        contiguous rows for every mapped position."""
+        return self.backing.gather(idx)
 
     def scatter(self, sub, idx: Sequence[int]):
         """Write sub-caches (from a bucketed chunk step) back into slots.
         Duplicate indices must carry identical rows (the pad-by-repeat
         contract): the scatter then stays deterministic."""
-        self.caches = _scatter(self.caches, sub,
-                               jnp.asarray(idx, jnp.int32))
+        self.backing.scatter(sub, idx)
 
     def run_chunk(self, params, idx: Sequence[int], tokens, pos):
         """Chunk-prefill slots ``idx`` in place (fused gather -> chunk ->
         scatter, one dispatch). Same pad-by-repeat contract as scatter."""
-        self.caches = _pooled_chunk_step(self.cfg)(
-            params, self.caches, jnp.asarray(idx, jnp.int32),
-            jnp.asarray(tokens), jnp.asarray(pos))
+        self.backing.run_chunk(params, idx, tokens, pos)
+
+    def run_decode(self, params, tokens, pos, temps, key):
+        """ONE fused decode over the whole pool; returns next tokens.
+        (Paged: gather-through-page-table -> decode -> scatter, still one
+        jitted program per tick.)"""
+        return self.backing.run_decode(params, tokens, pos, temps, key)
 
     def stats(self) -> dict:
         return {"num_slots": self.num_slots,
                 "live": int(self.valid.sum()),
                 "free": self.free_count,
-                "cache_slots": self.cache_slots}
+                "cache_slots": self.cache_slots,
+                "position_capacity": self.position_capacity,
+                **self.backing.stats()}

@@ -1,0 +1,236 @@
+"""BlockPool / PageTable properties and paged-view bit-identity with the
+contiguous slot layout: arbitrary alloc/grow/free sequences never
+double-assign a block, freed blocks are reusable, and gathering a cache
+through the page table round-trips bit-identically with a directly
+maintained contiguous mirror."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.models import attention
+from repro.serve.paging import BlockPool, PageTable
+
+
+# --------------------------------------------------------------------------
+# BlockPool basics
+# --------------------------------------------------------------------------
+
+def test_block_pool_alloc_free_lifo():
+    bp = BlockPool(3, block_size=4)
+    got = {bp.alloc(), bp.alloc(), bp.alloc()}
+    assert got == {0, 1, 2}
+    assert bp.alloc() is None and bp.free_count == 0 and bp.used_count == 3
+    bp.free(1)
+    assert bp.alloc() == 1          # LIFO reuse keeps hot blocks hot
+
+
+def test_block_pool_guards_double_free():
+    bp = BlockPool(2, block_size=4)
+    a = bp.alloc()
+    bp.free(a)
+    with pytest.raises(AssertionError):
+        bp.free(a)
+
+
+# --------------------------------------------------------------------------
+# PageTable mechanics
+# --------------------------------------------------------------------------
+
+def test_page_table_ensure_free_remap():
+    bp = BlockPool(4, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=14)   # last block partial
+    assert pt.blocks_per_slot == 4
+    ok, new = pt.ensure(0, 6)                # positions 0..6 -> blocks 0, 1
+    assert ok and len(new) == 2 and pt.mapped_blocks(0) == 2
+    ok, again = pt.ensure(0, 6)              # idempotent
+    assert ok and again == []
+    ok, part = pt.ensure(1, 13)              # needs 4, only 2 free: partial
+    assert not ok and len(part) == 2 and bp.free_count == 0
+    freed = pt.free_slot(0)
+    assert sorted(freed) == sorted(new)      # retire returns its blocks
+    ok, _ = pt.ensure(1, 13)                 # freed blocks immediately usable
+    assert ok and pt.mapped_blocks(1) == 4
+    pt.check_invariants()
+
+
+def test_page_table_rows_layout():
+    bs = 4
+    bp = BlockPool(4, block_size=bs)
+    pt = PageTable(bp, num_slots=2, slot_positions=10)
+    pt.ensure(0, 5)                          # blocks 0, 1 of slot 0
+    rows = pt.rows([0, 1])
+    assert rows.shape == (2, 10)             # view is exactly slot_positions
+    for lb in range(2):
+        phys = pt.table[0, lb]
+        np.testing.assert_array_equal(
+            rows[0, lb * bs:(lb + 1) * bs], phys * bs + np.arange(bs))
+    trash_floor = bp.num_blocks * bs
+    assert (rows[0, 8:] >= trash_floor).all()     # unmapped tail -> trash
+    assert (rows[1] >= trash_floor).all()         # whole unmapped slot
+
+
+def test_blocks_for_clamps_to_slot():
+    pt = PageTable(BlockPool(8, 4), num_slots=1, slot_positions=10)
+    assert pt.blocks_for(0) == 0
+    assert pt.blocks_for(1) == 1
+    assert pt.blocks_for(10) == 3
+    assert pt.blocks_for(10_000) == pt.blocks_per_slot   # never over-asks
+
+
+# --------------------------------------------------------------------------
+# property: arbitrary alloc/grow/free sequences keep the pool sound
+# --------------------------------------------------------------------------
+
+def test_property_alloc_grow_free_never_double_assigns():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def prop(data):
+        num_blocks = data.draw(st.integers(2, 12))
+        bs = data.draw(st.sampled_from([2, 4]))
+        num_slots = data.draw(st.integers(1, 4))
+        slot_pos = data.draw(st.integers(bs, 4 * bs))
+        bp = BlockPool(num_blocks, bs)
+        pt = PageTable(bp, num_slots, slot_pos)
+        for _ in range(data.draw(st.integers(1, 30))):
+            slot = data.draw(st.integers(0, num_slots - 1))
+            if data.draw(st.booleans()):
+                pt.ensure(slot, data.draw(st.integers(0, slot_pos - 1)))
+            else:
+                freed = pt.free_slot(slot)
+                for b in freed:                 # freed -> immediately free
+                    assert not bp.allocated[b]
+            pt.check_invariants()               # incl. no double-assignment
+            assert bp.free_count + bp.used_count == num_blocks
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# property: page-table gather round-trips bit-identically with contiguous
+# --------------------------------------------------------------------------
+
+def _zero_blocks(flat, blocks, bs):
+    """The engine's reset_block_rows contract for freshly-mapped blocks."""
+    rows = PageTable.block_rows(blocks, bs)
+    return attention.KVCache(k=flat.k.at[:, rows].set(0),
+                             v=flat.v.at[:, rows].set(0),
+                             pos=flat.pos.at[:, rows].set(-1))
+
+
+def test_property_paged_view_matches_contiguous_mirror():
+    """Random grow/write/free sequences against BOTH layouts: the view
+    gathered through the page table must equal the contiguous mirror
+    bit-for-bit at every step (unmapped positions read as the zeroed rows
+    a contiguous slot would hold)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    P, KV, HD, BS, SLOTS = 1, 1, 2, 4, 2
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def prop(data):
+        num_blocks = data.draw(st.integers(2, 6))
+        V = data.draw(st.sampled_from([6, 8, 11]))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        flat = attention.make_paged_cache(num_blocks, BS, KV, HD,
+                                          dtype=jnp.float32, periods=P)
+        # scribble the pool so "reads as zero" is proven by masking +
+        # block resets, not by luck of a fresh allocation
+        flat = attention.KVCache(
+            k=flat.k + 7.0, v=flat.v - 3.0, pos=flat.pos + 99)
+        live = num_blocks * BS
+        bp = BlockPool(num_blocks, BS)
+        pt = PageTable(bp, SLOTS, V)
+        ref_k = np.zeros((P, SLOTS, V, KV, HD), np.float32)
+        ref_v = np.zeros_like(ref_k)
+        ref_pos = np.full((P, SLOTS, V), -1, np.int32)
+
+        for _ in range(data.draw(st.integers(1, 12))):
+            slot = data.draw(st.integers(0, SLOTS - 1))
+            op = data.draw(st.sampled_from(["grow", "write", "free"]))
+            if op == "grow":
+                _, new = pt.ensure(slot, data.draw(st.integers(0, V - 1)))
+                if new:
+                    flat = _zero_blocks(flat, new, BS)
+            elif op == "write":
+                hi = min(pt.mapped_blocks(slot) * BS, V)
+                if hi == 0:
+                    continue
+                a = data.draw(st.integers(0, hi - 1))
+                b = data.draw(st.integers(a + 1, hi))
+                rows = jnp.asarray(pt.rows([slot]))
+                view = attention.paged_view(flat, rows, live)
+                nk = rng.normal(size=(P, 1, b - a, KV, HD)).astype(np.float32)
+                nv = rng.normal(size=(P, 1, b - a, KV, HD)).astype(np.float32)
+                npos = rng.integers(0, 100, (P, 1, b - a)).astype(np.int32)
+                view = attention.KVCache(k=view.k.at[:, :, a:b].set(nk),
+                                         v=view.v.at[:, :, a:b].set(nv),
+                                         pos=view.pos.at[:, :, a:b].set(npos))
+                flat = attention.paged_writeback(flat, view, rows)
+                ref_k[:, slot, a:b] = nk[:, 0]
+                ref_v[:, slot, a:b] = nv[:, 0]
+                ref_pos[:, slot, a:b] = npos[:, 0]
+            else:
+                pt.free_slot(slot)
+                ref_k[:, slot] = 0.0
+                ref_v[:, slot] = 0.0
+                ref_pos[:, slot] = -1
+            pt.check_invariants()
+            got = attention.paged_view(flat, jnp.asarray(pt.rows()), live)
+            np.testing.assert_array_equal(np.asarray(got.k), ref_k)
+            np.testing.assert_array_equal(np.asarray(got.v), ref_v)
+            np.testing.assert_array_equal(np.asarray(got.pos), ref_pos)
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# SlotManager facade over the paged backing (no model step needed)
+# --------------------------------------------------------------------------
+
+def test_paged_slot_manager_gather_is_zeroed_after_realloc():
+    """alloc -> dirty -> release -> alloc again: the paged gather must
+    read the empty-slot encoding, exactly like the contiguous reset."""
+    import jax
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.serve import SlotManager
+
+    cfg = configs.reduced_config("gemma-2b")
+    sm = SlotManager(cfg, num_slots=2, cache_slots=16, paged=True,
+                     block_size=4, num_blocks=5)
+    a = sm.alloc(owner=1, prompt_len=9)          # maps 3 blocks
+    assert a is not None and sm.stats()["blocks_used"] == 3
+    dirty = jax.tree_util.tree_map(lambda l: l + 1, sm.gather([a]))
+    sm.scatter(dirty, [a])
+    freed = sm.release(a)
+    assert len(freed) == 3 and sm.stats()["blocks_used"] == 0
+    a2 = sm.alloc(owner=2, prompt_len=9)
+    fresh = sm.gather([a2])
+    zeros = T.init_caches(cfg, 1, 16, per_slot_pos=True)
+    for x, z in zip(jax.tree_util.tree_leaves(fresh),
+                    jax.tree_util.tree_leaves(zeros)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+def test_paged_slot_manager_admission_gates_on_blocks():
+    from repro import configs
+    from repro.serve import SlotManager
+
+    cfg = configs.reduced_config("gemma-2b")
+    sm = SlotManager(cfg, num_slots=4, cache_slots=32, paged=True,
+                     block_size=8, num_blocks=3)
+    assert sm.can_admit(prompt_len=24)           # 3 blocks: fits exactly
+    a = sm.alloc(owner=1, prompt_len=9)          # takes 2 blocks
+    assert not sm.can_admit(prompt_len=9)        # 1 block left, needs 2
+    assert sm.alloc(owner=2, prompt_len=9) is None
+    assert sm.can_admit(prompt_len=8)            # 1 block suffices
+    assert not sm.ensure(a, 31)                  # growth past pool: OOB
+    sm.release(a)
+    assert sm.can_admit(prompt_len=24)

@@ -213,6 +213,67 @@ def test_service_seed_needs_reference(svc):
 
 
 # --------------------------------------------------------------------------
+# adversarial shapes: the bucketing edge cases submit() must not bend on
+# --------------------------------------------------------------------------
+
+def test_service_empty_submit(svc):
+    assert svc.submit([]) == []
+
+
+def test_service_singleton_batch_matches_direct(svc, rng):
+    """A lone request (batch of one, nothing to amortize padding against)
+    must still be bit-identical to the direct jitted kernel."""
+    s = rng.normal(size=CFG.seq_bucket).astype(np.float32)
+    r = rng.normal(size=5).astype(np.float32)
+    got = svc.submit([Request("dtw", {"s": s, "r": r})])[0]
+    want = float(dtw_lib.dtw_tiled(jnp.asarray(s), jnp.asarray(r),
+                                   tile_r=CFG.dtw_tile,
+                                   tile_c=CFG.dtw_tile)[1])
+    assert float(got["distance"]) == want
+
+
+def test_service_exact_bucket_boundary_lengths(svc, rng):
+    """Lengths at bucket-1 / bucket / bucket+1: the off-by-one edges of
+    BucketSpec.padded (bucket is padding-free, bucket+1 spills into the
+    next bucket) stay bit-identical to direct calls."""
+    lens = (CFG.sort_bucket - 1, CFG.sort_bucket, CFG.sort_bucket + 1, 1)
+    reqs, want = [], []
+    for n in lens:
+        keys = rng.integers(0, 2**32, n, dtype=np.uint32)
+        reqs.append(Request("sort", {"keys": keys}))
+        want.append(rsort.radix_sort(jnp.asarray(keys),
+                                     num_chunks=CFG.sort_chunks,
+                                     min_parallel=0))
+    for got, (sk, sv) in zip(svc.submit(reqs), want):
+        np.testing.assert_array_equal(got["keys"], np.asarray(sk))
+        np.testing.assert_array_equal(got["vals"], np.asarray(sv))
+
+
+def test_service_one_bucket_vs_distinct_buckets(svc, rng):
+    """All requests sharing ONE bucket vs every request in its own
+    bucket: grouping must be invisible in the results (each compared to
+    the direct jitted kernel)."""
+    direct_fn = jax.jit(affine_scan)
+    same_bucket = (9, 11, 14)        # all pad to scan_bucket=16
+    distinct = (5, 20, 40)           # pad to 16, 32, 48
+    spec = BucketSpec(CFG.scan_bucket)
+    assert len(bucketing.group_by_bucket(list(same_bucket), spec)) == 1
+    assert len(bucketing.group_by_bucket(list(distinct), spec)) == 3
+    for lens in (same_bucket, distinct):
+        reqs, want = [], []
+        for t in lens:
+            a = rng.normal(size=t).astype(np.float32)
+            b = rng.normal(size=t).astype(np.float32)
+            x0 = np.float32(rng.normal())
+            reqs.append(Request("scan1d", {"a": a, "b": b, "x0": x0}))
+            want.append(np.asarray(direct_fn(jnp.asarray(a),
+                                             jnp.asarray(b),
+                                             jnp.asarray(x0))))
+        for got, xs in zip(svc.submit(reqs), want):
+            np.testing.assert_array_equal(got["xs"], xs)
+
+
+# --------------------------------------------------------------------------
 # end-to-end mapper: batched service == per-read ReadMapper (bit-identical)
 # --------------------------------------------------------------------------
 

@@ -76,9 +76,12 @@ def test_staggered_arrivals_match_per_request_generate(model, request):
         assert c.reason == reason
 
 
-def test_property_random_arrival_patterns(gemma):
+@pytest.mark.parametrize("allocator", ["contiguous", "paged"])
+def test_property_random_arrival_patterns(gemma, allocator):
     """Property test: random prompt lengths / budgets / arrival patterns
-    keep the scheduler token-identical to per-request generate."""
+    keep the scheduler token-identical to per-request generate — under
+    BOTH slot allocators (paged runs block alloc/grow/free on every
+    trace; a sub-equal-memory pool also exercises preempt-on-OOB)."""
     hypothesis = pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
@@ -95,7 +98,9 @@ def test_property_random_arrival_patterns(gemma):
         stagger = data.draw(st.integers(1, 4))
         prompts = _prompts(rng, cfg.vocab, lens)
         sc = SchedulerConfig(num_slots=2, max_len=48, prefill_chunk=8,
-                             cache_requests=False)
+                             cache_requests=False, allocator=allocator,
+                             block_size=8,
+                             num_blocks=8 if allocator == "paged" else None)
         sched = Scheduler(cfg, params, sc)
         rid2i = {}
         submitted = 0
@@ -117,6 +122,57 @@ def test_property_random_arrival_patterns(gemma):
             assert c.tokens.tolist() == oracle[key]
 
     prop()
+
+
+# --------------------------------------------------------------------------
+# paged vs contiguous: the allocators must be observationally identical
+# --------------------------------------------------------------------------
+
+def _run_trace(cfg, params, prompts, mnts, eos, **sc_kw):
+    """Replay one staggered arrival trace; returns ({idx: Completion},
+    scheduler). Submissions interleave with steps so slots are reused."""
+    sc = SchedulerConfig(num_slots=3, max_len=48, prefill_chunk=8,
+                         eos_token=eos, cache_requests=False, **sc_kw)
+    sched = Scheduler(cfg, params, sc)
+    rid2i, submitted, steps = {}, 0, 0
+    while submitted < len(prompts) or sched.pending or sched.live:
+        if submitted < len(prompts) and steps % 2 == 0:
+            rid2i[sched.submit([prompts[submitted]],
+                               max_new_tokens=mnts[submitted])[0]] = submitted
+            submitted += 1
+        sched.step()
+        steps += 1
+    return {rid2i[c.rid]: c for c in sched.drain()}, sched
+
+
+@pytest.mark.parametrize("num_blocks", [None, 6])
+def test_paged_matches_contiguous_differential(gemma, num_blocks):
+    """Same arrival trace (staggered, mixed-length, slot reuse) through
+    both allocators: token-identical greedy streams and identical finish
+    reasons. num_blocks=None is the equal-memory pool (scheduling
+    provably identical); num_blocks=6 under-provisions so growth hits
+    preempt-on-OOB — restart-from-scratch must be invisible under greedy."""
+    cfg, params = gemma
+    rng = np.random.default_rng(7)
+    lens = [3, 17, 9, 24, 5, 12]
+    mnts = [6, 4, 8, 5, 7, 3]
+    prompts = _prompts(rng, cfg.vocab, lens)
+    eos = 5
+    base, _ = _run_trace(cfg, params, prompts, mnts, eos)
+    paged, sched = _run_trace(cfg, params, prompts, mnts, eos,
+                              allocator="paged", block_size=8,
+                              num_blocks=num_blocks)
+    assert set(base) == set(paged) == set(range(len(prompts)))
+    for i in range(len(prompts)):
+        assert paged[i].tokens.tolist() == base[i].tokens.tolist(), \
+            f"request {i}: paged {paged[i].tokens.tolist()} != " \
+            f"contiguous {base[i].tokens.tolist()}"
+        assert paged[i].reason == base[i].reason
+    if num_blocks is None:
+        assert sched.counters["preempted"] == 0   # equal memory: no OOB
+    else:
+        assert sched.counters["preempted"] >= 1   # the path really ran
+    assert sched.stats()["blocks_used"] == 0      # retire freed everything
 
 
 # --------------------------------------------------------------------------
@@ -244,6 +300,22 @@ def test_sample_token_per_slot_temperatures():
 # request cache (zipfian traffic)
 # --------------------------------------------------------------------------
 
+def test_request_cache_key_includes_dtype_and_shape():
+    """Regression: raw prompt bytes collide across dtypes/shapes — e.g.
+    int64([1]) and int32([1, 0]) share little-endian bytes, as do (4,)
+    and (2, 2) views of one buffer. The key must separate them."""
+    a = np.asarray([1, 0], np.int32)
+    b = np.asarray([1], np.int64)
+    assert a.tobytes() == b.tobytes()           # the collision being fixed
+    assert RequestCache.key(a, 4, None) != RequestCache.key(b, 4, None)
+    c = np.asarray([[1, 0], [2, 0]], np.int32)
+    d = np.asarray([1, 0, 2, 0], np.int32)
+    assert c.tobytes() == d.tobytes()
+    assert RequestCache.key(c, 4, None) != RequestCache.key(d, 4, None)
+    # equal arrays still key equal (the cache still caches)
+    assert RequestCache.key(a, 4, None) == RequestCache.key(a.copy(), 4, None)
+
+
 def test_request_cache_hits_and_eviction():
     rc = RequestCache(maxsize=2)
     k1 = RequestCache.key(np.asarray([1, 2], np.int32), 4, None)
@@ -303,6 +375,12 @@ def test_kernel_service_generate_adapter(rwkv):
         ref, _ = generate(params, cfg, p, 4, prefill_chunk=8)
         assert g["tokens"].tolist() == ref.tolist()
 
+    # pool-occupancy stats surface through the service front door
+    st = svc.stats()
+    assert "generate" in st["kernels"]
+    assert st["lm"]["num_slots"] == 2 and "allocator" in st["lm"]
+
     svc_no_lm = KernelService()
     with pytest.raises(ValueError, match="generate kernel needs"):
         svc_no_lm.submit([Request("generate", {"prompt": prompts[0]})])
+    assert "lm" not in svc_no_lm.stats()
