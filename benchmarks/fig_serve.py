@@ -20,7 +20,14 @@ A second phase replays a zipfian repeat mix through the scheduler's
 memoizing request cache and reports the hit rate (> 0 gates) and the
 cached-traffic throughput.
 
-    PYTHONPATH=src python benchmarks/fig_serve.py [--smoke]
+``--paged`` adds the equal-cache-memory occupancy comparison between the
+contiguous and paged slot allocators; ``--preempt swap`` additionally
+compares the preemption policies under the overload mix — recompute's
+wasted decode steps vs swap's bytes moved through the host SwapStore,
+plus the reserved-admission (zero-preemption QoS) arm.
+
+    PYTHONPATH=src python benchmarks/fig_serve.py \
+        [--smoke] [--paged] [--preempt swap]
 """
 
 from __future__ import annotations
@@ -54,11 +61,11 @@ def _workload(rng, n_requests: int, vocab: int, max_prompt: int,
 def _run_policy(cfg, params, sc: SchedulerConfig, prompts, mnts):
     """Serve the workload; returns (wall_s, useful_tokens, latencies)."""
     sched = Scheduler(cfg, params, sc)
-    t0 = time.time()
+    t0 = time.perf_counter()        # monotonic, like Completion stamps
     for p, m in zip(prompts, mnts):
         sched.submit([p], max_new_tokens=m)
     done = sched.drain()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     toks = sum(len(c.tokens) for c in done)
     lats = np.asarray([c.latency for c in done])
     return wall, toks, lats, sched
@@ -111,11 +118,11 @@ def bench_zipf_cache(rows, cfg, params, sc_kw, rng, n_requests: int,
     picks = rng.choice(distinct, size=n_requests, p=probs)
     sc = SchedulerConfig(admit="continuous", cache_requests=True, **sc_kw)
     sched = Scheduler(cfg, params, sc)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in picks:
         sched.submit([pool[i]], max_new_tokens=8)
     sched.drain()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     hr = sched.request_cache.hit_rate
     rows.append(common.emit(
         "fig_serve.zipf_cache", wall * 1e6 / n_requests,
@@ -124,7 +131,37 @@ def bench_zipf_cache(rows, cfg, params, sc_kw, rng, n_requests: int,
     return hr
 
 
-def bench_paged_occupancy(rows, smoke: bool):
+def _occupancy_arm(rows, cfg, params, prompts, mnts, arm, sc_kw, ch):
+    """Serve the workload through one allocator/policy arm; returns the
+    USEFUL-work occupancy (a request's surviving run holds a slot for
+    decode-ramp + generated ticks — recomputed from the completions so
+    preemption thrash, i.e. discarded ticks, cannot inflate the
+    concurrency) plus the policy's waste counters."""
+    sched = Scheduler(cfg, params, SchedulerConfig(**sc_kw))
+    for p, m in zip(prompts, mnts):
+        sched.submit([p], max_new_tokens=m)
+    done = sched.drain()
+    st = sched.stats()
+    useful_ticks = sum(
+        (c.prompt_len - 1) - ((c.prompt_len - 1) // ch) * ch
+        + len(c.tokens) for c in done)
+    occ = useful_ticks / max(st["decode_steps"], 1)
+    # the policy trade-off: recompute pays in redone decode steps,
+    # swap pays in bytes over the host link
+    waste = (st.get("recomputed_decode_steps", 0),
+             st.get("swap_bytes_out", 0))
+    rows.append(common.emit(
+        f"fig_serve.occupancy.{arm}", occ * 1e6,
+        f"useful_live={occ:.2f},"
+        f"raw_live={st['mean_occupancy']:.2f},"
+        f"capacity={sched.slots.position_capacity},"
+        f"preempted={st.get('preempted', 0)},"
+        f"recomputed_decode_steps={waste[0]},"
+        f"swap_bytes={waste[1]}"))
+    return occ, waste, sched
+
+
+def bench_paged_occupancy(rows, smoke: bool, preempt: str = "recompute"):
     """Equal-cache-memory occupancy: paged vs contiguous allocator under
     the Pareto mixed-length mix (the ISSUE gate: >= 1.5x admitted
     concurrency). Both schedulers get the SAME byte budget of
@@ -132,7 +169,15 @@ def bench_paged_occupancy(rows, smoke: bool):
     into worst-case max_len slots, the paged one into blocks it maps as
     requests actually grow — short requests stop stranding pool memory,
     so more of them are live per decode tick. Runs on an attention model
-    (gemma) — paging targets KV; O(1)-state archs have nothing to page."""
+    (gemma) — paging targets KV; O(1)-state archs have nothing to page.
+
+    With ``preempt='swap'`` the preemption policies are also compared on
+    an OVERLOAD pool (half the equal-memory blocks, so growth genuinely
+    hits preempt-on-OOB): recompute's wasted decode steps vs the swap
+    policy's bytes moved through the host SwapStore, plus reserved
+    admission (the zero-preemption QoS trade-off, reported not gated).
+    Gate: swap useful-work occupancy >= recompute's — buying back the
+    wasted steps with a block copy must not cost concurrency."""
     cfg = configs.reduced_config("gemma-2b")
     params = T.init_model(jax.random.PRNGKey(0), cfg)
     # own rng: the phase's workload must not depend on how many draws
@@ -145,45 +190,74 @@ def bench_paged_occupancy(rows, smoke: bool):
     contig_slots = 2 if smoke else 4
     budget = contig_slots * max_len             # cache positions (== bytes)
     prompts, mnts = _workload(rng, n_req, cfg.vocab, max_prompt, tail_new)
-    occ = {}
-    for alloc in ("contiguous", "paged"):
-        kw = dict(num_slots=contig_slots, max_len=max_len, prefill_chunk=ch,
-                  cache_requests=False)
-        if alloc == "paged":
-            # same memory, more slots: width is cheap (dead rows compute
-            # junk), positions are the scarce resource being paged. The
-            # -1 keeps the TRASH sentinel block inside the byte budget:
-            # physical rows = (num_blocks + 1) * block <= budget.
-            kw.update(num_slots=4 * contig_slots, allocator="paged",
-                      block_size=block, num_blocks=budget // block - 1)
-        sched = Scheduler(cfg, params, SchedulerConfig(**kw))
-        if alloc == "paged":                    # equal memory incl. trash
-            assert (sched.slots.position_capacity + block) <= budget
-        for p, m in zip(prompts, mnts):
-            sched.submit([p], max_new_tokens=m)
-        done = sched.drain()
-        st = sched.stats()
-        # USEFUL occupancy only: a request's surviving run holds a slot
-        # for (decode-ramp + generated) ticks — recomputed from the
-        # completions so preemption thrash (discarded ticks) cannot
-        # inflate the paged side's concurrency.
-        useful_ticks = sum(
-            (c.prompt_len - 1) - ((c.prompt_len - 1) // ch) * ch
-            + len(c.tokens) for c in done)
-        occ[alloc] = useful_ticks / max(st["decode_steps"], 1)
-        rows.append(common.emit(
-            f"fig_serve.occupancy.{alloc}", occ[alloc] * 1e6,
-            f"useful_live={occ[alloc]:.2f},"
-            f"raw_live={st['mean_occupancy']:.2f},"
-            f"capacity={sched.slots.position_capacity},"
-            f"preempted={st.get('preempted', 0)}"))
-    ratio = occ["paged"] / occ["contiguous"]
+    base_kw = dict(num_slots=contig_slots, max_len=max_len,
+                   prefill_chunk=ch, cache_requests=False)
+    # same memory, more slots: width is cheap (dead rows compute junk),
+    # positions are the scarce resource being paged. The -1 keeps the
+    # TRASH sentinel block inside the byte budget: physical rows =
+    # (num_blocks + 1) * block <= budget.
+    paged_kw = dict(base_kw, num_slots=4 * contig_slots, allocator="paged",
+                    block_size=block, num_blocks=budget // block - 1)
+    occ, _, _ = _occupancy_arm(rows, cfg, params, prompts, mnts,
+                               "contiguous", base_kw, ch)
+    occ_p, _, sched = _occupancy_arm(rows, cfg, params, prompts, mnts,
+                                     "paged", paged_kw, ch)
+    assert (sched.slots.position_capacity + block) <= budget  # incl. trash
+    ratio = occ_p / occ
     rows.append(common.emit("fig_serve.paged_vs_contiguous", 0.0,
                             f"occupancy_ratio={ratio:.2f}"))
+    if preempt == "swap":
+        bench_preempt_policies(rows, cfg, params, prompts, mnts,
+                               paged_kw, ch)
     return ratio
 
 
-def run(rows=None, smoke: bool = False, paged: bool = False):
+def bench_preempt_policies(rows, cfg, params, prompts, mnts, paged_kw, ch):
+    """Preemption-policy comparison on an overloaded block pool (half
+    the equal-memory provision — growth OOBs repeatedly): what does a
+    preemption COST? recompute redoes the victim's decode steps, swap
+    moves its block bytes host-side and resumes, reserved admission
+    books the whole budget up front and never preempts."""
+    over_kw = dict(paged_kw, num_blocks=paged_kw["num_blocks"] // 2)
+    res = {}
+    for arm, extra in (("recompute", {}),
+                       ("swap", {"preempt": "swap"}),
+                       ("reserved", {"admission": "reserved"})):
+        res[arm] = _occupancy_arm(rows, cfg, params, prompts, mnts,
+                                  f"overload_{arm}", dict(over_kw, **extra),
+                                  ch)
+    occ = {arm: r[0] for arm, r in res.items()}
+    wasted_steps = res["recompute"][1][0]
+    swap_bytes = res["swap"][1][1]
+    rows.append(common.emit(
+        "fig_serve.preempt_swap_vs_recompute", 0.0,
+        f"occupancy_swap={occ['swap']:.2f},"
+        f"occupancy_recompute={occ['recompute']:.2f},"
+        f"wasted_decode_steps={wasted_steps},"
+        f"swap_bytes={swap_bytes},"
+        f"occupancy_reserved={occ['reserved']:.2f}"))
+    print(f"# fig_serve: preempt policies on the overload pool — "
+          f"recompute {occ['recompute']:.2f} useful-live "
+          f"(wasted {wasted_steps} decode steps), "
+          f"swap {occ['swap']:.2f} ({swap_bytes} bytes swapped, "
+          f"0 recomputed), reserved {occ['reserved']:.2f} "
+          f"({res['reserved'][2].counters['preempted']} preemptions)")
+    # the comparison must not be vacuous: overload really preempts, and
+    # the swap arm really resumes instead of recomputing
+    assert res["recompute"][2].counters["preempted"] >= 1, \
+        "overload pool never preempted (comparison is vacuous)"
+    assert res["swap"][2].counters["recomputed_decode_steps"] == 0
+    assert res["reserved"][2].counters["preempted"] == 0
+    # the preserved-work gate: buying back wasted decode steps with a
+    # block copy must not cost useful-work occupancy
+    assert occ["swap"] >= occ["recompute"], \
+        f"swap occupancy {occ['swap']:.2f} < recompute " \
+        f"{occ['recompute']:.2f}"
+    return occ
+
+
+def run(rows=None, smoke: bool = False, paged: bool = False,
+        preempt: str = "recompute"):
     rows = rows if rows is not None else []
     print("# fig_serve: continuous vs static batching on the slot pool")
     arch = "rwkv6-1.6b"                 # O(1)-state decode: cache-cheap
@@ -207,7 +281,7 @@ def run(rows=None, smoke: bool = False, paged: bool = False):
           f"(gate >= 2x), step ratio {step_ratio:.2f}x, "
           f"zipf cache hit rate {hr:.2f} (gate > 0)")
     if paged:
-        ratio = bench_paged_occupancy(rows, smoke)
+        ratio = bench_paged_occupancy(rows, smoke, preempt=preempt)
         print(f"# fig_serve: paged/contiguous occupancy {ratio:.2f}x "
               f"at equal cache memory (gate >= 1.5x)")
         assert ratio >= 1.5, \
@@ -236,8 +310,14 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="also run the paged-vs-contiguous equal-memory "
                          "occupancy comparison (gate >= 1.5x)")
+    ap.add_argument("--preempt", choices=["recompute", "swap"],
+                    default="recompute",
+                    help="with --paged: 'swap' adds the swap-out and "
+                         "reserved-admission arms (wasted decode steps "
+                         "vs swap bytes; gate: swap occupancy >= "
+                         "recompute's)")
     args = ap.parse_args(argv)
-    run(smoke=args.smoke, paged=args.paged)
+    run(smoke=args.smoke, paged=args.paged, preempt=args.preempt)
     return 0
 
 

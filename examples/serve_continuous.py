@@ -36,6 +36,18 @@ def main():
                     help="block-granular slot allocator (try with an "
                          "attention arch, e.g. --arch gemma-2b)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged: shrink below the equal-memory default "
+                         "to watch preemptions happen")
+    ap.add_argument("--preempt", choices=["recompute", "swap"],
+                    default="recompute",
+                    help="paged: what preempt-on-OOB discards — 'swap' "
+                         "parks the victim's blocks host-side and "
+                         "resumes it with zero recomputed decode steps")
+    ap.add_argument("--reserved", action="store_true",
+                    help="paged: book blocks for prompt+max_new at "
+                         "admission (QoS: admitted requests are never "
+                         "preempted)")
     args = ap.parse_args()
 
     cfg = configs.reduced_config(args.arch)
@@ -46,7 +58,9 @@ def main():
         num_slots=args.slots, max_len=args.max_prompt + args.max_new + 8,
         prefill_chunk=16, eos_token=cfg.vocab - 1,
         allocator="paged" if args.paged else "contiguous",
-        block_size=args.block_size))
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        preempt=args.preempt,
+        admission="reserved" if args.reserved else "optimistic"))
 
     prompts = [rng.integers(0, cfg.vocab,
                             int(rng.integers(4, args.max_prompt))
@@ -93,7 +107,10 @@ def main():
     if args.paged:
         print(f"[serve_continuous] paged allocator: "
               f"{st['blocks_total']} blocks x {st['block_size']} positions, "
-              f"{st.get('preempted', 0)} preemptions, "
+              f"{st.get('preempted', 0)} preemptions "
+              f"({args.preempt}: {st.get('recomputed_decode_steps', 0)} "
+              f"recomputed decode steps, "
+              f"{st.get('swap_bytes_out', 0)} bytes swapped out), "
               f"mean occupancy {st.get('mean_occupancy', 0):.2f}")
     print("[serve_continuous] OK")
 

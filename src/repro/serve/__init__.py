@@ -4,7 +4,8 @@
                 position vectors, sampling, per-request ``generate``,
                 fused paged (page-gather -> step -> page-scatter) steps.
   * paging    — BlockPool / PageTable: block-granular allocation for the
-                slot pool's global-attention KV.
+                slot pool's global-attention KV, plus the SwapStore
+                backing zero-recompute (swap-out) preemption.
   * slots     — SlotManager: the fixed pool of static-shape cache slots
                 (contiguous or paged backing behind one facade).
   * scheduler — Scheduler: admit -> chunk-prefill -> fused decode ->
@@ -16,7 +17,7 @@
 from repro.serve.engine import (cache_shardings, generate, make_chunk_step,
                                 make_decode_step, make_prefill_step,
                                 make_slot_decode_step, sample_token)
-from repro.serve.paging import BlockPool, PageTable
+from repro.serve.paging import BlockPool, PageTable, SwapStore
 from repro.serve.scheduler import (Completion, RequestCache, Scheduler,
                                    SchedulerConfig)
 from repro.serve.slots import SlotManager
@@ -24,4 +25,5 @@ from repro.serve.slots import SlotManager
 __all__ = ["cache_shardings", "generate", "make_chunk_step",
            "make_decode_step", "make_prefill_step", "make_slot_decode_step",
            "sample_token", "BlockPool", "Completion", "PageTable",
-           "RequestCache", "Scheduler", "SchedulerConfig", "SlotManager"]
+           "RequestCache", "Scheduler", "SchedulerConfig", "SlotManager",
+           "SwapStore"]

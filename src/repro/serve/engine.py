@@ -231,6 +231,36 @@ def reset_block_rows(paged, rows):
             for key, c in paged.items()}
 
 
+@jax.jit
+def gather_block_rows(paged, rows):
+    """Pull the physical ``rows`` of every paged cache leaf — the
+    device half of swap-out preemption (the host then ``device_get``s
+    the result into a SwapStore). ``rows`` comes from
+    PageTable.block_rows over the victim's mapped blocks, pow2-padded
+    with trash rows so compiles stay O(log blocks_per_slot)."""
+    from repro.models.attention import KVCache
+
+    return {key: KVCache(k=jnp.take(c.k, rows, axis=1),
+                         v=jnp.take(c.v, rows, axis=1),
+                         pos=jnp.take(c.pos, rows, axis=1))
+            for key, c in paged.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def upload_block_rows(paged, saved, rows):
+    """Write saved block bytes into freshly-mapped physical ``rows`` —
+    the resume half of swap preemption (inverse of gather_block_rows,
+    same PageTable.block_rows layout). Pad rows land in the trash block
+    with identical (zero) payloads, so the scatter is deterministic."""
+    from repro.models.attention import KVCache
+
+    return {key: KVCache(
+        k=c.k.at[:, rows].set(saved[key].k.astype(c.k.dtype)),
+        v=c.v.at[:, rows].set(saved[key].v.astype(c.v.dtype)),
+        pos=c.pos.at[:, rows].set(saved[key].pos.astype(jnp.int32)))
+            for key, c in paged.items()}
+
+
 def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
              *, temperature: float = 0.0, eos_token: Optional[int] = None,
              prefill_chunk: int = 32, cache_slots: int = 0,

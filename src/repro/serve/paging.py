@@ -26,11 +26,19 @@ the model computed for dead/unmapped positions land there instead of
 corrupting live blocks. Mapped physical blocks are unique across the
 table (the double-assignment invariant the property tests pin), so every
 scatter over mapped rows is deterministic.
+
+Preemption support: ``PageTable.swap_out``/``swap_in`` evict a slot's
+mapping and later re-map the same logical prefix onto fresh physical
+blocks, and ``SwapStore`` is the host-side buffer holding the evicted
+block *bytes* (plus the saved page-table row) keyed by request id — the
+time half of the paper's wasted-work argument: preempting a victim
+should cost a block copy, not every decode step it already paid for.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -133,6 +141,43 @@ class PageTable:
         self.table[slot] = self.trash
         return freed
 
+    # -- swap-out preemption --------------------------------------------
+
+    def swap_out(self, slot: int) -> Tuple[np.ndarray, List[int]]:
+        """Evict ``slot`` for a later resume: returns (saved page-table
+        row, freed physical blocks in logical order). The physical ids in
+        the saved row are dead the moment this returns — what the resume
+        needs is WHICH logical blocks were mapped, and ``ensure`` maps
+        bottom-up so that is always the [0, n) prefix. The caller copies
+        the blocks' bytes out (engine.gather_block_rows) BEFORE calling
+        this, then parks both in a SwapStore."""
+        row = self.table[slot].copy()
+        mapped = np.flatnonzero(row != self.trash)
+        assert mapped.size == 0 or (mapped == np.arange(mapped.size)).all(), \
+            f"slot {slot} mapping is not a logical prefix"
+        freed = self.free_slot(slot)
+        return row, freed
+
+    def swap_in(self, slot: int, n_blocks: int) -> Optional[List[int]]:
+        """Re-map ``n_blocks`` fresh physical blocks as the logical
+        prefix of an empty slot — the resume half of swap preemption.
+        All-or-nothing: returns the new physical blocks in logical order,
+        or None (nothing mapped) when the pool cannot supply them. The
+        caller uploads the saved bytes into the returned blocks' rows
+        (engine.upload_block_rows); it must NOT zero them."""
+        assert 0 <= n_blocks <= self.blocks_per_slot, n_blocks
+        assert (self.table[slot] == self.trash).all(), \
+            f"slot {slot} is not empty"
+        if not self.can_map(n_blocks):
+            return None
+        new: List[int] = []
+        for lb in range(n_blocks):
+            b = self.pool.alloc()
+            assert b is not None, "can_map lied about pool capacity"
+            self.table[slot, lb] = b
+            new.append(b)
+        return new
+
     # -- device-facing index vectors ------------------------------------
 
     def rows(self, slots: Optional[Sequence[int]] = None) -> np.ndarray:
@@ -172,3 +217,65 @@ class PageTable:
                 "blocks_used": used,
                 "block_size": self.block_size,
                 "block_utilization": used / self.pool.num_blocks}
+
+
+# ---------------------------------------------------------------------------
+# host-side swap buffer (preempt="swap")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SwapEntry:
+    """Everything a preempted request needs to resume in a fresh slot
+    with zero recomputed decode steps: how many logical blocks were
+    mapped, the saved page-table row, the blocks' KV bytes per paged
+    cache key (host numpy, logical order), and the slot's dense per-slot
+    leaves (SSM state, window rings, per-row pos)."""
+    n_blocks: int
+    table_row: np.ndarray
+    paged: Dict[str, Any]
+    dense: Any
+
+    @property
+    def nbytes(self) -> int:
+        import jax
+        return int(sum(np.asarray(l).nbytes for l in
+                       jax.tree_util.tree_leaves((self.paged, self.dense))))
+
+
+class SwapStore:
+    """Host-side parking lot for swapped-out requests, keyed by rid.
+
+    The paged backing fills it on ``swap_out`` (block bytes gathered to
+    host + dense snapshot) and drains it on ``swap_in``; byte counters
+    feed fig_serve's swap-traffic report."""
+
+    def __init__(self):
+        self._d: Dict[int, SwapEntry] = {}
+        self.bytes_out = 0      # device -> host (swap_out)
+        self.bytes_in = 0       # host -> device (swap_in)
+
+    def put(self, rid: int, entry: SwapEntry) -> int:
+        assert rid not in self._d, f"rid {rid} already swapped out"
+        self._d[rid] = entry
+        n = entry.nbytes
+        self.bytes_out += n
+        return n
+
+    def get(self, rid: int) -> SwapEntry:
+        return self._d[rid]
+
+    def pop(self, rid: int) -> SwapEntry:
+        entry = self._d.pop(rid)
+        self.bytes_in += entry.nbytes
+        return entry
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def stats(self) -> Dict[str, int]:
+        return {"swapped_held": len(self._d),
+                "swap_bytes_out": self.bytes_out,
+                "swap_bytes_in": self.bytes_in}

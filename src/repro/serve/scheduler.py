@@ -32,10 +32,23 @@ With ``allocator='paged'`` the slot pool stores global-attention KV at
 block granularity (serve.paging): admission gates on free *blocks*, live
 slots map blocks on demand as their write position grows, retire frees
 them, and a growth failure preempts the youngest slot back to the front
-of the queue (restart-from-scratch; greedy streams are unchanged by
-determinism). At the equal-memory default (num_blocks=None) scheduling
+of the queue. At the equal-memory default (num_blocks=None) scheduling
 is identical to contiguous; smaller pools admit more concurrent
 mixed-length requests per byte at the cost of preemptions.
+
+What preemption discards is the ``preempt`` policy:
+
+  recompute — the victim restarts from scratch (greedy streams unchanged
+              by determinism, but every decode step it had paid for is
+              redone: counters['recomputed_decode_steps']).
+  swap      — the victim's mapped blocks are copied to a host SwapStore
+              and its freed; on re-admission fresh blocks are mapped and
+              the bytes uploaded, so it RESUMES at its saved position —
+              zero recomputed decode steps, bit-identical streams.
+
+``admission='reserved'`` books blocks_for(prompt + max_new) at admit
+instead of blocks_for(prompt) — growth can then never fail, so admitted
+(QoS) traffic is never preempted, at the cost of admitted concurrency.
 """
 
 from __future__ import annotations
@@ -81,6 +94,14 @@ class SchedulerConfig:
     # that default no request can ever fail to grow, so scheduling is
     # identical to contiguous; smaller pools trade preemptions for memory.
     num_blocks: Optional[int] = None
+    # paged: what preempt-on-OOB discards. 'recompute' restarts the
+    # victim from scratch; 'swap' parks its block bytes in a host
+    # SwapStore and resumes it at the saved position on re-admission.
+    preempt: str = "recompute"
+    # paged: 'optimistic' books blocks for the prompt only (growth may
+    # hit OOB -> preempt); 'reserved' books blocks_for(prompt + max_new)
+    # at admission, so admitted traffic can never be preempted (QoS).
+    admission: str = "optimistic"
 
 
 @dataclasses.dataclass
@@ -91,6 +112,7 @@ class _Slot:
     max_new_tokens: int
     temperature: float
     ctx: int = 0                # tokens consumed into the slot's cache
+    chunk_tokens: int = 0       # of which via chunk steps (not decode)
     out: List[int] = dataclasses.field(default_factory=list)
     admit_seq: int = -1         # admission order: preemption evicts max
 
@@ -101,11 +123,13 @@ class Completion:
     tokens: np.ndarray          # int32 (g,)
     reason: str                 # 'eos' | 'length' | 'cached'
     prompt_len: int
-    submit_t: float
-    finish_t: float
+    submit_t: float             # time.perf_counter() stamp at submit
+    finish_t: float             # time.perf_counter() stamp at finish
 
     @property
     def latency(self) -> float:
+        # perf_counter deltas are monotonic: a wall-clock (NTP) step can
+        # never make a latency negative and skew fig_serve's p50/p95
         return self.finish_t - self.submit_t
 
 
@@ -164,7 +188,12 @@ class Scheduler:
         self.cfg = cfg
         self.params = params
         self.sched = sched
-        assert sched.allocator in ("contiguous", "paged"), sched.allocator
+        for field, allowed in (("allocator", ("contiguous", "paged")),
+                               ("preempt", ("recompute", "swap")),
+                               ("admission", ("optimistic", "reserved"))):
+            if getattr(sched, field) not in allowed:
+                raise ValueError(f"SchedulerConfig.{field}="
+                                 f"{getattr(sched, field)!r} not in {allowed}")
         self.slots = SlotManager(cfg, sched.num_slots, sched.max_len,
                                  paged=sched.allocator == "paged",
                                  block_size=sched.block_size,
@@ -191,23 +220,29 @@ class Scheduler:
             else max_new_tokens
         temp = self.sched.temperature if temperature is None else temperature
         rids = []
-        assert mnt >= 1, "max_new_tokens must be >= 1"
+        # user-input feasibility checks raise ValueError (not assert:
+        # they must hold under `python -O` too — the pool's progress
+        # guarantee depends on them)
+        if mnt < 1:
+            raise ValueError("max_new_tokens must be >= 1")
         for p in prompts:
             p = np.asarray(p, np.int32).reshape(-1)
-            assert 1 <= len(p) <= self.sched.max_len - mnt, \
-                f"prompt length {len(p)} + max_new {mnt} exceeds " \
-                f"max_len {self.sched.max_len}"
+            if not 1 <= len(p) <= self.sched.max_len - mnt:
+                raise ValueError(
+                    f"prompt length {len(p)} + max_new {mnt} exceeds "
+                    f"max_len {self.sched.max_len}")
             if self.slots.paged:
                 # progress guarantee for preempt-on-OOB: with every other
                 # slot evicted the oldest request must fit the whole pool
                 pt = self.slots.backing.pt
                 need = pt.blocks_for(len(p) + mnt)
-                assert need <= pt.pool.num_blocks, \
-                    f"request needs {need} blocks > pool " \
-                    f"{pt.pool.num_blocks}"
+                if need > pt.pool.num_blocks:
+                    raise ValueError(
+                        f"request needs {need} blocks > pool "
+                        f"{pt.pool.num_blocks}")
             rid = self._next_rid
             self._next_rid += 1
-            self._submit_t[rid] = time.time()
+            self._submit_t[rid] = time.perf_counter()
             self.counters["submitted"] += 1
             if self.sched.cache_requests and temp <= 0.0:
                 key = RequestCache.key(p, mnt, self.sched.eos_token)
@@ -246,15 +281,20 @@ class Scheduler:
         return out
 
     def drain(self) -> List[Completion]:
-        """Run until queue and pool are empty; all completions, rid order.
+        """Run until queue and pool are empty; returns the completions
+        NOT yet handed out (by an earlier step() or drain()), rid order —
+        a completion is delivered exactly once across step/drain calls.
 
-        ``results`` accumulates until the caller removes entries — a
-        long-lived scheduler (KernelService front door) should
-        ``results.pop(rid)`` once a completion is delivered."""
+        ``results`` still archives every completion until the caller
+        removes entries — a long-lived scheduler (KernelService front
+        door) should ``results.pop(rid)`` once a completion is consumed,
+        or ``results`` grows without bound."""
+        fresh: List[int] = []
         while self._queue or self._by_slot:
-            self.step()
-        self._fresh.clear()     # drain hands everything out below
-        return [self.results[rid] for rid in sorted(self.results)]
+            fresh.extend(c.rid for c in self.step())
+        fresh.extend(self._fresh)   # cache hits finished at submit time
+        self._fresh.clear()
+        return [self.results[rid] for rid in sorted(fresh)]
 
     @property
     def pending(self) -> int:
@@ -281,27 +321,58 @@ class Scheduler:
     def _admit(self):
         if self.sched.admit == "static" and self._by_slot:
             return      # static batching: wait for the whole batch
-        # FCFS with head-of-line blocking: if the queue head's prompt
-        # blocks aren't free (paged), nothing behind it jumps the line —
+        # FCFS with head-of-line blocking: if the queue head's blocks
+        # aren't free (paged), nothing behind it jumps the line —
         # preserves arrival order and starves no request.
-        while self._queue and self.slots.can_admit(len(self._queue[0].prompt)):
-            st = self._queue.popleft()
-            slot = self.slots.alloc(st.rid, prompt_len=len(st.prompt))
+        while self._queue:
+            st = self._queue[0]
+            if self.slots.is_swapped(st.rid):
+                # resume a swap-preempted request: remap + upload its
+                # saved blocks; it continues at st.ctx with st.out intact
+                got = self.slots.swap_in(st.rid)
+                if got is None:
+                    return
+                slot, _ = got
+                self.counters["swapped_in"] += 1
+            else:
+                # reserved admission books the whole generation budget up
+                # front: growth can never OOB, so QoS traffic is never
+                # preempted (submit checked it fits the pool)
+                need = len(st.prompt) + (
+                    st.max_new_tokens
+                    if self.sched.admission == "reserved" else 0)
+                if not self.slots.can_admit(need):
+                    return
+                slot = self.slots.alloc(st.rid, prompt_len=need)
+            self._queue.popleft()
             st.admit_seq = self._next_seq
             self._next_seq += 1
             self._by_slot[slot] = st
             self.counters["admitted"] += 1
 
     def _preempt(self, slot: int):
-        """Evict a live slot to free its blocks (paged growth failure):
-        the request restarts from scratch at the FRONT of the queue.
-        Greedy requests re-decode the identical stream, so completions
-        are unchanged; sampled requests may legitimately diverge (a new
-        sampling path), same as any restart."""
+        """Evict a live slot to free its blocks (paged growth failure);
+        the request re-queues at the FRONT. Under preempt='recompute' it
+        restarts from scratch — every decode step it had consumed is
+        redone (counted in 'recomputed_decode_steps'; greedy completions
+        are unchanged by determinism, sampled ones may diverge like any
+        restart). Under preempt='swap' its block bytes move to the host
+        SwapStore and it later RESUMES at st.ctx — no wasted work."""
         st = self._by_slot.pop(slot)
-        self.slots.release(slot)
-        st.ctx = 0
-        st.out = []
+        if self.sched.preempt == "swap":
+            # bytes moved are tracked once, by the backing's SwapStore
+            # (surfaced through stats()); counters only count events
+            self.slots.swap_out(slot)
+            self.counters["swapped_out"] += 1
+        else:
+            self.slots.release(slot)
+            # decode ticks this victim consumed (ctx minus chunk-step
+            # tokens) that the restart will pay for again
+            self.counters["recomputed_decode_steps"] += \
+                st.ctx - st.chunk_tokens
+            st.ctx = 0
+            st.chunk_tokens = 0
+            st.out = []
         st.admit_seq = -1
         self._queue.appendleft(st)
         self.counters["preempted"] += 1
@@ -335,11 +406,13 @@ class Scheduler:
                 # prompts are fully mapped at admission (alloc_reset
                 # covers positions [0, prompt_len)), so a chunk write can
                 # never need a new block — block growth, and with it
-                # preempt-on-OOB, happens only on the decode path
+                # preempt-on-OOB, happens only on the decode path. NOTE:
+                # ensure() is side-effecting, so it must be CALLED
+                # outside the assert (python -O strips assert statements
+                # — the mapping itself must not depend on them).
                 for s in need:
-                    assert self.slots.ensure(
-                        s, self._by_slot[s].ctx + ch - 1), \
-                        "prefill chunk outgrew the admission mapping"
+                    ok = self.slots.ensure(s, self._by_slot[s].ctx + ch - 1)
+                    assert ok, "prefill chunk outgrew the admission mapping"
             m = len(need)
             bsz = bucketing.round_up_pow2(m, 1)
             idx = need + [need[0]] * (bsz - m)      # pad-by-repeat
@@ -352,6 +425,7 @@ class Scheduler:
             self.slots.run_chunk(self.params, idx, toks, pos)
             for s in need:
                 self._by_slot[s].ctx += ch
+                self._by_slot[s].chunk_tokens += ch
             self.counters["chunk_steps"] += 1
             self.counters["prefill_tokens"] += m * ch
 
@@ -418,4 +492,4 @@ class Scheduler:
         self._fresh.append(rid)
         self.results[rid] = Completion(
             rid=rid, tokens=tokens, reason=reason, prompt_len=prompt_len,
-            submit_t=self._submit_t.pop(rid), finish_t=time.time())
+            submit_t=self._submit_t.pop(rid), finish_t=time.perf_counter())

@@ -31,7 +31,7 @@ indexing ops over the whole pytree, jitted once per sub-batch shape.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,7 +42,7 @@ from repro.configs.base import ModelConfig
 from repro.models import attention, transformer as T
 from repro.runtime import bucketing
 from repro.serve import engine
-from repro.serve.paging import BlockPool, PageTable
+from repro.serve.paging import BlockPool, PageTable, SwapEntry, SwapStore
 
 _SLOT_AXIS = 1      # every per_slot_pos cache leaf: (periods, B, ...)
 
@@ -79,6 +79,15 @@ def _pooled_chunk_step(cfg: ModelConfig):
             lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), caches, sub)
 
     return run
+
+
+def _pad_rows(arr: np.ndarray, pad: int) -> np.ndarray:
+    """Pad a saved block-bytes leaf (P, rows, ...) with ``pad`` zero rows
+    — the payload for the trash rows a pow2-padded upload writes."""
+    if pad == 0:
+        return arr
+    z = np.zeros((arr.shape[0], pad) + arr.shape[2:], arr.dtype)
+    return np.concatenate([np.asarray(arr), z], axis=1)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -176,6 +185,7 @@ class _PagedBacking:
                 periods=cfg.num_periods)
             for key, entry in self.dense.items()
             if "attn" in entry and entry["attn"] is None}
+        self.swaps = SwapStore()
         self._rows_cache: Optional[jnp.ndarray] = None
 
     # -- page-table lifecycle -------------------------------------------
@@ -210,6 +220,72 @@ class _PagedBacking:
         if freed:
             self._rows_cache = None
         return freed
+
+    # -- swap-out preemption --------------------------------------------
+
+    def _swap_rows(self, blocks: List[int]) -> jnp.ndarray:
+        """Flat rows for a block list, pow2-padded with trash rows so the
+        jitted gather/upload compile O(log blocks_per_slot) shapes."""
+        n = bucketing.round_up_pow2(len(blocks), 1)
+        padded = list(blocks) + [self.pt.trash] * (n - len(blocks))
+        return jnp.asarray(PageTable.block_rows(padded,
+                                                self.pool.block_size))
+
+    def swap_out(self, slot: int, rid: int) -> int:
+        """Copy ``slot``'s mapped block bytes + dense leaves to the host
+        SwapStore (keyed by ``rid``) and free the physical blocks — the
+        victim's decode work survives eviction. Returns bytes moved."""
+        bs = self.pool.block_size
+        phys = [int(b) for b in self.pt.table[slot]
+                if b != self.pt.trash]
+        paged_host = {}
+        if phys and self.paged:
+            keep = len(phys) * bs
+            got = jax.device_get(engine.gather_block_rows(
+                self.paged, self._swap_rows(phys)))
+            paged_host = {
+                key: attention.KVCache(k=c.k[:, :keep], v=c.v[:, :keep],
+                                       pos=c.pos[:, :keep])
+                for key, c in got.items()}
+        dense_host = jax.device_get(
+            _gather(self.dense, jnp.asarray([slot], jnp.int32)))
+        row, freed = self.pt.swap_out(slot)
+        assert sorted(freed) == sorted(phys)
+        if freed:
+            self._rows_cache = None
+        return self.swaps.put(rid, SwapEntry(
+            n_blocks=len(phys), table_row=row, paged=paged_host,
+            dense=dense_host))
+
+    def can_admit_swapped(self, rid: int) -> bool:
+        return self.pt.can_map(self.swaps.get(rid).n_blocks)
+
+    def swap_in(self, slot: int, rid: int) -> int:
+        """Resume ``rid`` in (free, unreset) ``slot``: map fresh blocks
+        for the saved logical prefix, upload the saved bytes, scatter the
+        dense snapshot — every cache row the request had written reads
+        bit-identically to the never-preempted layout. Returns bytes
+        moved. Caller guarantees can_admit_swapped just held."""
+        bs = self.pool.block_size
+        entry = self.swaps.pop(rid)
+        if entry.n_blocks:
+            new = self.pt.swap_in(slot, entry.n_blocks)
+            assert new is not None, \
+                "swap_in after can_admit_swapped cannot run out of blocks"
+            if self.paged:
+                rows = self._swap_rows(new)
+                pad = int(rows.shape[0]) - entry.n_blocks * bs
+                saved = {
+                    key: attention.KVCache(
+                        k=_pad_rows(c.k, pad), v=_pad_rows(c.v, pad),
+                        pos=_pad_rows(c.pos, pad))
+                    for key, c in entry.paged.items()}
+                self.paged = engine.upload_block_rows(self.paged, saved,
+                                                      rows)
+            self._rows_cache = None
+        self.dense = _scatter(self.dense, entry.dense,
+                              jnp.asarray([slot], jnp.int32))
+        return entry.nbytes
 
     def _rows_all(self) -> jnp.ndarray:
         if self._rows_cache is None:
@@ -256,7 +332,8 @@ class _PagedBacking:
         return nxt
 
     def stats(self) -> dict:
-        return {"allocator": "paged", **self.pt.stats()}
+        return {"allocator": "paged", **self.pt.stats(),
+                **self.swaps.stats()}
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +435,43 @@ class SlotManager:
         self.valid[slot] = False
         self._free.append(slot)
         return self.backing.release_slot(slot)
+
+    # -- swap-out preemption (paged backing only) -----------------------
+
+    def swap_out(self, slot: int) -> int:
+        """Preempt WITHOUT discarding work: park the slot's mapped block
+        bytes + dense leaves in the backing's SwapStore (keyed by the
+        owning rid), free the blocks and the slot. Returns bytes moved
+        to host."""
+        assert self.valid[slot], f"slot {slot} is not live"
+        assert self.backing.is_paged, "swap-out needs the paged backing"
+        rid = self.owner[slot]
+        nbytes = self.backing.swap_out(slot, rid)
+        self.owner[slot] = None
+        self.valid[slot] = False
+        self._free.append(slot)
+        return nbytes
+
+    def is_swapped(self, rid: int) -> bool:
+        return self.backing.is_paged and rid in self.backing.swaps
+
+    def can_admit_swapped(self, rid: int) -> bool:
+        """A free slot AND blocks for the request's saved prefix."""
+        return bool(self._free) and self.backing.can_admit_swapped(rid)
+
+    def swap_in(self, rid: int) -> Optional[Tuple[int, int]]:
+        """Resume a swapped-out request: claim a free slot, remap fresh
+        blocks and upload the saved bytes — the slot reads bit-identical
+        to the never-preempted layout, so decode continues at the saved
+        position with zero recomputed steps. Returns (slot, bytes moved),
+        or None when the pool can't host it yet."""
+        if not self.can_admit_swapped(rid):
+            return None
+        slot = self._free.pop()
+        nbytes = self.backing.swap_in(slot, rid)
+        self.owner[slot] = rid
+        self.valid[slot] = True
+        return slot, nbytes
 
     # -- pooled-cache data movement -----------------------------------------
 

@@ -1,0 +1,112 @@
+"""`python -O` smoke for the serve path — NOT a pytest module.
+
+Under ``python -O`` every ``assert`` statement is stripped (including
+pytest's, whose assertion rewriting is disabled there), so the regular
+test suite cannot catch a serve-path bug that only manifests with
+optimization on. This script re-runs the scheduler differential with
+EXPLICIT raises: the paged allocator (both preemption policies, plus
+reserved admission) must emit greedy token streams bit-identical to the
+contiguous baseline, with the swap policy recomputing zero decode steps.
+
+The regression this pins: ``_prefill_chunks`` used to call the
+side-effecting ``slots.ensure(...)`` inside an assert — under -O the
+call vanished and the paged prefill path silently skipped block mapping.
+Submit-time feasibility must likewise reject bad input via ValueError,
+not a strippable assert.
+
+    PYTHONPATH=src python -O tests/smoke_opt.py
+"""
+
+import sys
+
+import numpy as np
+
+import jax
+
+
+def check(cond, msg):
+    """An assert that survives python -O."""
+    if not cond:
+        raise SystemExit(f"[smoke_opt] FAIL: {msg}")
+
+
+def run_trace(cfg, params, prompts, mnts, **sc_kw):
+    from repro.serve import Scheduler, SchedulerConfig
+
+    sc = SchedulerConfig(num_slots=3, max_len=48, prefill_chunk=8,
+                         eos_token=5, cache_requests=False, **sc_kw)
+    sched = Scheduler(cfg, params, sc)
+    submitted, steps, done = 0, 0, []
+    while submitted < len(prompts) or sched.pending or sched.live:
+        if submitted < len(prompts) and steps % 2 == 0:
+            sched.submit([prompts[submitted]],
+                         max_new_tokens=mnts[submitted])
+            submitted += 1
+        done += sched.step()
+        steps += 1
+    done += sched.drain()
+    check(len({c.rid for c in done}) == len(prompts),
+          "completions missing or duplicated across step/drain")
+    return {c.rid: c for c in done}, sched
+
+
+def main():
+    check(not __debug__, "run me with python -O (asserts must be stripped)")
+    from repro import configs
+    from repro.models import transformer as T
+
+    cfg = configs.reduced_config("gemma-2b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    lens = [3, 17, 9, 24, 5, 12]
+    mnts = [6, 4, 8, 5, 7, 3]
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
+
+    base, _ = run_trace(cfg, params, prompts, mnts)
+    arms = [("paged/recompute", dict(preempt="recompute")),
+            ("paged/swap", dict(preempt="swap")),
+            ("paged/reserved", dict(admission="reserved"))]
+    for name, kw in arms:
+        got, sched = run_trace(cfg, params, prompts, mnts,
+                               allocator="paged", block_size=8,
+                               num_blocks=6, **kw)
+        for rid in base:
+            check(got[rid].tokens.tolist() == base[rid].tokens.tolist(),
+                  f"{name}: rid {rid} token stream diverged from "
+                  f"contiguous (stripped-assert side effect?)")
+            check(got[rid].reason == base[rid].reason,
+                  f"{name}: rid {rid} finish reason diverged")
+        c = sched.counters
+        if name == "paged/swap":
+            check(c["recomputed_decode_steps"] == 0,
+                  f"swap policy recomputed {c['recomputed_decode_steps']} "
+                  "decode steps")
+            check(c["swapped_out"] >= 1 and
+                  c["swapped_in"] == c["swapped_out"],
+                  "swap path never exercised")
+        if name == "paged/reserved":
+            check(c["preempted"] == 0, "reserved admission preempted")
+        check(sched.stats()["blocks_used"] == 0,
+              f"{name}: retire leaked blocks")
+        print(f"[smoke_opt] {name}: OK ({c['preempted']} preemptions, "
+              f"{c['recomputed_decode_steps']} recomputed decode steps)")
+
+    # user-input feasibility must be ValueError, not a stripped assert
+    from repro.serve import Scheduler, SchedulerConfig
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=16, prefill_chunk=8))
+    for bad in (dict(max_new_tokens=0),
+                dict(max_new_tokens=15)):
+        try:
+            sched.submit([np.arange(4, dtype=np.int32)], **bad)
+        except ValueError:
+            pass
+        else:
+            raise SystemExit(f"[smoke_opt] FAIL: submit({bad}) accepted "
+                             "under -O (feasibility check stripped)")
+    print("[smoke_opt] all serve-path checks green under python -O")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,10 +7,12 @@ maintained contiguous mirror."""
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.models import attention
-from repro.serve.paging import BlockPool, PageTable
+from repro.serve import engine
+from repro.serve.paging import BlockPool, PageTable, SwapStore
 
 
 # --------------------------------------------------------------------------
@@ -186,6 +188,215 @@ def test_property_paged_view_matches_contiguous_mirror():
             np.testing.assert_array_equal(np.asarray(got.k), ref_k)
             np.testing.assert_array_equal(np.asarray(got.v), ref_v)
             np.testing.assert_array_equal(np.asarray(got.pos), ref_pos)
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# swap-out / swap-in: preemption must preserve the slot's view bitwise
+# --------------------------------------------------------------------------
+
+def test_page_table_swap_out_in_mechanics():
+    """swap_out frees exactly the mapped blocks (saved row keeps the
+    logical prefix); swap_in is all-or-nothing and re-maps the prefix
+    onto fresh physical blocks without double-assigning."""
+    bp = BlockPool(4, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=16)
+    pt.ensure(0, 9)                              # blocks 0..2 of slot 0
+    mapped = [int(b) for b in pt.table[0] if b != pt.trash]
+    row, freed = pt.swap_out(0)
+    assert freed == mapped and len(freed) == 3
+    assert all(not bp.allocated[b] for b in freed)
+    assert int(np.sum(row != pt.trash)) == 3     # the saved logical view
+    assert (pt.table[0] == pt.trash).all()
+    pt.check_invariants()
+    # another slot steals blocks: swap_in must be all-or-nothing
+    pt.ensure(1, 7)                              # takes 2 of 4
+    assert pt.swap_in(0, 3) is None              # only 2 free: nothing maps
+    assert pt.mapped_blocks(0) == 0 and bp.free_count == 2
+    pt.free_slot(1)
+    new = pt.swap_in(0, 3)
+    assert new is not None and len(new) == 3
+    assert pt.mapped_blocks(0) == 3
+    pt.check_invariants()
+
+
+def test_swap_store_tracks_bytes_and_membership():
+    from repro.serve.paging import SwapEntry
+
+    store = SwapStore()
+    entry = SwapEntry(n_blocks=1, table_row=np.asarray([0]),
+                      paged={}, dense={"x": np.zeros((2, 4), np.float32)})
+    n = store.put(7, entry)
+    assert n == entry.nbytes == 32
+    assert 7 in store and len(store) == 1
+    assert store.stats() == {"swapped_held": 1, "swap_bytes_out": 32,
+                             "swap_bytes_in": 0}
+    with pytest.raises(AssertionError):
+        store.put(7, entry)                      # rid parked twice
+    assert store.pop(7) is entry
+    assert 7 not in store and store.bytes_in == 32
+
+
+def _gather_blocks_host(flat, blocks, bs):
+    """The backing's swap_out device half: engine.gather_block_rows over
+    the mapped blocks (pow2-padded with trash), sliced back on host."""
+    n = 1
+    while n < len(blocks):
+        n *= 2
+    trash = flat.k.shape[1] // bs - 1
+    rows = PageTable.block_rows(list(blocks) + [trash] * (n - len(blocks)),
+                                bs)
+    got = jax.device_get(engine.gather_block_rows({"p0": flat},
+                                                  jnp.asarray(rows)))["p0"]
+    keep = len(blocks) * bs
+    return attention.KVCache(k=got.k[:, :keep], v=got.v[:, :keep],
+                             pos=got.pos[:, :keep])
+
+
+def _upload_blocks(flat, saved, blocks, bs):
+    """The backing's swap_in device half: engine.upload_block_rows into
+    the freshly-mapped blocks (trash-padded rows carry zero payloads)."""
+    n = 1
+    while n < len(blocks):
+        n *= 2
+    trash = flat.k.shape[1] // bs - 1
+    rows = PageTable.block_rows(list(blocks) + [trash] * (n - len(blocks)),
+                                bs)
+    pad = n * bs - len(blocks) * bs
+
+    def padz(a):
+        z = np.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)
+        return np.concatenate([np.asarray(a), z], axis=1)
+
+    padded = attention.KVCache(k=padz(saved.k), v=padz(saved.v),
+                               pos=padz(saved.pos))
+    return engine.upload_block_rows({"p0": flat}, {"p0": padded},
+                                    jnp.asarray(rows))["p0"]
+
+
+def test_swap_roundtrip_restores_view_bitwise():
+    """Deterministic swap cycle: write a slot, gather its block bytes,
+    swap_out, let another slot claim (and dirty) the freed physical
+    blocks, then swap_in + upload — the view must be bit-identical to
+    the pre-swap view even though the physical mapping changed."""
+    P, KV, HD, BS, V = 1, 1, 2, 4, 10
+    num_blocks = 4
+    rng = np.random.default_rng(0)
+    flat = attention.make_paged_cache(num_blocks, BS, KV, HD,
+                                      dtype=jnp.float32, periods=P)
+    live = num_blocks * BS
+    bp = BlockPool(num_blocks, BS)
+    pt = PageTable(bp, 2, V)
+    _, new = pt.ensure(0, 9)                     # 3 blocks
+    flat = _zero_blocks(flat, new, BS)
+    rows0 = jnp.asarray(pt.rows([0]))
+    view = attention.paged_view(flat, rows0, live)
+    k = rng.normal(size=(P, 1, V, KV, HD)).astype(np.float32)
+    v = rng.normal(size=(P, 1, V, KV, HD)).astype(np.float32)
+    pos = rng.integers(0, 50, (P, 1, V)).astype(np.int32)
+    view = attention.KVCache(k=view.k.at[:].set(k), v=view.v.at[:].set(v),
+                             pos=view.pos.at[:].set(pos))
+    flat = attention.paged_writeback(flat, view, rows0)
+    before = jax.device_get(attention.paged_view(flat, rows0, live))
+
+    mapped = [int(b) for b in pt.table[0] if b != pt.trash]
+    saved = _gather_blocks_host(flat, mapped, BS)
+    _, freed = pt.swap_out(0)
+    assert freed == mapped
+    # adversary: slot 1 grabs ALL freed blocks and scribbles over them
+    _, stolen = pt.ensure(1, V - 1)
+    assert set(freed) <= set(stolen)
+    flat = _zero_blocks(flat, stolen, BS)
+    rows1 = jnp.asarray(pt.rows([1]))
+    dirty = attention.paged_view(flat, rows1, live)
+    flat = attention.paged_writeback(
+        flat, attention.KVCache(k=dirty.k + 5.0, v=dirty.v - 2.0,
+                                pos=dirty.pos + 11), rows1)
+    pt.free_slot(1)
+    new = pt.swap_in(0, len(mapped))
+    assert new is not None
+    flat = _upload_blocks(flat, saved, new, BS)
+    pt.check_invariants()
+    after = jax.device_get(attention.paged_view(
+        flat, jnp.asarray(pt.rows([0])), live))
+    np.testing.assert_array_equal(after.k, before.k)
+    np.testing.assert_array_equal(after.v, before.v)
+    np.testing.assert_array_equal(after.pos, before.pos)
+
+
+def test_property_swap_roundtrip_under_interleaved_churn():
+    """Hypothesis property for the swap path: random grow/write/swap
+    cycles — swap_out frees exactly the mapped blocks and never leaves a
+    double assignment; swap_out -> (other-slot churn) -> swap_in + upload
+    round-trips the page-table view bitwise."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    P, KV, HD, BS, SLOTS = 1, 1, 2, 4, 2
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.data())
+    def prop(data):
+        num_blocks = data.draw(st.integers(2, 6))
+        V = data.draw(st.sampled_from([6, 8, 11]))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        flat = attention.make_paged_cache(num_blocks, BS, KV, HD,
+                                          dtype=jnp.float32, periods=P)
+        live = num_blocks * BS
+        bp = BlockPool(num_blocks, BS)
+        pt = PageTable(bp, SLOTS, V)
+        for _ in range(data.draw(st.integers(1, 8))):
+            slot = data.draw(st.integers(0, SLOTS - 1))
+            other = 1 - slot
+            # grow + write the slot so there is state worth preserving
+            _, new = pt.ensure(slot, data.draw(st.integers(0, V - 1)))
+            if new:
+                flat = _zero_blocks(flat, new, BS)
+            n = pt.mapped_blocks(slot)
+            if n == 0:
+                continue
+            rows = jnp.asarray(pt.rows([slot]))
+            view = attention.paged_view(flat, rows, live)
+            hi = min(n * BS, V)
+            nk = rng.normal(size=(P, 1, hi, KV, HD)).astype(np.float32)
+            npos = rng.integers(0, 99, (P, 1, hi)).astype(np.int32)
+            view = attention.KVCache(k=view.k.at[:, :, :hi].set(nk),
+                                     v=view.v.at[:, :, :hi].set(-nk),
+                                     pos=view.pos.at[:, :, :hi].set(npos))
+            flat = attention.paged_writeback(flat, view, rows)
+            before = jax.device_get(attention.paged_view(flat, rows, live))
+            # swap out: frees exactly the mapped blocks, invariants hold
+            mapped = [int(b) for b in pt.table[slot] if b != pt.trash]
+            saved = _gather_blocks_host(flat, mapped, BS)
+            _, freed = pt.swap_out(slot)
+            assert freed == mapped
+            assert all(not bp.allocated[b] for b in freed)
+            pt.check_invariants()
+            # churn: the other slot may claim freed blocks, dirty them,
+            # and give some back
+            if data.draw(st.booleans()):
+                _, stolen = pt.ensure(other,
+                                      data.draw(st.integers(0, V - 1)))
+                if stolen:
+                    flat = _zero_blocks(flat, stolen, BS)
+                    orows = jnp.asarray(pt.rows([other]))
+                    d = attention.paged_view(flat, orows, live)
+                    flat = attention.paged_writeback(
+                        flat, attention.KVCache(k=d.k + 1.0, v=d.v - 1.0,
+                                                pos=d.pos + 7), orows)
+                pt.free_slot(other)
+            # swap in (guaranteed to fit: the other slot was freed) and
+            # upload: the view must round-trip bitwise
+            new = pt.swap_in(slot, n)
+            assert new is not None
+            flat = _upload_blocks(flat, saved, new, BS)
+            pt.check_invariants()
+            after = jax.device_get(attention.paged_view(
+                flat, jnp.asarray(pt.rows([slot])), live))
+            np.testing.assert_array_equal(after.k, before.k)
+            np.testing.assert_array_equal(after.v, before.v)
+            np.testing.assert_array_equal(after.pos, before.pos)
 
     prop()
 

@@ -3,6 +3,8 @@
 prefill exactness, per-slot sampling, the memoizing request cache, and
 the KernelService 'generate' front door."""
 
+import time
+
 import numpy as np
 import pytest
 
@@ -56,16 +58,18 @@ def test_staggered_arrivals_match_per_request_generate(model, request):
         rid2i[sched.submit([prompts[i]], max_new_tokens=mnts[i])[0]] = i
         submitted += 1
     steps = 0
+    done = []
     while sched.pending or sched.live or submitted < len(prompts):
-        sched.step()
+        done += sched.step()                  # each handed out ONCE
         steps += 1
         if steps % 3 == 0 and submitted < len(prompts):   # mid-stream
             rid2i[sched.submit([prompts[submitted]],
                                max_new_tokens=mnts[submitted])[0]] \
                 = submitted
             submitted += 1
-    done = sched.drain()
+    done += sched.drain()
     assert len(done) == len(prompts)
+    assert len({c.rid for c in done}) == len(prompts)     # no duplicates
     assert sched.counters["completed"] == len(prompts)
     for c in done:
         i = rid2i[c.rid]
@@ -76,12 +80,14 @@ def test_staggered_arrivals_match_per_request_generate(model, request):
         assert c.reason == reason
 
 
-@pytest.mark.parametrize("allocator", ["contiguous", "paged"])
-def test_property_random_arrival_patterns(gemma, allocator):
+@pytest.mark.parametrize("allocator,preempt", [
+    ("contiguous", "recompute"), ("paged", "recompute"), ("paged", "swap")])
+def test_property_random_arrival_patterns(gemma, allocator, preempt):
     """Property test: random prompt lengths / budgets / arrival patterns
     keep the scheduler token-identical to per-request generate — under
     BOTH slot allocators (paged runs block alloc/grow/free on every
-    trace; a sub-equal-memory pool also exercises preempt-on-OOB)."""
+    trace; a sub-equal-memory pool also exercises preempt-on-OOB, under
+    both the recompute and the swap-out preemption policies)."""
     hypothesis = pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
@@ -99,27 +105,30 @@ def test_property_random_arrival_patterns(gemma, allocator):
         prompts = _prompts(rng, cfg.vocab, lens)
         sc = SchedulerConfig(num_slots=2, max_len=48, prefill_chunk=8,
                              cache_requests=False, allocator=allocator,
-                             block_size=8,
+                             block_size=8, preempt=preempt,
                              num_blocks=8 if allocator == "paged" else None)
         sched = Scheduler(cfg, params, sc)
         rid2i = {}
         submitted = 0
         steps = 0
+        done = []
         while submitted < n or sched.pending or sched.live:
             if submitted < n and steps % stagger == 0:
                 rid2i[sched.submit([prompts[submitted]],
                                    max_new_tokens=mnts[submitted])[0]] \
                     = submitted
                 submitted += 1
-            sched.step()
+            done += sched.step()
             steps += 1
-        for c in sched.drain():
+        for c in done + sched.drain():
             i = rid2i[c.rid]
             key = (prompts[i].tobytes(), mnts[i])
             if key not in oracle:
                 oracle[key] = generate(params, cfg, prompts[i], mnts[i],
                                        prefill_chunk=8)[0].tolist()
             assert c.tokens.tolist() == oracle[key]
+        if preempt == "swap":
+            assert sched.counters["recomputed_decode_steps"] == 0
 
     prop()
 
@@ -130,38 +139,47 @@ def test_property_random_arrival_patterns(gemma, allocator):
 
 def _run_trace(cfg, params, prompts, mnts, eos, **sc_kw):
     """Replay one staggered arrival trace; returns ({idx: Completion},
-    scheduler). Submissions interleave with steps so slots are reused."""
+    scheduler). Submissions interleave with steps so slots are reused;
+    completions are collected across step() AND drain() (each handed
+    out exactly once)."""
     sc = SchedulerConfig(num_slots=3, max_len=48, prefill_chunk=8,
                          eos_token=eos, cache_requests=False, **sc_kw)
     sched = Scheduler(cfg, params, sc)
-    rid2i, submitted, steps = {}, 0, 0
+    rid2i, submitted, steps, done = {}, 0, 0, []
     while submitted < len(prompts) or sched.pending or sched.live:
         if submitted < len(prompts) and steps % 2 == 0:
             rid2i[sched.submit([prompts[submitted]],
                                max_new_tokens=mnts[submitted])[0]] = submitted
             submitted += 1
-        sched.step()
+        done += sched.step()
         steps += 1
-    return {rid2i[c.rid]: c for c in sched.drain()}, sched
+    done += sched.drain()
+    assert len({c.rid for c in done}) == len(done)  # delivered once each
+    return {rid2i[c.rid]: c for c in done}, sched
 
 
-@pytest.mark.parametrize("num_blocks", [None, 6])
-def test_paged_matches_contiguous_differential(gemma, num_blocks):
+_TRACE = dict(lens=[3, 17, 9, 24, 5, 12], mnts=[6, 4, 8, 5, 7, 3], eos=5)
+
+
+@pytest.mark.parametrize("num_blocks,preempt", [
+    (None, "recompute"), (6, "recompute"), (6, "swap")])
+def test_paged_matches_contiguous_differential(gemma, num_blocks, preempt):
     """Same arrival trace (staggered, mixed-length, slot reuse) through
     both allocators: token-identical greedy streams and identical finish
     reasons. num_blocks=None is the equal-memory pool (scheduling
     provably identical); num_blocks=6 under-provisions so growth hits
-    preempt-on-OOB — restart-from-scratch must be invisible under greedy."""
+    preempt-on-OOB — invisible under greedy for BOTH policies: recompute
+    restarts the victim from scratch, swap must resume it at its saved
+    position with ZERO recomputed decode steps (the preserved-work
+    acceptance gate)."""
     cfg, params = gemma
     rng = np.random.default_rng(7)
-    lens = [3, 17, 9, 24, 5, 12]
-    mnts = [6, 4, 8, 5, 7, 3]
-    prompts = _prompts(rng, cfg.vocab, lens)
-    eos = 5
-    base, _ = _run_trace(cfg, params, prompts, mnts, eos)
+    prompts = _prompts(rng, cfg.vocab, _TRACE["lens"])
+    mnts, eos = _TRACE["mnts"], _TRACE["eos"]
+    base, ref_sched = _run_trace(cfg, params, prompts, mnts, eos)
     paged, sched = _run_trace(cfg, params, prompts, mnts, eos,
                               allocator="paged", block_size=8,
-                              num_blocks=num_blocks)
+                              num_blocks=num_blocks, preempt=preempt)
     assert set(base) == set(paged) == set(range(len(prompts)))
     for i in range(len(prompts)):
         assert paged[i].tokens.tolist() == base[i].tokens.tolist(), \
@@ -172,7 +190,46 @@ def test_paged_matches_contiguous_differential(gemma, num_blocks):
         assert sched.counters["preempted"] == 0   # equal memory: no OOB
     else:
         assert sched.counters["preempted"] >= 1   # the path really ran
+    if preempt == "swap":
+        # preemption preserved every decode step already paid for
+        assert sched.counters["recomputed_decode_steps"] == 0
+        assert sched.counters["swapped_out"] >= 1
+        assert sched.counters["swapped_in"] == sched.counters["swapped_out"]
+        # byte traffic is tracked by the SwapStore (single source of
+        # truth), surfaced through stats()
+        assert sched.stats()["swap_bytes_in"] == \
+            sched.stats()["swap_bytes_out"] > 0
+        # no slot-tick of work is ever redone: total live decode work ==
+        # the useful work a never-preempted run does (pool TICKS may
+        # still differ — a swapped request waits in the queue — but its
+        # paid-for steps all survive; fig_serve gates the occupancy win)
+        assert sched.counters["generated_tokens"] == \
+            ref_sched.counters["generated_tokens"]
+        assert sched.stats()["swapped_held"] == 0  # store fully drained
+    elif num_blocks is not None:
+        assert sched.counters["recomputed_decode_steps"] >= 1
     assert sched.stats()["blocks_used"] == 0      # retire freed everything
+
+
+def test_reserved_admission_never_preempts(gemma):
+    """admission='reserved' books blocks_for(prompt + max_new) up front:
+    the under-provisioned pool that forces preemptions in the optimistic
+    differential must complete the same trace with ZERO preemptions (and
+    identical greedy streams) — the QoS half of the trade-off."""
+    cfg, params = gemma
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg.vocab, _TRACE["lens"])
+    mnts, eos = _TRACE["mnts"], _TRACE["eos"]
+    base, _ = _run_trace(cfg, params, prompts, mnts, eos)
+    got, sched = _run_trace(cfg, params, prompts, mnts, eos,
+                            allocator="paged", block_size=8, num_blocks=6,
+                            admission="reserved")
+    for i in range(len(prompts)):
+        assert got[i].tokens.tolist() == base[i].tokens.tolist()
+        assert got[i].reason == base[i].reason
+    assert sched.counters["preempted"] == 0
+    assert sched.counters["recomputed_decode_steps"] == 0
+    assert sched.stats()["blocks_used"] == 0
 
 
 # --------------------------------------------------------------------------
@@ -222,10 +279,76 @@ def test_pool_exhaustion_queues_fcfs(gemma):
     rng = np.random.default_rng(2)
     rids = sched.submit(_prompts(rng, cfg.vocab, [4, 4, 4]),
                         max_new_tokens=2)
-    sched.step()
+    done = sched.step()
     assert sched.live == 1 and sched.pending == 2       # FCFS backlog
-    done = sched.drain()
+    done += sched.drain()
     assert [c.rid for c in done] == sorted(rids)        # completion order
+
+
+def test_interleaved_step_drain_delivers_each_completion_once(gemma):
+    """Regression: drain() used to return sorted(self.results) — every
+    completion already handed out by an earlier step() (or a previous
+    drain) came back a second time. Each completion must be delivered
+    exactly once across an interleaved step/drain/submit sequence, while
+    ``results`` keeps archiving until the caller pops."""
+    cfg, params = gemma
+    sc = SchedulerConfig(num_slots=2, max_len=32, prefill_chunk=8,
+                         cache_requests=False)
+    sched = Scheduler(cfg, params, sc)
+    rng = np.random.default_rng(11)
+    delivered = []
+    r1 = sched.submit(_prompts(rng, cfg.vocab, [3, 5]), max_new_tokens=2)
+    for _ in range(8):                      # enough steps to finish both
+        delivered += sched.step()
+    assert sorted(c.rid for c in delivered) == sorted(r1)
+    assert sched.drain() == []              # nothing new: no re-delivery
+    r2 = sched.submit(_prompts(rng, cfg.vocab, [4]), max_new_tokens=2)
+    got = sched.drain()                     # only the new completion
+    assert [c.rid for c in got] == r2
+    assert sched.drain() == []
+    # the archive still holds everything until the caller pops (the
+    # KernelService front door pops on delivery)
+    assert sorted(sched.results) == sorted(r1 + r2)
+    for rid in r1 + r2:
+        sched.results.pop(rid)
+    assert sched.results == {}
+
+
+def test_submit_validation_raises_value_error(gemma):
+    """User-input feasibility is enforced with ValueError (not assert —
+    it must survive `python -O`): zero budget, oversize prompt, and a
+    paged request that could never fit the whole block pool."""
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=16, prefill_chunk=8))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit([np.arange(4, dtype=np.int32)], max_new_tokens=0)
+    with pytest.raises(ValueError, match="exceeds"):
+        sched.submit([np.arange(14, dtype=np.int32)], max_new_tokens=4)
+    paged = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=64, prefill_chunk=8, allocator="paged",
+        block_size=8, num_blocks=2))
+    with pytest.raises(ValueError, match="blocks > pool"):
+        paged.submit([np.arange(20, dtype=np.int32)], max_new_tokens=8)
+    with pytest.raises(ValueError, match="SchedulerConfig.preempt"):
+        Scheduler(cfg, params, SchedulerConfig(preempt="restart"))
+
+
+def test_completion_latency_uses_monotonic_clock(gemma):
+    """Completion stamps come from time.perf_counter(): latencies are
+    non-negative by construction (a wall-clock NTP step cannot skew
+    fig_serve's p50/p95) and ordered submit <= finish."""
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=32, prefill_chunk=8, cache_requests=False))
+    rng = np.random.default_rng(12)
+    t0 = time.perf_counter()
+    sched.submit(_prompts(rng, cfg.vocab, [4]), max_new_tokens=2)
+    done = sched.drain()
+    t1 = time.perf_counter()
+    (c,) = done
+    assert t0 <= c.submit_t <= c.finish_t <= t1
+    assert 0.0 <= c.latency <= t1 - t0
 
 
 # --------------------------------------------------------------------------
