@@ -39,6 +39,16 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged: shrink below the equal-memory default "
                          "to watch preemptions happen")
+    ap.add_argument("--num-window-blocks", type=int, default=None,
+                    help="paged: block budget for window-ring groups "
+                         "(try --arch gemma3-12b — its sliding-window "
+                         "rings page next to the global KV)")
+    ap.add_argument("--dense-windows", action="store_true",
+                    help="paged: keep sliding-window rings dense per "
+                         "slot instead of paging them")
+    ap.add_argument("--swap-budget", type=int, default=None,
+                    help="preempt=swap: SwapStore byte cap — over-budget "
+                         "victims fall back to recompute")
     ap.add_argument("--preempt", choices=["recompute", "swap"],
                     default="recompute",
                     help="paged: what preempt-on-OOB discards — 'swap' "
@@ -59,6 +69,9 @@ def main():
         prefill_chunk=16, eos_token=cfg.vocab - 1,
         allocator="paged" if args.paged else "contiguous",
         block_size=args.block_size, num_blocks=args.num_blocks,
+        paged_window_attn=not args.dense_windows,
+        num_window_blocks=args.num_window_blocks,
+        swap_bytes_budget=args.swap_budget,
         preempt=args.preempt,
         admission="reserved" if args.reserved else "optimistic"))
 
@@ -105,12 +118,17 @@ def main():
           f"{[sched.results[r].reason for r in rep]} "
           f"(cache hit rate {sched.request_cache.hit_rate:.2f})")
     if args.paged:
+        rings = {k: v for k, v in st.items()
+                 if k.startswith("ring") and k.endswith("_total")}
         print(f"[serve_continuous] paged allocator: "
-              f"{st['blocks_total']} blocks x {st['block_size']} positions, "
+              f"{st['blocks_total']} blocks x {st['block_size']} positions "
+              f"in {st['page_groups']} page-table group(s)"
+              + (f" (window rings: {rings})" if rings else "") + ", "
               f"{st.get('preempted', 0)} preemptions "
               f"({args.preempt}: {st.get('recomputed_decode_steps', 0)} "
               f"recomputed decode steps, "
-              f"{st.get('swap_bytes_out', 0)} bytes swapped out), "
+              f"{st.get('swap_bytes_out', 0)} bytes swapped out, "
+              f"{st.get('swap_rejected', 0)} swap rejections), "
               f"mean occupancy {st.get('mean_occupancy', 0):.2f}")
     print("[serve_continuous] OK")
 

@@ -224,12 +224,22 @@ def make_paged_cache(num_blocks: int, block_size: int, kv_heads: int,
                      periods: int = 1) -> KVCache:
     """Flat physical block-pool cache: rows = (num_blocks + 1) * block_size
     — one TRASH block appended past the pool as the gather/scatter sink
-    for unmapped page-table entries (serve.paging)."""
+    for unmapped page-table entries (serve.paging). Backs global-attention
+    KV and (ring-mode page tables) sliding-window rings alike: the view
+    length lives in the page table, not here."""
     rows = (num_blocks + 1) * block_size
     return KVCache(
         k=jnp.zeros((periods, rows, kv_heads, head_dim), dtype),
         v=jnp.zeros((periods, rows, kv_heads, head_dim), dtype),
         pos=jnp.full((periods, rows), -1, jnp.int32))
+
+
+def paged_live_rows(flat: KVCache, block_size: int) -> int:
+    """Rows of ``flat`` backing real (non-trash) blocks. The trash
+    sentinel is the LAST block of the flat pool, so the live prefix is a
+    static shape fact — which lets the fused paged steps recover each
+    page-table group's trash floor without threading per-group statics."""
+    return flat.k.shape[1] - block_size
 
 
 def paged_view(flat: KVCache, rows: Array, live_rows: int) -> KVCache:
@@ -242,6 +252,14 @@ def paged_view(flat: KVCache, rows: Array, live_rows: int) -> KVCache:
     positions read as the empty-slot encoding (k=v=0, pos=-1), which is
     bit-identical to the freshly-zeroed rows of a contiguous slot, so
     attending over the view reproduces the contiguous path exactly.
+
+    The same gather IS the paged ring view: for a sliding-window layer V
+    is the ring length ``min(window, cache_slots)`` and ``rows`` comes
+    from a ring-mode PageTable, so ``cache_update``'s ``pos % V`` ring
+    addressing and the absolute-position window mask resolve through the
+    view bit-identically to the dense ring leaf (during ramp-up, the
+    not-yet-mapped tail of the ring reads as empty slots — exactly what
+    a dense ring holds there).
     """
     ok = rows < live_rows                                   # (B, V)
     k = jnp.where(ok[None, :, :, None, None],
@@ -258,7 +276,10 @@ def paged_writeback(flat: KVCache, view: KVCache, rows: Array) -> KVCache:
     Mapped rows are unique across the page table (BlockPool invariant),
     so their writes are deterministic; writes for unmapped view positions
     (including whole dead slots) land in the trash block, which is never
-    read unmasked.
+    read unmasked. Ring writeback is the same scatter: a ring write at
+    ``pos % V`` dirties exactly one view position, whose block the
+    scheduler mapped before the step (ramp-up) or which is resident
+    (steady state).
     """
     return KVCache(
         k=flat.k.at[:, rows].set(view.k.astype(flat.k.dtype)),

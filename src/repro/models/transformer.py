@@ -282,7 +282,8 @@ def apply_model(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
 
 def init_caches(cfg: ModelConfig, batch: int, slots: int,
                 per_slot_pos: bool = False,
-                paged_global_attn: bool = False):
+                paged_global_attn: bool = False,
+                paged_window_attn: bool = False):
     """Zero caches for decode: dict p<i> -> stacked-over-periods leaves.
 
     ``per_slot_pos=True`` allocates the per-row KV position layout
@@ -295,15 +296,22 @@ def init_caches(cfg: ModelConfig, batch: int, slots: int,
     slot axis would span the full ``slots`` (global attention, or a
     window >= slots): those leaves live in a block pool owned by the
     paged slot backing (serve.paging) instead of being reserved per slot.
-    Window rings shorter than ``slots`` and SSM state are O(window)/O(1)
-    per slot — they cannot strand pool memory and stay dense.
+
+    ``paged_window_attn=True`` additionally drops the dense ring leaves
+    of sliding-window layers with ``window < slots``: their rings page
+    through a ring-mode PageTable group (blocks map lazily while a
+    request ramps up to ``window`` written positions, then the full ring
+    stays resident), so Pareto-short requests stop reserving a dense
+    ``window``-row slab they never fill. SSM state is O(1) per slot —
+    it cannot strand pool memory and always stays dense.
     """
     np_, d = cfg.num_periods, cfg.d_model
     caches = {}
     for i, spec in enumerate(cfg.pattern):
         if spec.mixer == "attn":
             sl = min(slots, spec.window) if spec.window else slots
-            if paged_global_attn and sl == slots:
+            if (paged_global_attn and sl == slots) or \
+                    (paged_window_attn and sl < slots):
                 caches[f"p{i}"] = {"attn": None}
                 continue
             pos = (jnp.full((np_, batch, sl), -1, jnp.int32)

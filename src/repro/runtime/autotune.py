@@ -63,18 +63,44 @@ class Autotuner:
             return got
         return self.get(key, default)
 
-    def put(self, key: str, value, us: Optional[float] = None):
-        self._cache[key] = {"value": value, "us": us, "when": time.time()}
+    def put(self, key: str, value, us: Optional[float] = None,
+            failed: Optional[Dict[str, str]] = None):
+        entry = {"value": value, "us": us, "when": time.time()}
+        if failed:
+            entry["failed"] = failed
+        self._cache[key] = entry
         self.save()
 
     def save(self):
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._cache, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        # concurrent processes (a sweep fanned out over shapes) write the
+        # shared cache too: under an flock (POSIX; best-effort elsewhere),
+        # merge the on-disk entries under ours before renaming — another
+        # process's keys survive our whole-file replace and the lock
+        # closes the read-to-rename window — and use a per-pid tmp so
+        # two writers can't clobber each other's half-written file.
+        lock = open(f"{self.path}.lock", "w")
+        try:
+            try:
+                import fcntl
+                fcntl.flock(lock, fcntl.LOCK_EX)
+            except ImportError:         # non-POSIX: merge without lock
+                pass
+            try:
+                with open(self.path) as f:
+                    merged = json.load(f)
+            except (OSError, ValueError):
+                merged = {}
+            merged.update(self._cache)
+            self._cache = merged
+            tmp = f"{self.path}.{os.getpid()}.tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._cache, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        finally:
+            lock.close()                # closing drops the flock
 
     # -- measurement ---------------------------------------------------------
 
@@ -85,6 +111,12 @@ class Autotuner:
         Cached unless ``force``.
 
         candidates: a {label: value} dict or an iterable of values.
+
+        A candidate whose thunk raises (e.g. a block size incompatible
+        with the bucket shape) is SKIPPED, not fatal — the sweep still
+        returns the fastest of the survivors, and the failures are
+        recorded in the cache entry under ``"failed"`` for inspection.
+        Only when *every* candidate fails does tune raise.
         """
         if not force:
             got = self.get(key)
@@ -93,18 +125,26 @@ class Autotuner:
         if not isinstance(candidates, dict):
             candidates = {v: v for v in candidates}
         best_v, best_us = None, float("inf")
-        for cand in candidates.values():
-            thunk = make_thunk(cand)
-            jax.block_until_ready(thunk())          # warm the compile cache
-            ts = []
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                jax.block_until_ready(thunk())
-                ts.append(time.perf_counter() - t0)
+        failed: Dict[str, str] = {}
+        for label, cand in candidates.items():
+            try:
+                thunk = make_thunk(cand)
+                jax.block_until_ready(thunk())      # warm the compile cache
+                ts = []
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(thunk())
+                    ts.append(time.perf_counter() - t0)
+            except Exception as e:                  # bad candidate: skip
+                failed[str(label)] = f"{type(e).__name__}: {e}"[:200]
+                continue
             us = sorted(ts)[len(ts) // 2] * 1e6
             if us < best_us:
                 best_v, best_us = cand, us
-        self.put(key, best_v, us=best_us)
+        if best_us == float("inf"):
+            raise RuntimeError(
+                f"autotune {key!r}: every candidate failed: {failed}")
+        self.put(key, best_v, us=best_us, failed=failed or None)
         return best_v
 
 

@@ -4,8 +4,10 @@
                 position vectors, sampling, per-request ``generate``,
                 fused paged (page-gather -> step -> page-scatter) steps.
   * paging    — BlockPool / PageTable: block-granular allocation for the
-                slot pool's global-attention KV, plus the SwapStore
-                backing zero-recompute (swap-out) preemption.
+                slot pool's attention KV — global layers and (ring-mode
+                page tables) sliding-window rings — plus the
+                byte-budgeted SwapStore backing zero-recompute
+                (swap-out) preemption.
   * slots     — SlotManager: the fixed pool of static-shape cache slots
                 (contiguous or paged backing behind one facade).
   * scheduler — Scheduler: admit -> chunk-prefill -> fused decode ->

@@ -140,17 +140,23 @@ def jit_slot_decode_step(cfg: ModelConfig):
 # pool read through a page table (serve.paging / serve.slots paged backing)
 # ---------------------------------------------------------------------------
 
-def _merge_paged(dense, paged, rows, live_rows):
+def _merge_paged(dense, paged, rows, block_size):
     """Rebuild the full cache tree the model steps expect: dense entries
     pass through; paged attention layers (dense holds None) get a per-slot
-    view gathered through the page-table ``rows``."""
+    view gathered through the page-table ``rows[key]``. View lengths vary
+    per key — cache_slots for global-attention layers, the ring length
+    for sliding-window layers — and each key's trash floor is recovered
+    from its flat pool's shape (the trash block is the last
+    ``block_size`` rows)."""
     from repro.models import attention  # local: avoid import cycle
 
     caches = {}
     for key, entry in dense.items():
         if key in paged:
             entry = dict(entry)
-            entry["attn"] = attention.paged_view(paged[key], rows, live_rows)
+            entry["attn"] = attention.paged_view(
+                paged[key], rows[key],
+                attention.paged_live_rows(paged[key], block_size))
         caches[key] = entry
     return caches
 
@@ -166,7 +172,8 @@ def _split_paged(caches, paged, rows):
             entry = dict(entry)
             view = entry["attn"]
             entry["attn"] = None
-            paged_new[key] = attention.paged_writeback(paged[key], view, rows)
+            paged_new[key] = attention.paged_writeback(paged[key], view,
+                                                       rows[key])
         dense[key] = entry
     return dense, paged_new
 
@@ -176,17 +183,19 @@ def jit_paged_decode_step(cfg: ModelConfig):
     """Fused page-gather -> decode -> page-scatter over the whole pool.
 
     dense: cache tree with None at paged attention entries (per-slot SSM
-    state, window rings, ...); paged: dict pattern-key -> flat KVCache
-    block pool; rows: (B, V) flat physical row per view position;
-    live_rows (static): rows at/past it are the trash block. One jitted
-    program per cfg — same one-fused-program-per-tick property as the
-    contiguous path, the page table is just an extra gather index.
+    state, any unpaged leaves); paged: dict pattern-key -> flat KVCache
+    block pool; rows: dict pattern-key -> (B, V_key) flat physical row
+    per view position (keys in one page-table group share the array);
+    block_size (static): every group's block size — each key's trash
+    floor is its flat pool's rows minus one block. One jitted program per
+    cfg — same one-fused-program-per-tick property as the contiguous
+    path, the page tables are just extra gather indices.
     """
     step = make_slot_decode_step(cfg)
 
     def run(params, dense, paged, rows, tokens, pos, temps, key,
-            live_rows: int):
-        caches = _merge_paged(dense, paged, rows, live_rows)
+            block_size: int):
+        caches = _merge_paged(dense, paged, rows, block_size)
         nxt, logits, caches = step(params, caches, tokens, pos, temps, key)
         dense, paged = _split_paged(caches, paged, rows)
         return nxt, logits, dense, paged
@@ -199,16 +208,16 @@ def jit_paged_chunk_step(cfg: ModelConfig):
     """Fused gather -> chunk-prefill -> scatter for the paged layout.
 
     ``idx`` selects the sub-batch of slots (pad-by-repeat contract as the
-    contiguous pooled chunk step); ``rows`` is already per-sub-row
-    (len(idx), V). Dense leaves gather/scatter on the slot axis, paged
-    leaves through the page table.
+    contiguous pooled chunk step); ``rows`` values are already
+    per-sub-row (len(idx), V_key). Dense leaves gather/scatter on the
+    slot axis, paged leaves through their page tables.
     """
     step = make_chunk_step(cfg)
 
-    def run(params, dense, paged, idx, rows, tokens, pos, live_rows: int):
+    def run(params, dense, paged, idx, rows, tokens, pos, block_size: int):
         sub = jax.tree_util.tree_map(
             lambda l: jnp.take(l, idx, axis=1), dense)
-        caches = _merge_paged(sub, paged, rows, live_rows)
+        caches = _merge_paged(sub, paged, rows, block_size)
         _, caches = step(params, caches, tokens, pos)
         sub, paged = _split_paged(caches, paged, rows)
         dense = jax.tree_util.tree_map(

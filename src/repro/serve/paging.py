@@ -27,18 +27,38 @@ corrupting live blocks. Mapped physical blocks are unique across the
 table (the double-assignment invariant the property tests pin), so every
 scatter over mapped rows is deterministic.
 
+Ring mode (``ring=True``): sliding-window attention layers keep a ring
+buffer of ``window`` positions addressed ``pos % window``. A ring slot's
+logical blocks cover ``min(window, pos + 1)`` positions — they map
+lazily during ramp-up exactly like a growing global slot, then the full
+ring stays resident at steady state (writes past the window land in
+already-mapped blocks, so ``ensure`` clamps instead of erroring). The
+gathered view is the ring itself, so ``pos % window`` addressing and
+absolute-position masking resolve through the page table bit-identically
+to the dense ring layout.
+
+All state-guarding checks raise explicit ``ValueError``/``RuntimeError``
+— never bare ``assert`` — because corruption of the pool/table must be
+loud under ``python -O`` too (asserts are stripped there; exercised by
+``tests/smoke_opt.py``).
+
 Preemption support: ``PageTable.swap_out``/``swap_in`` evict a slot's
 mapping and later re-map the same logical prefix onto fresh physical
 blocks, and ``SwapStore`` is the host-side buffer holding the evicted
-block *bytes* (plus the saved page-table row) keyed by request id — the
-time half of the paper's wasted-work argument: preempting a victim
-should cost a block copy, not every decode step it already paid for.
+block *bytes* (plus how many blocks each page-table group had mapped)
+keyed by request id — the time half of the paper's wasted-work argument:
+preempting a victim should cost a block copy, not every decode step it
+already paid for. The store takes an optional byte budget: under
+sustained overload swapped-out bytes otherwise accumulate on the host
+without bound, so an over-budget ``put`` is rejected loudly and the
+scheduler falls back to recompute-preemption for that victim.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
+
 
 import numpy as np
 
@@ -49,7 +69,9 @@ class BlockPool:
     hot; ``allocated`` is the double-assignment guard."""
 
     def __init__(self, num_blocks: int, block_size: int):
-        assert num_blocks >= 1 and block_size >= 1
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"need num_blocks >= 1 and block_size >= 1, "
+                             f"got {num_blocks}, {block_size}")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
@@ -68,12 +90,14 @@ class BlockPool:
         if not self._free:
             return None
         b = self._free.pop()
-        assert not self.allocated[b], f"block {b} double-assigned"
+        if self.allocated[b]:
+            raise RuntimeError(f"block {b} double-assigned")
         self.allocated[b] = True
         return b
 
     def free(self, block: int):
-        assert self.allocated[block], f"block {block} is not allocated"
+        if not self.allocated[block]:
+            raise ValueError(f"block {block} is not allocated")
         self.allocated[block] = False
         self._free.append(block)
 
@@ -81,18 +105,27 @@ class BlockPool:
 class PageTable:
     """Per-slot logical->physical block map over a shared BlockPool.
 
-    ``slot_positions`` is the logical slot length (the contiguous
-    allocator's ``cache_slots``); the view the fused steps gather is
-    exactly that long, so ring addressing (``pos % slot_positions``) and
-    blockwise-attention accumulation order are bit-identical to the
-    contiguous layout. The last block of a slot may be partially used
-    (internal fragmentation) when ``slot_positions % block_size != 0``.
+    ``slot_positions`` is the logical view length the fused steps gather:
+    the contiguous allocator's ``cache_slots`` for global-attention
+    layers, or the ring length ``min(window, cache_slots)`` for a
+    sliding-window layer in ring mode. Ring addressing
+    (``pos % slot_positions``) and blockwise-attention accumulation order
+    resolve through the view bit-identically to the contiguous/dense
+    layout. The last block of a slot may be partially used (internal
+    fragmentation) when ``slot_positions % block_size != 0``.
+
+    ``ring=True`` marks the view as a ring buffer: write positions past
+    ``slot_positions`` wrap onto already-mapped blocks, so ``ensure``
+    clamps its target instead of rejecting it, and the full ring is the
+    steady-state mapping.
     """
 
-    def __init__(self, pool: BlockPool, num_slots: int, slot_positions: int):
+    def __init__(self, pool: BlockPool, num_slots: int, slot_positions: int,
+                 ring: bool = False):
         self.pool = pool
         self.num_slots = num_slots
         self.slot_positions = slot_positions
+        self.ring = ring
         self.block_size = pool.block_size
         self.blocks_per_slot = -(-slot_positions // pool.block_size)
         self.trash = pool.num_blocks        # sentinel physical block
@@ -102,7 +135,9 @@ class PageTable:
     # -- sizing ---------------------------------------------------------
 
     def blocks_for(self, n_positions: int) -> int:
-        """Blocks needed to back positions [0, n_positions)."""
+        """Blocks needed to back ``n_positions`` written positions. The
+        clamp to ``blocks_per_slot`` is what makes this ring-correct: a
+        ring never needs more than the full ring resident."""
         return min(-(-max(n_positions, 0) // self.block_size),
                    self.blocks_per_slot)
 
@@ -117,11 +152,17 @@ class PageTable:
     def ensure(self, slot: int, upto_pos: int) -> Tuple[bool, List[int]]:
         """Map every unmapped logical block covering positions
         [0, upto_pos]. Returns (fully_mapped, newly_mapped_physical).
-        On pool exhaustion the blocks mapped so far stay mapped (they are
-        valid — the caller either retries after preempting a victim or
-        frees the whole slot)."""
-        assert 0 <= upto_pos < self.slot_positions, \
-            f"position {upto_pos} outside slot of {self.slot_positions}"
+        Ring mode clamps ``upto_pos`` to the ring: a write at
+        ``pos >= slot_positions`` lands at ``pos % slot_positions``,
+        inside the fully-mapped steady-state ring. On pool exhaustion the
+        blocks mapped so far stay mapped (they are valid — the caller
+        either retries after preempting a victim or frees the whole
+        slot)."""
+        if self.ring:
+            upto_pos = min(upto_pos, self.slot_positions - 1)
+        if not 0 <= upto_pos < self.slot_positions:
+            raise ValueError(f"position {upto_pos} outside slot of "
+                             f"{self.slot_positions}")
         new: List[int] = []
         for lb in range(upto_pos // self.block_size + 1):
             if self.table[slot, lb] != self.trash:
@@ -153,8 +194,9 @@ class PageTable:
         this, then parks both in a SwapStore."""
         row = self.table[slot].copy()
         mapped = np.flatnonzero(row != self.trash)
-        assert mapped.size == 0 or (mapped == np.arange(mapped.size)).all(), \
-            f"slot {slot} mapping is not a logical prefix"
+        if mapped.size and not (mapped == np.arange(mapped.size)).all():
+            raise RuntimeError(f"slot {slot} mapping is not a logical "
+                               f"prefix: {row.tolist()}")
         freed = self.free_slot(slot)
         return row, freed
 
@@ -165,15 +207,19 @@ class PageTable:
         or None (nothing mapped) when the pool cannot supply them. The
         caller uploads the saved bytes into the returned blocks' rows
         (engine.upload_block_rows); it must NOT zero them."""
-        assert 0 <= n_blocks <= self.blocks_per_slot, n_blocks
-        assert (self.table[slot] == self.trash).all(), \
-            f"slot {slot} is not empty"
+        if not 0 <= n_blocks <= self.blocks_per_slot:
+            raise ValueError(f"swap_in of {n_blocks} blocks into a slot "
+                             f"of {self.blocks_per_slot}")
+        if not (self.table[slot] == self.trash).all():
+            raise RuntimeError(f"slot {slot} is not empty: "
+                               f"{self.table[slot].tolist()}")
         if not self.can_map(n_blocks):
             return None
         new: List[int] = []
         for lb in range(n_blocks):
             b = self.pool.alloc()
-            assert b is not None, "can_map lied about pool capacity"
+            if b is None:
+                raise RuntimeError("can_map lied about pool capacity")
             self.table[slot, lb] = b
             new.append(b)
         return new
@@ -204,12 +250,14 @@ class PageTable:
 
     def check_invariants(self):
         """No physical block mapped twice; table and pool free list agree.
-        (Exercised by the property tests on every operation.)"""
+        (Exercised by the property tests on every operation.) Raises
+        RuntimeError — must fire under ``python -O`` too."""
         mapped = self.table[self.table != self.trash]
-        assert len(mapped) == len(set(mapped.tolist())), \
-            "physical block mapped to two logical blocks"
-        assert set(mapped.tolist()) == set(np.flatnonzero(
-            self.pool.allocated).tolist()), "table / pool free list disagree"
+        if len(mapped) != len(set(mapped.tolist())):
+            raise RuntimeError("physical block mapped to two logical blocks")
+        if set(mapped.tolist()) != set(np.flatnonzero(
+                self.pool.allocated).tolist()):
+            raise RuntimeError("table / pool free list disagree")
 
     def stats(self) -> Dict[str, float]:
         used = self.pool.used_count
@@ -226,13 +274,14 @@ class PageTable:
 @dataclasses.dataclass
 class SwapEntry:
     """Everything a preempted request needs to resume in a fresh slot
-    with zero recomputed decode steps: how many logical blocks were
-    mapped, the saved page-table row, the blocks' KV bytes per paged
-    cache key (host numpy, logical order), and the slot's dense per-slot
-    leaves (SSM state, window rings, per-row pos)."""
-    n_blocks: int
-    table_row: np.ndarray
-    paged: Dict[str, Any]
+    with zero recomputed decode steps: how many logical blocks each
+    page-table group (keyed by view length — the global-KV group plus
+    one per distinct window-ring length) had mapped, the blocks' KV
+    bytes per paged cache key (host numpy, logical order), and the
+    slot's dense per-slot leaves (SSM state, per-row pos, any unpaged
+    rings)."""
+    blocks: Dict[int, int]      # view_len -> mapped logical-prefix blocks
+    paged: Dict[str, Any]       # pattern key -> host KVCache block bytes
     dense: Any
 
     @property
@@ -247,17 +296,43 @@ class SwapStore:
 
     The paged backing fills it on ``swap_out`` (block bytes gathered to
     host + dense snapshot) and drains it on ``swap_in``; byte counters
-    feed fig_serve's swap-traffic report."""
+    feed fig_serve's swap-traffic report.
 
-    def __init__(self):
+    ``max_bytes`` bounds the held bytes: the store is otherwise unbounded
+    — under sustained overload, swapped-out requests that never re-admit
+    would accumulate host memory forever. ``can_hold`` is the caller's
+    admission check (the scheduler falls back to recompute-preemption on
+    rejection); an over-budget ``put`` that sneaks past it raises."""
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        self.max_bytes = max_bytes
         self._d: Dict[int, SwapEntry] = {}
-        self.bytes_out = 0      # device -> host (swap_out)
-        self.bytes_in = 0       # host -> device (swap_in)
+        self.held_bytes = 0     # resident right now (drops on pop)
+        self.bytes_out = 0      # device -> host (swap_out), cumulative
+        self.bytes_in = 0       # host -> device (swap_in), cumulative
+        self.rejected = 0       # puts refused by the byte budget
+
+    def can_hold(self, nbytes: int) -> bool:
+        return self.max_bytes is None \
+            or self.held_bytes + nbytes <= self.max_bytes
+
+    def reject(self):
+        """Record a budget rejection — the store owns the count, whether
+        the caller prechecked with can_hold (the backing's path) or an
+        over-budget put raised."""
+        self.rejected += 1
 
     def put(self, rid: int, entry: SwapEntry) -> int:
-        assert rid not in self._d, f"rid {rid} already swapped out"
-        self._d[rid] = entry
+        if rid in self._d:
+            raise ValueError(f"rid {rid} already swapped out")
         n = entry.nbytes
+        if not self.can_hold(n):
+            self.reject()
+            raise RuntimeError(
+                f"swap budget exceeded: holding {self.held_bytes} + "
+                f"{n} > {self.max_bytes} bytes (rid {rid})")
+        self._d[rid] = entry
+        self.held_bytes += n
         self.bytes_out += n
         return n
 
@@ -266,6 +341,7 @@ class SwapStore:
 
     def pop(self, rid: int) -> SwapEntry:
         entry = self._d.pop(rid)
+        self.held_bytes -= entry.nbytes
         self.bytes_in += entry.nbytes
         return entry
 
@@ -277,5 +353,9 @@ class SwapStore:
 
     def stats(self) -> Dict[str, int]:
         return {"swapped_held": len(self._d),
+                "swap_bytes_held": self.held_bytes,
+                "swap_bytes_budget": (-1 if self.max_bytes is None
+                                      else self.max_bytes),
+                "swap_rejected": self.rejected,
                 "swap_bytes_out": self.bytes_out,
                 "swap_bytes_in": self.bytes_in}

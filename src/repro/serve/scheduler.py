@@ -28,13 +28,16 @@ A memoizing request cache (prompt+params -> tokens) fronts the pool for
 zipfian traffic — deterministic (greedy) requests only; hit/miss
 counters feed the fig_serve benchmark.
 
-With ``allocator='paged'`` the slot pool stores global-attention KV at
-block granularity (serve.paging): admission gates on free *blocks*, live
-slots map blocks on demand as their write position grows, retire frees
-them, and a growth failure preempts the youngest slot back to the front
-of the queue. At the equal-memory default (num_blocks=None) scheduling
-is identical to contiguous; smaller pools admit more concurrent
-mixed-length requests per byte at the cost of preemptions.
+With ``allocator='paged'`` the slot pool stores attention KV at block
+granularity (serve.paging): admission gates on free *blocks* in every
+page-table group — the global-KV group plus (``paged_window_attn``, the
+default) one ring-mode group per distinct sliding-window length — live
+slots map blocks on demand as their write position grows (ring groups
+stop growing once the full ring is resident), retire frees them, and a
+growth failure preempts the youngest slot back to the front of the
+queue. At the equal-memory defaults (num_blocks=num_window_blocks=None)
+scheduling is identical to contiguous; smaller pools admit more
+concurrent mixed-length requests per byte at the cost of preemptions.
 
 What preemption discards is the ``preempt`` policy:
 
@@ -84,16 +87,31 @@ class SchedulerConfig:
     # pad-to-slowest baseline fig_serve compares against.
     admit: str = "continuous"
     # 'contiguous': every slot reserves max_len cache rows.
-    # 'paged': global-attn KV lives in a block pool (serve.paging) —
+    # 'paged': attention KV lives in block pools (serve.paging) —
     # admission gates on free BLOCKS, slots grow block-by-block as they
     # decode, and a growth failure preempts the youngest slot.
     allocator: str = "contiguous"
     block_size: int = 16        # paged: cache positions per block
-    # paged: physical blocks in the pool. None = equal memory with the
-    # contiguous layout (num_slots * ceil(max_len / block_size)) — with
-    # that default no request can ever fail to grow, so scheduling is
-    # identical to contiguous; smaller pools trade preemptions for memory.
+    # paged: physical blocks in the global-KV pool. None = equal memory
+    # with the contiguous layout (num_slots * ceil(max_len / block_size))
+    # — with that default no request can ever fail to grow, so scheduling
+    # is identical to contiguous; smaller pools trade preemptions for
+    # memory.
     num_blocks: Optional[int] = None
+    # paged: also page sliding-window rings through ring-mode page-table
+    # groups (one per distinct window length) instead of reserving a
+    # dense window-row slab per slot. Blocks map lazily while a request
+    # ramps up to `window` written positions; Pareto-short requests never
+    # pay for the full ring. Off = the PR-3/4 dense-ring layout.
+    paged_window_attn: bool = True
+    # paged: physical blocks per window-ring pool. None = equal memory
+    # with the dense rings (num_slots * ceil(min(window, max_len) /
+    # block_size)).
+    num_window_blocks: Optional[int] = None
+    # preempt='swap': byte budget for the host SwapStore. None =
+    # unbounded; when an eviction's bytes would exceed it, that victim
+    # falls back to recompute-preemption (stats()['swap_rejected']).
+    swap_bytes_budget: Optional[int] = None
     # paged: what preempt-on-OOB discards. 'recompute' restarts the
     # victim from scratch; 'swap' parks its block bytes in a host
     # SwapStore and resumes it at the saved position on re-admission.
@@ -197,7 +215,10 @@ class Scheduler:
         self.slots = SlotManager(cfg, sched.num_slots, sched.max_len,
                                  paged=sched.allocator == "paged",
                                  block_size=sched.block_size,
-                                 num_blocks=sched.num_blocks)
+                                 num_blocks=sched.num_blocks,
+                                 paged_window=sched.paged_window_attn,
+                                 num_window_blocks=sched.num_window_blocks,
+                                 swap_bytes_budget=sched.swap_bytes_budget)
         self._queue: "collections.deque[_Slot]" = collections.deque()
         self._by_slot: Dict[int, _Slot] = {}
         self._inflight: Dict[Tuple, List[int]] = {}
@@ -234,12 +255,11 @@ class Scheduler:
             if self.slots.paged:
                 # progress guarantee for preempt-on-OOB: with every other
                 # slot evicted the oldest request must fit the whole pool
-                pt = self.slots.backing.pt
-                need = pt.blocks_for(len(p) + mnt)
-                if need > pt.pool.num_blocks:
-                    raise ValueError(
-                        f"request needs {need} blocks > pool "
-                        f"{pt.pool.num_blocks}")
+                # — in EVERY page-table group (global KV and each
+                # window-ring group; ring demand clamps at the full ring)
+                why = self.slots.fits_pool(len(p) + mnt)
+                if why is not None:
+                    raise ValueError(why)
             rid = self._next_rid
             self._next_rid += 1
             self._submit_t[rid] = time.perf_counter()
@@ -357,14 +377,21 @@ class Scheduler:
         redone (counted in 'recomputed_decode_steps'; greedy completions
         are unchanged by determinism, sampled ones may diverge like any
         restart). Under preempt='swap' its block bytes move to the host
-        SwapStore and it later RESUMES at st.ctx — no wasted work."""
+        SwapStore and it later RESUMES at st.ctx — no wasted work,
+        unless the SwapStore's byte budget rejects the entry, in which
+        case this victim degrades to a recompute restart (the store
+        counts the rejection; stats()['swap_rejected'])."""
         st = self._by_slot.pop(slot)
+        swapped = False
         if self.sched.preempt == "swap":
-            # bytes moved are tracked once, by the backing's SwapStore
-            # (surfaced through stats()); counters only count events
-            self.slots.swap_out(slot)
-            self.counters["swapped_out"] += 1
-        else:
+            # bytes moved AND budget rejections are tracked once, by the
+            # backing's SwapStore (surfaced through stats() —
+            # 'swap_rejected' has a single owner); counters only count
+            # scheduler events
+            swapped = self.slots.swap_out(slot) is not None
+            if swapped:
+                self.counters["swapped_out"] += 1
+        if not swapped:
             self.slots.release(slot)
             # decode ticks this victim consumed (ctx minus chunk-step
             # tokens) that the restart will pay for again

@@ -11,17 +11,24 @@ masks do.
 
 Two storage backings sit behind one facade:
 
-  * contiguous — every slot reserves ``cache_slots`` rows of every leaf
-    (worst-case reservation; the original layout).
-  * paged      — global-attention KV leaves live in a shared block pool
+  * contiguous — every slot reserves its worst-case rows of every leaf
+    (``cache_slots`` for global attention, the full ``window`` ring for
+    sliding-window layers; the original layout).
+  * paged      — attention KV leaves live in shared block pools
     (``serve.paging``: BlockPool + PageTable, blocks mapped on demand as
     a request's write position grows, freed at retire), so short
     requests stop stranding pool memory the way coarse-grain reservation
-    strands the paper's L2. The fused steps gather a per-slot contiguous
-    view through the page table before attending and scatter updates
+    strands the paper's L2. Keys sharing a view length form one
+    *page-table group* over one pool: the global-KV group (view =
+    ``cache_slots``) plus one ring-mode group per distinct window length
+    (view = ``min(window, cache_slots)``; blocks map lazily while the
+    request ramps up to ``window`` written positions, then the full ring
+    stays resident). The fused steps gather a per-slot contiguous view
+    through each group's page table before attending and scatter updates
     back (models.attention.paged_view / paged_writeback), keeping the
-    one-fused-program-per-tick property — and the view is bit-identical
-    to the contiguous layout, so greedy token streams are too.
+    one-fused-program-per-tick property — and every view is
+    bit-identical to the contiguous layout, so greedy token streams are
+    too.
 
 With the per-row position layout every cache leaf carries the slot axis
 at position 1 ((periods, B, ...)), so gather/scatter/reset are single-axis
@@ -31,7 +38,7 @@ indexing ops over the whole pytree, jitted once per sub-batch shape.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,18 +109,27 @@ def _reset(caches, template, idx):
     return jax.tree_util.tree_map(wipe, caches, template)
 
 
+def _attn_view_len(spec, cache_slots: int) -> int:
+    """Positions an attention layer's slot view spans: the full
+    ``cache_slots`` for global attention (or window >= cache_slots), the
+    ring length for a shorter sliding window."""
+    return min(cache_slots, spec.window) if spec.window else cache_slots
+
+
 # ---------------------------------------------------------------------------
 # storage backings
 # ---------------------------------------------------------------------------
 
 class _ContiguousBacking:
-    """Every slot owns ``cache_slots`` rows of every leaf (the original
-    worst-case-reservation layout)."""
+    """Every slot owns its worst-case rows of every leaf (the original
+    reservation layout)."""
 
     is_paged = False
 
     def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int):
         self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_slots = cache_slots
         self.caches = T.init_caches(cfg, num_slots, cache_slots,
                                     per_slot_pos=True)
         # one-slot zero template: reset = scatter-broadcast of this
@@ -121,8 +137,20 @@ class _ContiguousBacking:
                                        per_slot_pos=True)
         self.position_capacity = num_slots * cache_slots
 
+    @property
+    def total_rows(self) -> int:
+        """Total attention cache positions reserved across the pool
+        (global KV + window rings) — the equal-memory axis the windowed
+        fig_serve arm compares allocators on (every attn leaf of one cfg
+        has the same per-position byte cost)."""
+        return sum(self.num_slots * _attn_view_len(s, self.cache_slots)
+                   for s in self.cfg.pattern if s.mixer == "attn")
+
     def can_admit(self, prompt_len: int) -> bool:
         return True                     # a free slot is the only gate
+
+    def fits_pool(self, n_positions: int) -> Optional[str]:
+        return None                     # rows are pre-reserved
 
     def alloc_reset(self, slot: int, prompt_len: int):
         self.caches = _reset(self.caches, self._template,
@@ -155,185 +183,332 @@ class _ContiguousBacking:
         return {"allocator": "contiguous"}
 
 
+class _PageGroup:
+    """One BlockPool + PageTable shared by the pattern keys whose slot
+    views have the same length: the global-KV group (``view_len ==
+    cache_slots``) or one ring group per distinct window length. Keys in
+    a group advance in lockstep (every layer writes the same position
+    each tick), so one logical->physical map serves them all — block b
+    means rows [b*bs, (b+1)*bs) of every member key's flat pool."""
+
+    def __init__(self, keys: List[str], num_slots: int, view_len: int,
+                 cache_slots: int, block_size: int,
+                 num_blocks: Optional[int]):
+        self.keys = keys
+        self.view_len = view_len
+        self.ring = view_len < cache_slots
+        if num_blocks is None:
+            # equal-memory default: same position capacity as the dense
+            # layout (num_slots full views)
+            num_blocks = num_slots * (-(-view_len // block_size))
+        self.pool = BlockPool(num_blocks, block_size)
+        self.pt = PageTable(self.pool, num_slots, view_len, ring=self.ring)
+
+
 class _PagedBacking:
-    """Global-attention KV lives in a shared block pool; per-slot dense
-    leaves (SSM state, sub-``cache_slots`` window rings) keep the
-    contiguous layout. The page table maps each slot's logical blocks to
-    physical ones on demand; the fused steps read/write through flat row
-    index vectors derived from it (gather-before-attend)."""
+    """Attention KV lives in shared block pools — one page-table group
+    per view length (global KV + window rings when ``paged_window``);
+    per-slot dense leaves (SSM state, rings kept dense when
+    ``paged_window=False``) keep the contiguous layout. Each group's page
+    table maps a slot's logical blocks to physical ones on demand; the
+    fused steps read/write through flat row index vectors derived per
+    group (gather-before-attend)."""
 
     is_paged = True
 
     def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int,
-                 block_size: int, num_blocks: Optional[int]):
+                 block_size: int, num_blocks: Optional[int],
+                 paged_window: bool = True,
+                 num_window_blocks: Optional[int] = None,
+                 swap_bytes_budget: Optional[int] = None):
         self.cfg = cfg
-        if num_blocks is None:
-            # equal-memory default: same position capacity as contiguous
-            num_blocks = num_slots * (-(-cache_slots // block_size))
-        self.pool = BlockPool(num_blocks, block_size)
-        self.pt = PageTable(self.pool, num_slots, cache_slots)
-        self.live_rows = num_blocks * block_size
-        self.position_capacity = self.live_rows
+        self.num_slots = num_slots
+        self.cache_slots = cache_slots
+        self.block_size = block_size
         self.dense = T.init_caches(cfg, num_slots, cache_slots,
-                                   per_slot_pos=True, paged_global_attn=True)
+                                   per_slot_pos=True, paged_global_attn=True,
+                                   paged_window_attn=paged_window)
         self._template = T.init_caches(cfg, 1, cache_slots,
                                        per_slot_pos=True,
-                                       paged_global_attn=True)
+                                       paged_global_attn=True,
+                                       paged_window_attn=paged_window)
+        # group the paged keys by view length: one pool + page table per
+        # distinct length (the global group, rings per window size)
+        by_view: Dict[int, List[str]] = {}
+        self.key_view: Dict[str, int] = {}
+        for i, spec in enumerate(cfg.pattern):
+            key = f"p{i}"
+            entry = self.dense.get(key)
+            if not (entry and "attn" in entry and entry["attn"] is None):
+                continue
+            vl = _attn_view_len(spec, cache_slots)
+            by_view.setdefault(vl, []).append(key)
+            self.key_view[key] = vl
+        self.groups: Dict[int, _PageGroup] = {
+            vl: _PageGroup(keys, num_slots, vl, cache_slots, block_size,
+                           num_blocks if vl == cache_slots
+                           else num_window_blocks)
+            for vl, keys in sorted(by_view.items(), reverse=True)}
         self.paged = {
             key: attention.make_paged_cache(
-                num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim,
-                periods=cfg.num_periods)
-            for key, entry in self.dense.items()
-            if "attn" in entry and entry["attn"] is None}
-        self.swaps = SwapStore()
-        self._rows_cache: Optional[jnp.ndarray] = None
+                g.pool.num_blocks, block_size, cfg.num_kv_heads,
+                cfg.head_dim, periods=cfg.num_periods)
+            for g in self.groups.values() for key in g.keys}
+        g_global = self.groups.get(cache_slots)
+        self.position_capacity = (g_global.pool.num_blocks * block_size
+                                  if g_global else num_slots * cache_slots)
+        self.swaps = SwapStore(max_bytes=swap_bytes_budget)
+        # one-slot dense snapshot size is a constant (the template IS
+        # that snapshot's shape): precompute for swap_bytes_estimate
+        self._dense_slot_bytes = int(sum(
+            l.nbytes for l in jax.tree_util.tree_leaves(self._template)))
+        self._rows_cache: Optional[Dict[str, jnp.ndarray]] = None
+
+    @property
+    def total_rows(self) -> int:
+        """Attention cache positions actually allocated (physical block
+        rows incl. each group's trash sentinel, plus any rings kept
+        dense) — the equal-memory axis."""
+        total = sum(len(g.keys) * (g.pool.num_blocks + 1) * self.block_size
+                    for g in self.groups.values())
+        for i, spec in enumerate(self.cfg.pattern):
+            if spec.mixer == "attn" and f"p{i}" not in self.key_view:
+                total += self.num_slots * _attn_view_len(spec,
+                                                         self.cache_slots)
+        return total
 
     # -- page-table lifecycle -------------------------------------------
 
     def can_admit(self, prompt_len: int) -> bool:
-        return self.pt.can_map(self.pt.blocks_for(max(prompt_len, 1)))
+        n = max(prompt_len, 1)
+        return all(g.pt.can_map(g.pt.blocks_for(n))
+                   for g in self.groups.values())
+
+    def fits_pool(self, n_positions: int) -> Optional[str]:
+        """None if a request spanning ``n_positions`` could be mapped on
+        an EMPTY pool (every group), else why not — the submit-time
+        feasibility check behind the scheduler's progress guarantee.
+        Ring groups clamp via blocks_for: a ring never needs more than
+        the full ring resident."""
+        for g in self.groups.values():
+            need = g.pt.blocks_for(n_positions)
+            if need > g.pool.num_blocks:
+                what = (f"window-{g.view_len} ring" if g.ring
+                        else "global-KV")
+                return (f"request needs {need} {what} blocks > pool "
+                        f"{g.pool.num_blocks}")
+        return None
 
     def alloc_reset(self, slot: int, prompt_len: int):
         self.dense = _reset(self.dense, self._template,
                             jnp.asarray([slot], jnp.int32))
         ok = self.ensure(slot, max(prompt_len, 1) - 1)
-        assert ok, "alloc_reset after can_admit cannot run out of blocks"
+        if not ok:
+            raise RuntimeError(
+                "alloc_reset after can_admit ran out of blocks")
 
     def ensure(self, slot: int, upto_pos: int) -> bool:
-        """Map (and zero) every block covering positions [0, upto_pos].
-        False on pool exhaustion — the scheduler's preempt-on-OOB path."""
-        ok, new = self.pt.ensure(slot, upto_pos)
-        if new and self.paged:
-            # pow2-pad the reset batch with trash-block rows so the jitted
-            # reset compiles O(log blocks_per_slot) shapes, not one per count
-            n = bucketing.round_up_pow2(len(new), 1)
-            blocks = list(new) + [self.pt.trash] * (n - len(new))
-            rows = PageTable.block_rows(blocks, self.pool.block_size)
-            self.paged = engine.reset_block_rows(self.paged,
-                                                 jnp.asarray(rows))
-        if new:
-            self._rows_cache = None
-        return ok
+        """Map (and zero) every block covering positions [0, upto_pos] in
+        every group — ring groups clamp to their ring, so past the window
+        they are a no-op. False on pool exhaustion (the scheduler's
+        preempt-on-OOB path); blocks mapped so far stay mapped, and a
+        retry after preemption is idempotent."""
+        ok_all = True
+        for g in self.groups.values():
+            ok, new = g.pt.ensure(slot, upto_pos)
+            if new:
+                # pow2-pad the reset batch with trash-block rows so the
+                # jitted reset compiles O(log blocks_per_slot) shapes,
+                # not one per count
+                n = bucketing.round_up_pow2(len(new), 1)
+                blocks = list(new) + [g.pt.trash] * (n - len(new))
+                rows = PageTable.block_rows(blocks, self.block_size)
+                sub = {k: self.paged[k] for k in g.keys}
+                self.paged.update(engine.reset_block_rows(
+                    sub, jnp.asarray(rows)))
+                self._rows_cache = None
+            ok_all = ok_all and ok
+        return ok_all
 
     def release_slot(self, slot: int) -> List[int]:
-        freed = self.pt.free_slot(slot)
+        freed: List[int] = []
+        for g in self.groups.values():
+            freed += g.pt.free_slot(slot)
         if freed:
             self._rows_cache = None
         return freed
 
     # -- swap-out preemption --------------------------------------------
 
-    def _swap_rows(self, blocks: List[int]) -> jnp.ndarray:
+    def _swap_rows(self, g: _PageGroup, blocks: List[int]) -> jnp.ndarray:
         """Flat rows for a block list, pow2-padded with trash rows so the
         jitted gather/upload compile O(log blocks_per_slot) shapes."""
         n = bucketing.round_up_pow2(len(blocks), 1)
-        padded = list(blocks) + [self.pt.trash] * (n - len(blocks))
-        return jnp.asarray(PageTable.block_rows(padded,
-                                                self.pool.block_size))
+        padded = list(blocks) + [g.pt.trash] * (n - len(blocks))
+        return jnp.asarray(PageTable.block_rows(padded, self.block_size))
 
-    def swap_out(self, slot: int, rid: int) -> int:
-        """Copy ``slot``'s mapped block bytes + dense leaves to the host
-        SwapStore (keyed by ``rid``) and free the physical blocks — the
-        victim's decode work survives eviction. Returns bytes moved."""
-        bs = self.pool.block_size
-        phys = [int(b) for b in self.pt.table[slot]
-                if b != self.pt.trash]
-        paged_host = {}
-        if phys and self.paged:
-            keep = len(phys) * bs
-            got = jax.device_get(engine.gather_block_rows(
-                self.paged, self._swap_rows(phys)))
-            paged_host = {
-                key: attention.KVCache(k=c.k[:, :keep], v=c.v[:, :keep],
-                                       pos=c.pos[:, :keep])
-                for key, c in got.items()}
+    def swap_bytes_estimate(self, slot: int) -> int:
+        """Bytes a swap_out of ``slot`` would park host-side — computed
+        from shapes BEFORE any device gather, so a SwapStore budget
+        rejection costs nothing."""
+        bs = self.block_size
+        total = self._dense_slot_bytes
+        for g in self.groups.values():
+            nb = g.pt.mapped_blocks(slot)
+            for key in g.keys:
+                c = self.paged[key]
+                row = (int(np.prod(c.k.shape[2:])) * c.k.dtype.itemsize
+                       + int(np.prod(c.v.shape[2:])) * c.v.dtype.itemsize
+                       + c.pos.dtype.itemsize)
+                total += nb * bs * row * c.k.shape[0]
+        return total
+
+    def swap_out(self, slot: int, rid: int) -> Optional[int]:
+        """Copy ``slot``'s mapped block bytes (every group) + dense
+        leaves to the host SwapStore (keyed by ``rid``) and free the
+        physical blocks — the victim's decode work survives eviction.
+        Returns bytes moved, or None when the store's byte budget cannot
+        hold the entry (nothing is gathered or freed; the scheduler falls
+        back to recompute-preemption for this victim)."""
+        if self.swaps.max_bytes is not None \
+                and not self.swaps.can_hold(self.swap_bytes_estimate(slot)):
+            self.swaps.reject()         # the store owns the count
+            return None
+        bs = self.block_size
+        blocks: Dict[int, int] = {}
+        paged_host: Dict[str, attention.KVCache] = {}
+        for vl, g in self.groups.items():
+            phys = [int(b) for b in g.pt.table[slot] if b != g.pt.trash]
+            blocks[vl] = len(phys)
+            if phys and g.keys:
+                keep = len(phys) * bs
+                sub = {k: self.paged[k] for k in g.keys}
+                got = jax.device_get(engine.gather_block_rows(
+                    sub, self._swap_rows(g, phys)))
+                paged_host.update({
+                    key: attention.KVCache(k=c.k[:, :keep], v=c.v[:, :keep],
+                                           pos=c.pos[:, :keep])
+                    for key, c in got.items()})
+            _, freed = g.pt.swap_out(slot)
+            if sorted(freed) != sorted(phys):
+                raise RuntimeError(f"swap_out freed {freed} != mapped "
+                                   f"{phys} (group {vl})")
+            if freed:
+                self._rows_cache = None
         dense_host = jax.device_get(
             _gather(self.dense, jnp.asarray([slot], jnp.int32)))
-        row, freed = self.pt.swap_out(slot)
-        assert sorted(freed) == sorted(phys)
-        if freed:
-            self._rows_cache = None
         return self.swaps.put(rid, SwapEntry(
-            n_blocks=len(phys), table_row=row, paged=paged_host,
-            dense=dense_host))
+            blocks=blocks, paged=paged_host, dense=dense_host))
 
     def can_admit_swapped(self, rid: int) -> bool:
-        return self.pt.can_map(self.swaps.get(rid).n_blocks)
+        entry = self.swaps.get(rid)
+        return all(g.pt.can_map(entry.blocks.get(vl, 0))
+                   for vl, g in self.groups.items())
 
     def swap_in(self, slot: int, rid: int) -> int:
         """Resume ``rid`` in (free, unreset) ``slot``: map fresh blocks
-        for the saved logical prefix, upload the saved bytes, scatter the
-        dense snapshot — every cache row the request had written reads
-        bit-identically to the never-preempted layout. Returns bytes
-        moved. Caller guarantees can_admit_swapped just held."""
-        bs = self.pool.block_size
+        for each group's saved logical prefix, upload the saved bytes,
+        scatter the dense snapshot — every cache row the request had
+        written reads bit-identically to the never-preempted layout.
+        Returns bytes moved. Caller guarantees can_admit_swapped just
+        held."""
+        bs = self.block_size
         entry = self.swaps.pop(rid)
-        if entry.n_blocks:
-            new = self.pt.swap_in(slot, entry.n_blocks)
-            assert new is not None, \
-                "swap_in after can_admit_swapped cannot run out of blocks"
-            if self.paged:
-                rows = self._swap_rows(new)
-                pad = int(rows.shape[0]) - entry.n_blocks * bs
+        for vl, g in self.groups.items():
+            nb = entry.blocks.get(vl, 0)
+            if not nb:
+                continue
+            new = g.pt.swap_in(slot, nb)
+            if new is None:
+                raise RuntimeError(
+                    "swap_in after can_admit_swapped ran out of blocks")
+            if g.keys:
+                rows = self._swap_rows(g, new)
+                pad = int(rows.shape[0]) - nb * bs
                 saved = {
                     key: attention.KVCache(
-                        k=_pad_rows(c.k, pad), v=_pad_rows(c.v, pad),
-                        pos=_pad_rows(c.pos, pad))
-                    for key, c in entry.paged.items()}
-                self.paged = engine.upload_block_rows(self.paged, saved,
-                                                      rows)
+                        k=_pad_rows(entry.paged[key].k, pad),
+                        v=_pad_rows(entry.paged[key].v, pad),
+                        pos=_pad_rows(entry.paged[key].pos, pad))
+                    for key in g.keys}
+                sub = {k: self.paged[k] for k in g.keys}
+                self.paged.update(engine.upload_block_rows(sub, saved,
+                                                           rows))
             self._rows_cache = None
         self.dense = _scatter(self.dense, entry.dense,
                               jnp.asarray([slot], jnp.int32))
         return entry.nbytes
 
-    def _rows_all(self) -> jnp.ndarray:
+    # -- device-facing row vectors --------------------------------------
+
+    def _rows_all(self) -> Dict[str, jnp.ndarray]:
         if self._rows_cache is None:
-            self._rows_cache = jnp.asarray(self.pt.rows())
+            per_group = {vl: jnp.asarray(g.pt.rows())
+                         for vl, g in self.groups.items()}
+            self._rows_cache = {key: per_group[vl]
+                                for key, vl in self.key_view.items()}
         return self._rows_cache
+
+    def _rows_for(self, idx) -> Dict[str, jnp.ndarray]:
+        per_group = {vl: jnp.asarray(g.pt.rows(idx))
+                     for vl, g in self.groups.items()}
+        return {key: per_group[vl] for key, vl in self.key_view.items()}
 
     # -- data movement ---------------------------------------------------
 
     def gather(self, idx):
         sub = _gather(self.dense, jnp.asarray(idx, jnp.int32))
-        rows = jnp.asarray(self.pt.rows(idx))
+        rows = self._rows_for(idx)
         for key, flat in self.paged.items():
             sub[key] = dict(sub[key])
-            sub[key]["attn"] = attention.paged_view(flat, rows,
-                                                    self.live_rows)
+            sub[key]["attn"] = attention.paged_view(
+                flat, rows[key],
+                attention.paged_live_rows(flat, self.block_size))
         return sub
 
     def scatter(self, sub, idx):
         """Write a gathered sub-tree back. View positions whose blocks are
         unmapped scatter into the trash block (dropped) — callers only
         write back what gather handed out, so mapped data round-trips."""
-        rows = jnp.asarray(self.pt.rows(idx))
+        rows = self._rows_for(idx)
         stripped = {}
         for key, entry in sub.items():
             if key in self.paged:
                 entry = dict(entry)
                 self.paged[key] = attention.paged_writeback(
-                    self.paged[key], entry["attn"], rows)
+                    self.paged[key], entry["attn"], rows[key])
                 entry["attn"] = None
             stripped[key] = entry
         self.dense = _scatter(self.dense, stripped,
                               jnp.asarray(idx, jnp.int32))
 
     def run_chunk(self, params, idx, tokens, pos):
-        rows = jnp.asarray(self.pt.rows(idx))
+        rows = self._rows_for(idx)
         self.dense, self.paged = engine.jit_paged_chunk_step(self.cfg)(
             params, self.dense, self.paged, jnp.asarray(idx, jnp.int32),
-            rows, jnp.asarray(tokens), jnp.asarray(pos), self.live_rows)
+            rows, jnp.asarray(tokens), jnp.asarray(pos), self.block_size)
 
     def run_decode(self, params, tokens, pos, temps, key):
         nxt, _, self.dense, self.paged = engine.jit_paged_decode_step(
             self.cfg)(params, self.dense, self.paged, self._rows_all(),
-                      tokens, pos, temps, key, self.live_rows)
+                      tokens, pos, temps, key, self.block_size)
         return nxt
 
     def stats(self) -> dict:
-        return {"allocator": "paged", **self.pt.stats(),
-                **self.swaps.stats()}
+        used = sum(g.pool.used_count for g in self.groups.values())
+        total = sum(g.pool.num_blocks for g in self.groups.values())
+        out = {"allocator": "paged",
+               "page_groups": len(self.groups),
+               "blocks_total": total,
+               "blocks_used": used,
+               "block_size": self.block_size,
+               "block_utilization": used / max(total, 1),
+               **self.swaps.stats()}
+        for vl, g in self.groups.items():
+            if g.ring:
+                out[f"ring{vl}_blocks_total"] = g.pool.num_blocks
+                out[f"ring{vl}_blocks_used"] = g.pool.used_count
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -352,18 +527,27 @@ class SlotManager:
 
     ``paged=True`` swaps the storage backing for the block-granular
     allocator (module docstring): ``alloc`` then also needs the prompt's
-    blocks free, ``ensure`` must be called before a slot's write position
-    grows, and ``release`` returns the physical blocks it freed.
+    blocks free in every page-table group, ``ensure`` must be called
+    before a slot's write position grows, and ``release`` returns the
+    physical blocks it freed. ``paged_window`` (default on) pages
+    sliding-window rings through ring-mode groups as well; off keeps
+    them dense per slot (the PR-3/4 layout).
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int,
                  *, paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 paged_window: bool = True,
+                 num_window_blocks: Optional[int] = None,
+                 swap_bytes_budget: Optional[int] = None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_slots = cache_slots
         self.backing = (_PagedBacking(cfg, num_slots, cache_slots,
-                                      block_size, num_blocks)
+                                      block_size, num_blocks,
+                                      paged_window=paged_window,
+                                      num_window_blocks=num_window_blocks,
+                                      swap_bytes_budget=swap_bytes_budget)
                         if paged else
                         _ContiguousBacking(cfg, num_slots, cache_slots))
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
@@ -389,9 +573,16 @@ class SlotManager:
 
     @property
     def position_capacity(self) -> int:
-        """Total cache positions backing the pool (the equal-memory axis
-        fig_serve compares allocators on)."""
+        """Global-KV cache positions backing the pool (the equal-memory
+        axis fig_serve's global-attention comparison uses)."""
         return self.backing.position_capacity
+
+    @property
+    def total_rows(self) -> int:
+        """ALL attention cache positions allocated (global KV + window
+        rings, paged incl. trash sentinels) — the equal-memory axis for
+        windowed models."""
+        return self.backing.total_rows
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -404,8 +595,15 @@ class SlotManager:
         return [i for i in range(self.num_slots) if self.valid[i]]
 
     def can_admit(self, prompt_len: int = 0) -> bool:
-        """A free slot AND (paged) enough free blocks for the prompt."""
+        """A free slot AND (paged) enough free blocks for the prompt in
+        every page-table group."""
         return bool(self._free) and self.backing.can_admit(prompt_len)
+
+    def fits_pool(self, n_positions: int) -> Optional[str]:
+        """None if a request spanning ``n_positions`` could ever be
+        mapped on an empty pool; else the reason it can't (the
+        scheduler's submit-time ValueError)."""
+        return self.backing.fits_pool(n_positions)
 
     def alloc(self, owner: int, prompt_len: int = 0) -> Optional[int]:
         """Claim a free slot for request ``owner``; zero its cache rows
@@ -421,16 +619,18 @@ class SlotManager:
 
     def ensure(self, slot: int, upto_pos: int) -> bool:
         """Grow slot storage to cover writes up to ``upto_pos``. Always
-        True for contiguous; False when the paged pool is out of blocks
+        True for contiguous; False when a paged pool is out of blocks
         (the scheduler then preempts)."""
-        assert self.valid[slot], f"slot {slot} is not live"
+        if not self.valid[slot]:
+            raise RuntimeError(f"slot {slot} is not live")
         return self.backing.ensure(slot, upto_pos)
 
     def release(self, slot: int) -> List[int]:
         """Evict (EOS / max-tokens / abort / preempt): mark free; returns
         the physical blocks handed back (paged) — the stale cache rows are
         masked out by ``valid`` until the next alloc resets them."""
-        assert self.valid[slot], f"slot {slot} is not live"
+        if not self.valid[slot]:
+            raise RuntimeError(f"slot {slot} is not live")
         self.owner[slot] = None
         self.valid[slot] = False
         self._free.append(slot)
@@ -438,15 +638,21 @@ class SlotManager:
 
     # -- swap-out preemption (paged backing only) -----------------------
 
-    def swap_out(self, slot: int) -> int:
+    def swap_out(self, slot: int) -> Optional[int]:
         """Preempt WITHOUT discarding work: park the slot's mapped block
         bytes + dense leaves in the backing's SwapStore (keyed by the
         owning rid), free the blocks and the slot. Returns bytes moved
-        to host."""
-        assert self.valid[slot], f"slot {slot} is not live"
-        assert self.backing.is_paged, "swap-out needs the paged backing"
+        to host — or None when the SwapStore byte budget rejects the
+        entry, in which case the slot stays LIVE and the caller must
+        fall back to recompute-preemption."""
+        if not self.valid[slot]:
+            raise RuntimeError(f"slot {slot} is not live")
+        if not self.backing.is_paged:
+            raise RuntimeError("swap-out needs the paged backing")
         rid = self.owner[slot]
         nbytes = self.backing.swap_out(slot, rid)
+        if nbytes is None:
+            return None
         self.owner[slot] = None
         self.valid[slot] = False
         self._free.append(slot)
@@ -456,7 +662,8 @@ class SlotManager:
         return self.backing.is_paged and rid in self.backing.swaps
 
     def can_admit_swapped(self, rid: int) -> bool:
-        """A free slot AND blocks for the request's saved prefix."""
+        """A free slot AND blocks for the request's saved prefix in
+        every page-table group."""
         return bool(self._free) and self.backing.can_admit_swapped(rid)
 
     def swap_in(self, rid: int) -> Optional[Tuple[int, int]]:
@@ -477,7 +684,7 @@ class SlotManager:
 
     def gather(self, idx: Sequence[int]):
         """Sub-caches for slots ``idx`` (batch axis = len(idx)). The paged
-        backing materializes the page-table view — bit-identical to the
+        backing materializes the page-table views — bit-identical to the
         contiguous rows for every mapped position."""
         return self.backing.gather(idx)
 
@@ -494,8 +701,8 @@ class SlotManager:
 
     def run_decode(self, params, tokens, pos, temps, key):
         """ONE fused decode over the whole pool; returns next tokens.
-        (Paged: gather-through-page-table -> decode -> scatter, still one
-        jitted program per tick.)"""
+        (Paged: gather-through-page-tables -> decode -> scatter, still
+        one jitted program per tick.)"""
         return self.backing.run_decode(params, tokens, pos, temps, key)
 
     def stats(self) -> dict:

@@ -4,9 +4,17 @@ Under ``python -O`` every ``assert`` statement is stripped (including
 pytest's, whose assertion rewriting is disabled there), so the regular
 test suite cannot catch a serve-path bug that only manifests with
 optimization on. This script re-runs the scheduler differential with
-EXPLICIT raises: the paged allocator (both preemption policies, plus
-reserved admission) must emit greedy token streams bit-identical to the
-contiguous baseline, with the swap policy recomputing zero decode steps.
+EXPLICIT raises: the paged allocator (both preemption policies, reserved
+admission, AND the windowed model whose sliding-window rings page
+through ring-mode page-table groups) must emit greedy token streams
+bit-identical to the contiguous baseline, with the swap policy
+recomputing zero decode steps and a swap-budget rejection degrading to
+recompute per victim.
+
+It also drives the allocator's state guards directly: BlockPool double
+free, PageTable ensure/swap_in misuse, check_invariants and the
+SwapStore byte budget must all raise ValueError/RuntimeError — under -O
+a bare ``assert`` guard would vanish and let pool corruption proceed.
 
 The regression this pins: ``_prefill_chunks`` used to call the
 side-effecting ``slots.ensure(...)`` inside an assert — under -O the
@@ -50,34 +58,93 @@ def run_trace(cfg, params, prompts, mnts, **sc_kw):
     return {c.rid: c for c in done}, sched
 
 
+def check_allocator_guards():
+    """The paged allocator's state guards must be explicit raises, not
+    ``assert`` — under -O a stripped guard lets pool/table corruption
+    proceed silently. Every violation here must raise the documented
+    ValueError/RuntimeError even with asserts gone."""
+    from repro.serve.paging import BlockPool, PageTable, SwapEntry, SwapStore
+
+    def expect(exc, fn, msg):
+        try:
+            fn()
+        except exc:
+            return
+        raise SystemExit(f"[smoke_opt] FAIL: {msg} did not raise "
+                         f"{exc.__name__} under -O")
+
+    bp = BlockPool(4, block_size=4)
+    a = bp.alloc()
+    bp.free(a)
+    expect(ValueError, lambda: bp.free(a), "double free")
+    expect(ValueError, lambda: BlockPool(0, 4), "bad pool sizing")
+    pt = PageTable(bp, num_slots=2, slot_positions=16)
+    expect(ValueError, lambda: pt.ensure(0, 16), "ensure out of range")
+    pt.ensure(0, 3)
+    expect(RuntimeError, lambda: pt.swap_in(0, 1), "swap_in non-empty slot")
+    expect(ValueError, lambda: pt.swap_in(1, 99), "swap_in oversize")
+    pt.table[0, 1] = pt.table[0, 0]             # corrupt: double mapping
+    expect(RuntimeError, pt.check_invariants, "check_invariants")
+    ring = PageTable(BlockPool(4, 4), num_slots=1, slot_positions=10,
+                     ring=True)
+    ok, new = ring.ensure(0, 10_000)            # ring clamps, no raise
+    check(ok and len(new) == 3, "ring ensure did not clamp to the ring")
+    ok, new = ring.ensure(0, 10_001)
+    check(ok and new == [], "saturated ring kept allocating")
+    store = SwapStore(max_bytes=8)
+    big = SwapEntry(blocks={4: 1}, paged={},
+                    dense={"x": np.zeros((4,), np.float32)})   # 16 B
+    expect(RuntimeError, lambda: store.put(1, big), "swap budget overflow")
+    check(store.rejected == 1, "rejected put was not counted")
+    print("[smoke_opt] allocator guards: OK (raises survive -O)")
+
+
 def main():
     check(not __debug__, "run me with python -O (asserts must be stripped)")
     from repro import configs
     from repro.models import transformer as T
 
+    check_allocator_guards()
+
     cfg = configs.reduced_config("gemma-2b")
     params = T.init_model(jax.random.PRNGKey(0), cfg)
+    cfg_w = configs.reduced_config("gemma3-12b")    # sliding-window model
+    params_w = T.init_model(jax.random.PRNGKey(0), cfg_w)
     rng = np.random.default_rng(7)
     lens = [3, 17, 9, 24, 5, 12]
     mnts = [6, 4, 8, 5, 7, 3]
     prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
 
     base, _ = run_trace(cfg, params, prompts, mnts)
-    arms = [("paged/recompute", dict(preempt="recompute")),
-            ("paged/swap", dict(preempt="swap")),
-            ("paged/reserved", dict(admission="reserved"))]
-    for name, kw in arms:
-        got, sched = run_trace(cfg, params, prompts, mnts,
-                               allocator="paged", block_size=8,
-                               num_blocks=6, **kw)
-        for rid in base:
-            check(got[rid].tokens.tolist() == base[rid].tokens.tolist(),
+    base_w, _ = run_trace(cfg_w, params_w, prompts, mnts)
+    pool = dict(allocator="paged", block_size=8, num_blocks=6)
+    # windowed pool: under-provisioned global AND window-ring groups, so
+    # ring paging, ring growth-OOB and ring swap all really run
+    pool_w = dict(allocator="paged", block_size=2, num_blocks=16,
+                  num_window_blocks=9)
+    arms = [
+        ("paged/recompute", cfg, params, base, dict(pool)),
+        ("paged/swap", cfg, params, base, dict(pool, preempt="swap")),
+        ("paged/reserved", cfg, params, base,
+         dict(pool, admission="reserved")),
+        ("paged-window/recompute", cfg_w, params_w, base_w, dict(pool_w)),
+        ("paged-window/swap", cfg_w, params_w, base_w,
+         dict(pool_w, preempt="swap")),
+        # swap with a 1-byte budget must degrade to recompute per victim
+        # (loud rejection), still bit-identical
+        ("paged-window/swap-budget", cfg_w, params_w, base_w,
+         dict(pool_w, preempt="swap", swap_bytes_budget=1)),
+    ]
+    for name, c_, p_, b_, kw in arms:
+        got, sched = run_trace(c_, p_, prompts, mnts, **kw)
+        for rid in b_:
+            check(got[rid].tokens.tolist() == b_[rid].tokens.tolist(),
                   f"{name}: rid {rid} token stream diverged from "
                   f"contiguous (stripped-assert side effect?)")
-            check(got[rid].reason == base[rid].reason,
+            check(got[rid].reason == b_[rid].reason,
                   f"{name}: rid {rid} finish reason diverged")
         c = sched.counters
-        if name == "paged/swap":
+        if name.endswith("/swap"):
             check(c["recomputed_decode_steps"] == 0,
                   f"swap policy recomputed {c['recomputed_decode_steps']} "
                   "decode steps")
@@ -86,6 +153,18 @@ def main():
                   "swap path never exercised")
         if name == "paged/reserved":
             check(c["preempted"] == 0, "reserved admission preempted")
+        if name == "paged-window/swap-budget":
+            check(sched.stats()["swap_rejected"] >= 1
+                  and c["swapped_out"] == 0,
+                  "swap budget never rejected")
+            check(c["preempted"] >= 1 and
+                  c["recomputed_decode_steps"] >= 1,
+                  "rejected swap did not fall back to recompute")
+        if name.startswith("paged-window"):
+            check(c["preempted"] >= 1,
+                  f"{name}: windowed pool never preempted (vacuous)")
+            check(sched.stats()["ring16_blocks_used"] == 0,
+                  f"{name}: retire leaked ring blocks")
         check(sched.stats()["blocks_used"] == 0,
               f"{name}: retire leaked blocks")
         print(f"[smoke_opt] {name}: OK ({c['preempted']} preemptions, "
@@ -104,6 +183,17 @@ def main():
         else:
             raise SystemExit(f"[smoke_opt] FAIL: submit({bad}) accepted "
                              "under -O (feasibility check stripped)")
+    # paged feasibility (every page-table group) must reject too
+    paged = Scheduler(cfg_w, params_w, SchedulerConfig(
+        num_slots=1, max_len=64, prefill_chunk=8, allocator="paged",
+        block_size=8, num_blocks=2))
+    try:
+        paged.submit([np.arange(20, dtype=np.int32)], max_new_tokens=8)
+    except ValueError:
+        pass
+    else:
+        raise SystemExit("[smoke_opt] FAIL: infeasible paged submit "
+                         "accepted under -O")
     print("[smoke_opt] all serve-path checks green under python -O")
     return 0
 

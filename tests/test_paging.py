@@ -29,11 +29,37 @@ def test_block_pool_alloc_free_lifo():
 
 
 def test_block_pool_guards_double_free():
+    # explicit ValueError, not assert: the guard must survive python -O
+    # (tests/smoke_opt.py replays these under -O)
     bp = BlockPool(2, block_size=4)
     a = bp.alloc()
     bp.free(a)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="not allocated"):
         bp.free(a)
+    with pytest.raises(ValueError, match="block_size"):
+        BlockPool(0, 4)
+
+
+def test_page_table_guards_raise_not_assert():
+    """Every pool/table state guard raises ValueError/RuntimeError: under
+    python -O a bare assert would vanish and let corruption proceed."""
+    bp = BlockPool(4, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=16)
+    with pytest.raises(ValueError, match="outside slot"):
+        pt.ensure(0, 16)                         # non-ring: OOB rejected
+    pt.ensure(0, 3)
+    with pytest.raises(RuntimeError, match="not empty"):
+        pt.swap_in(0, 1)                         # slot still mapped
+    with pytest.raises(ValueError, match="swap_in"):
+        pt.swap_in(1, 99)                        # more than blocks_per_slot
+    # a corrupted (non-prefix) mapping must refuse to swap out
+    pt.ensure(1, 3)
+    pt.table[1, 0] = pt.trash                    # corrupt: hole at lb 0
+    pt.table[1, 2] = 0                           # duplicate-map block 0
+    with pytest.raises(RuntimeError, match="not a logical prefix"):
+        pt.swap_out(1)
+    with pytest.raises(RuntimeError, match="two logical blocks"):
+        pt.check_invariants()
 
 
 # --------------------------------------------------------------------------
@@ -79,6 +105,117 @@ def test_blocks_for_clamps_to_slot():
     assert pt.blocks_for(1) == 1
     assert pt.blocks_for(10) == 3
     assert pt.blocks_for(10_000) == pt.blocks_per_slot   # never over-asks
+
+
+# --------------------------------------------------------------------------
+# ring mode: sliding-window rings page like growing slots, then saturate
+# --------------------------------------------------------------------------
+
+def test_ring_page_table_ramp_up_then_saturates():
+    """Ring mode maps blocks lazily while pos ramps up to the window,
+    then the resident ring absorbs every later position: ensure clamps
+    (no error past the ring) and allocates nothing new."""
+    bp = BlockPool(8, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=10, ring=True)  # window 10
+    assert pt.blocks_per_slot == 3
+    ok, new = pt.ensure(0, 0)                    # first write: 1 block
+    assert ok and len(new) == 1
+    ok, new = pt.ensure(0, 6)                    # ramp-up: 1 more
+    assert ok and len(new) == 1 and pt.mapped_blocks(0) == 2
+    ok, new = pt.ensure(0, 9)                    # ring full
+    assert ok and len(new) == 1 and pt.mapped_blocks(0) == 3
+    for pos in (10, 25, 10_000):                 # wrap-around: steady state
+        ok, new = pt.ensure(0, pos)
+        assert ok and new == []
+    assert pt.mapped_blocks(0) == 3              # never more than the ring
+    with pytest.raises(ValueError, match="outside slot"):
+        pt.ensure(0, -1)                         # clamp is one-sided
+    pt.check_invariants()
+
+
+def test_ring_page_table_short_request_maps_partial_ring():
+    """The tentpole's win: a request that finishes before filling the
+    ring only ever maps ceil((pos+1)/bs) blocks — the dense layout would
+    have reserved the full window for it."""
+    bp = BlockPool(16, block_size=4)
+    pt = PageTable(bp, num_slots=4, slot_positions=16, ring=True)
+    ok, _ = pt.ensure(0, 5)                      # short request: 6 positions
+    assert ok and pt.mapped_blocks(0) == 2       # not the full 4-block ring
+    rows = pt.rows([0])
+    assert rows.shape == (1, 16)                 # view is still the ring
+    assert (rows[0, 8:] >= bp.num_blocks * 4).all()   # unmapped tail: trash
+    freed = pt.free_slot(0)
+    assert len(freed) == 2
+
+
+def test_property_paged_ring_view_matches_dense_ring_mirror():
+    """Hypothesis property (the wrap-around acceptance gate): sequential
+    per-slot decode writes at ring address pos % V through the paged
+    view must equal a directly maintained dense ring mirror BITWISE at
+    every step — through ramp-up, saturation, several wrap-arounds, and
+    slot retire/reuse."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    P, KV, HD, SLOTS = 1, 1, 2, 2
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def prop(data):
+        BS = data.draw(st.sampled_from([2, 4, 8]))    # incl. window < BS
+        V = data.draw(st.sampled_from([3, 4, 6]))     # the ring (window)
+        num_blocks = data.draw(st.integers(2, 2 * SLOTS * (-(-V // BS))))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        flat = attention.make_paged_cache(num_blocks, BS, KV, HD,
+                                          dtype=jnp.float32, periods=P)
+        flat = attention.KVCache(                 # scribble: prove masking
+            k=flat.k + 7.0, v=flat.v - 3.0, pos=flat.pos + 99)
+        live = num_blocks * BS
+        bp = BlockPool(num_blocks, BS)
+        pt = PageTable(bp, SLOTS, V, ring=True)
+        ref_k = np.zeros((P, SLOTS, V, KV, HD), np.float32)
+        ref_v = np.zeros_like(ref_k)
+        ref_pos = np.full((P, SLOTS, V), -1, np.int32)
+        clock = [0] * SLOTS                       # per-slot decode position
+
+        for _ in range(data.draw(st.integers(1, 3 * V + 4))):
+            slot = data.draw(st.integers(0, SLOTS - 1))
+            if data.draw(st.integers(0, 9)) == 0:  # occasional retire
+                freed = pt.free_slot(slot)
+                for b in freed:
+                    assert not bp.allocated[b]
+                ref_k[:, slot] = 0.0
+                ref_v[:, slot] = 0.0
+                ref_pos[:, slot] = -1
+                clock[slot] = 0
+            else:                                  # one decode-tick write
+                pos = clock[slot]
+                ok, new = pt.ensure(slot, pos)
+                if not ok:                         # pool OOB: skip tick
+                    continue
+                if new:
+                    flat = _zero_blocks(flat, new, BS)
+                r = pos % V                        # ring addressing
+                rows = jnp.asarray(pt.rows([slot]))
+                view = attention.paged_view(flat, rows, live)
+                nk = rng.normal(size=(P, 1, 1, KV, HD)).astype(np.float32)
+                nv = rng.normal(size=(P, 1, 1, KV, HD)).astype(np.float32)
+                view = attention.KVCache(
+                    k=view.k.at[:, :, r:r + 1].set(nk),
+                    v=view.v.at[:, :, r:r + 1].set(nv),
+                    pos=view.pos.at[:, :, r:r + 1].set(pos))
+                flat = attention.paged_writeback(flat, view, rows)
+                ref_k[:, slot, r] = nk[:, 0, 0]
+                ref_v[:, slot, r] = nv[:, 0, 0]
+                ref_pos[:, slot, r] = pos
+                clock[slot] = pos + 1
+            pt.check_invariants()
+            got = attention.paged_view(flat, jnp.asarray(pt.rows()), live)
+            np.testing.assert_array_equal(np.asarray(got.k), ref_k)
+            np.testing.assert_array_equal(np.asarray(got.v), ref_v)
+            np.testing.assert_array_equal(np.asarray(got.pos), ref_pos)
+
+    prop()
 
 
 # --------------------------------------------------------------------------
@@ -225,17 +362,44 @@ def test_swap_store_tracks_bytes_and_membership():
     from repro.serve.paging import SwapEntry
 
     store = SwapStore()
-    entry = SwapEntry(n_blocks=1, table_row=np.asarray([0]),
-                      paged={}, dense={"x": np.zeros((2, 4), np.float32)})
+    entry = SwapEntry(blocks={10: 1}, paged={},
+                      dense={"x": np.zeros((2, 4), np.float32)})
     n = store.put(7, entry)
     assert n == entry.nbytes == 32
     assert 7 in store and len(store) == 1
-    assert store.stats() == {"swapped_held": 1, "swap_bytes_out": 32,
-                             "swap_bytes_in": 0}
-    with pytest.raises(AssertionError):
+    st = store.stats()
+    assert st["swapped_held"] == 1 and st["swap_bytes_out"] == 32
+    assert st["swap_bytes_held"] == 32 and st["swap_bytes_in"] == 0
+    assert st["swap_bytes_budget"] == -1        # unbounded
+    with pytest.raises(ValueError, match="already swapped"):
         store.put(7, entry)                      # rid parked twice
     assert store.pop(7) is entry
     assert 7 not in store and store.bytes_in == 32
+    assert store.held_bytes == 0
+
+
+def test_swap_store_byte_budget_rejects_loudly():
+    """The store is bounded: an entry that would exceed ``max_bytes``
+    raises (the backing pre-checks with can_hold and falls back to
+    recompute-preemption), and held bytes drop on pop so the budget
+    frees up as requests re-admit."""
+    from repro.serve.paging import SwapEntry
+
+    mk = lambda: SwapEntry(blocks={8: 1}, paged={},
+                           dense={"x": np.zeros((8,), np.float32)})  # 32 B
+    store = SwapStore(max_bytes=48)
+    assert store.can_hold(32)
+    store.put(1, mk())
+    assert not store.can_hold(32)                # 32 + 32 > 48
+    with pytest.raises(RuntimeError, match="swap budget"):
+        store.put(2, mk())
+    assert store.rejected == 1 and 2 not in store
+    assert store.stats()["swap_rejected"] == 1
+    assert store.stats()["swap_bytes_budget"] == 48
+    store.pop(1)                                 # budget frees on re-admit
+    assert store.can_hold(32)
+    store.put(2, mk())
+    assert store.held_bytes == 32
 
 
 def _gather_blocks_host(flat, blocks, bs):
@@ -445,3 +609,69 @@ def test_paged_slot_manager_admission_gates_on_blocks():
     assert not sm.ensure(a, 31)                  # growth past pool: OOB
     sm.release(a)
     assert sm.can_admit(prompt_len=24)
+
+
+def test_windowed_slot_manager_pages_rings_by_group():
+    """A windowed model (gemma3: p0 window=16, p1 global) gets TWO
+    page-table groups over separate pools; ring demand clamps at the
+    full ring, rings stop growing at steady state, and retire frees
+    both groups' blocks."""
+    from repro import configs
+    from repro.serve import SlotManager
+
+    cfg = configs.reduced_config("gemma3-12b")   # window 16 + global
+    sm = SlotManager(cfg, num_slots=2, cache_slots=48, paged=True,
+                     block_size=4)               # equal-memory pools
+    bk = sm.backing
+    assert sorted(bk.groups) == [16, 48]
+    assert bk.groups[16].ring and not bk.groups[48].ring
+    assert bk.groups[16].pool.num_blocks == 2 * 4     # 2 slots * 16/4
+    assert bk.groups[48].pool.num_blocks == 2 * 12
+    # dense leaves hold neither ring nor global KV anymore
+    assert bk.dense["p0"]["attn"] is None
+    assert bk.dense["p1"]["attn"] is None
+
+    a = sm.alloc(owner=1, prompt_len=9)          # 9 positions
+    assert bk.groups[48].pt.mapped_blocks(a) == 3     # ceil(9/4)
+    assert bk.groups[16].pt.mapped_blocks(a) == 3     # ring ramp-up
+    sm.ensure(a, 30)                             # decode grows past window
+    assert bk.groups[48].pt.mapped_blocks(a) == 8     # ceil(31/4)
+    assert bk.groups[16].pt.mapped_blocks(a) == 4     # ring saturated
+    sm.ensure(a, 47)
+    assert bk.groups[16].pt.mapped_blocks(a) == 4     # still the ring
+    st = sm.stats()
+    assert st["page_groups"] == 2
+    assert st["ring16_blocks_used"] == 4
+    freed = sm.release(a)
+    assert len(freed) == 12 + 4 and st["blocks_used"] == 16
+    assert sm.stats()["blocks_used"] == 0
+    # equal-memory axis: paged total_rows (incl. 2 trash sentinels) vs
+    # the dense layout's num_slots * (window + cache_slots)
+    dense_rows = SlotManager(cfg, num_slots=2, cache_slots=48).total_rows
+    assert dense_rows == 2 * (16 + 48)
+    assert sm.total_rows == (2 * 4 + 1) * 4 + (2 * 12 + 1) * 4
+
+
+def test_windowed_slot_manager_window_pool_gates_admission():
+    """An under-provisioned RING pool alone blocks admission and growth:
+    the second allocator client gates exactly like the first."""
+    from repro import configs
+    from repro.serve import SlotManager
+
+    cfg = configs.reduced_config("gemma3-12b")
+    sm = SlotManager(cfg, num_slots=4, cache_slots=48, paged=True,
+                     block_size=4, num_window_blocks=5)
+    a = sm.alloc(owner=1, prompt_len=16)         # full ring: 4 of 5
+    assert a is not None
+    assert not sm.can_admit(prompt_len=8)        # ring needs 2, has 1
+    assert sm.can_admit(prompt_len=4)            # 1 ring block suffices
+    b = sm.alloc(owner=2, prompt_len=3)
+    assert not sm.ensure(b, 7)                   # ring growth OOB
+    sm.release(a)
+    assert sm.ensure(b, 7)                       # freed ring blocks reused
+    # ...and paged_window=False keeps rings dense (the PR-3/4 layout)
+    sm_dense = SlotManager(cfg, num_slots=2, cache_slots=48, paged=True,
+                           block_size=4, paged_window=False)
+    assert sorted(sm_dense.backing.groups) == [48]
+    assert sm_dense.backing.dense["p0"]["attn"] is not None
+    assert sm_dense.total_rows == 2 * 16 + (2 * 12 + 1) * 4

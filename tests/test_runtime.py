@@ -333,6 +333,57 @@ def test_autotune_tune_picks_fastest(tmp_path):
     assert calls == []                              # cached: not re-measured
 
 
+def test_autotune_tune_skips_failing_candidates(tmp_path):
+    """One bad candidate (e.g. a block size incompatible with the bucket
+    shape) must not abort the sweep: it is skipped, recorded in the
+    cache entry, and tune raises only when EVERY candidate fails."""
+    path = str(tmp_path / "cache.json")
+    t = Autotuner(path)
+
+    def make_thunk(cand):
+        def thunk():
+            if cand == "bad":
+                raise ValueError("block size incompatible with bucket")
+            if cand == "slow":
+                sum(range(200_000))
+            return jnp.zeros(())
+        return thunk
+
+    best = t.tune("toy.knob", {"bad": "bad", "slow": "slow",
+                               "fast": "fast"}, make_thunk)
+    assert best == "fast"
+    entry = json.loads((tmp_path / "cache.json").read_text())["toy.knob"]
+    assert "bad" in entry["failed"]                 # failure is recorded
+    assert "incompatible" in entry["failed"]["bad"]
+    with pytest.raises(RuntimeError, match="every candidate failed"):
+        t.tune("doomed.knob", {"bad": "bad"}, make_thunk)
+    assert t.get("doomed.knob") is None             # nothing persisted
+
+
+def test_autotune_save_tmp_is_per_pid_and_merges(tmp_path, monkeypatch):
+    """save() renames a per-pid tmp file AND merges the on-disk entries
+    first: two processes that loaded the cache before either wrote must
+    not lose each other's keys to a whole-file last-rename-wins race."""
+    import os
+
+    path = str(tmp_path / "cache.json")
+    seen = []
+    real_replace = os.replace
+
+    def spy(src, dst):
+        seen.append(src)
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", spy)
+    a = Autotuner(path)
+    b = Autotuner(path)            # "process B": loaded before A wrote
+    a.put("a.knob", 1)
+    assert seen and seen[0] == f"{path}.{os.getpid()}.tmp"
+    b.put("b.knob", 2)             # B's save must not discard A's entry
+    fresh = Autotuner(path)
+    assert fresh.get("a.knob") == 1 and fresh.get("b.knob") == 2
+
+
 def test_autotune_seed_from_fig9(tmp_path):
     path = str(tmp_path / "cache.json")
     rows = ["fig9.dtw.tile16,90.0,vmem_bytes=1",

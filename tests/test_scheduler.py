@@ -29,6 +29,14 @@ def rwkv():
     return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
 
 
+@pytest.fixture(scope="module")
+def gemma3():
+    """Windowed model: p0 is a sliding-window (16) ring, p1 global —
+    the paged backing runs TWO page-table groups (ring + global KV)."""
+    cfg = configs.reduced_config("gemma3-12b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
 def _prompts(rng, vocab, lens):
     return [rng.integers(0, vocab, l).astype(np.int32) for l in lens]
 
@@ -80,18 +88,22 @@ def test_staggered_arrivals_match_per_request_generate(model, request):
         assert c.reason == reason
 
 
-@pytest.mark.parametrize("allocator,preempt", [
-    ("contiguous", "recompute"), ("paged", "recompute"), ("paged", "swap")])
-def test_property_random_arrival_patterns(gemma, allocator, preempt):
+@pytest.mark.parametrize("model,allocator,preempt", [
+    ("gemma", "contiguous", "recompute"), ("gemma", "paged", "recompute"),
+    ("gemma", "paged", "swap"), ("gemma3", "paged", "swap")])
+def test_property_random_arrival_patterns(request, model, allocator,
+                                          preempt):
     """Property test: random prompt lengths / budgets / arrival patterns
     keep the scheduler token-identical to per-request generate — under
     BOTH slot allocators (paged runs block alloc/grow/free on every
     trace; a sub-equal-memory pool also exercises preempt-on-OOB, under
-    both the recompute and the swap-out preemption policies)."""
+    both the recompute and the swap-out preemption policies) and for the
+    windowed model, whose sliding-window rings page through a ring-mode
+    page-table group next to the global-KV one."""
     hypothesis = pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
-    cfg, params = gemma
+    cfg, params = request.getfixturevalue(model)
     oracle = {}
 
     @settings(max_examples=5, deadline=None)
@@ -161,25 +173,47 @@ def _run_trace(cfg, params, prompts, mnts, eos, **sc_kw):
 _TRACE = dict(lens=[3, 17, 9, 24, 5, 12], mnts=[6, 4, 8, 5, 7, 3], eos=5)
 
 
-@pytest.mark.parametrize("num_blocks,preempt", [
-    (None, "recompute"), (6, "recompute"), (6, "swap")])
-def test_paged_matches_contiguous_differential(gemma, num_blocks, preempt):
+@pytest.mark.parametrize("model,block_size,num_blocks,num_window_blocks,"
+                         "preempt", [
+    # global-attention model (the PR-3/4 arms)
+    ("gemma", 8, None, None, "recompute"),
+    ("gemma", 8, 6, None, "recompute"),
+    ("gemma", 8, 6, None, "swap"),
+    # windowed model, window(16) >> block_size(2): the ring group pages
+    # 8 blocks per ring; under-provisioned global AND ring pools both
+    # hit growth-OOB (ring contention during ramp-up)
+    ("gemma3", 2, None, None, "recompute"),
+    ("gemma3", 2, 16, 9, "recompute"),
+    ("gemma3", 2, 16, 9, "swap"),
+    # windowed model, window(16) < block_size(24): the ring is a single
+    # partial block; the global pool under-provisions to 3
+    ("gemma3", 24, 3, None, "swap"),
+])
+def test_paged_matches_contiguous_differential(request, model, block_size,
+                                               num_blocks,
+                                               num_window_blocks, preempt):
     """Same arrival trace (staggered, mixed-length, slot reuse) through
     both allocators: token-identical greedy streams and identical finish
-    reasons. num_blocks=None is the equal-memory pool (scheduling
-    provably identical); num_blocks=6 under-provisions so growth hits
+    reasons — for the global-attention model AND the windowed model
+    (whose rings page through ring-mode page-table groups, with
+    window >> block_size and window < block_size layouts).
+    num_blocks=None is the equal-memory pool (scheduling provably
+    identical); smaller pools under-provision so growth hits
     preempt-on-OOB — invisible under greedy for BOTH policies: recompute
     restarts the victim from scratch, swap must resume it at its saved
-    position with ZERO recomputed decode steps (the preserved-work
-    acceptance gate)."""
-    cfg, params = gemma
+    position (ring blocks ride the block path, not a dense snapshot)
+    with ZERO recomputed decode steps (the preserved-work acceptance
+    gate)."""
+    cfg, params = request.getfixturevalue(model)
     rng = np.random.default_rng(7)
     prompts = _prompts(rng, cfg.vocab, _TRACE["lens"])
     mnts, eos = _TRACE["mnts"], _TRACE["eos"]
     base, ref_sched = _run_trace(cfg, params, prompts, mnts, eos)
     paged, sched = _run_trace(cfg, params, prompts, mnts, eos,
-                              allocator="paged", block_size=8,
-                              num_blocks=num_blocks, preempt=preempt)
+                              allocator="paged", block_size=block_size,
+                              num_blocks=num_blocks,
+                              num_window_blocks=num_window_blocks,
+                              preempt=preempt)
     assert set(base) == set(paged) == set(range(len(prompts)))
     for i in range(len(prompts)):
         assert paged[i].tokens.tolist() == base[i].tokens.tolist(), \
@@ -230,6 +264,32 @@ def test_reserved_admission_never_preempts(gemma):
     assert sched.counters["preempted"] == 0
     assert sched.counters["recomputed_decode_steps"] == 0
     assert sched.stats()["blocks_used"] == 0
+
+
+def test_swap_budget_rejection_falls_back_to_recompute(gemma3):
+    """A SwapStore byte budget of 1 rejects every eviction: the swap
+    policy must degrade to recompute per victim — still token-identical,
+    with the rejection count owned by the SwapStore alone (regression:
+    a scheduler-side shadow counter was once silently overwritten by
+    the store's zero in the merged stats())."""
+    cfg, params = gemma3
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg.vocab, _TRACE["lens"])
+    mnts, eos = _TRACE["mnts"], _TRACE["eos"]
+    base, _ = _run_trace(cfg, params, prompts, mnts, eos)
+    got, sched = _run_trace(cfg, params, prompts, mnts, eos,
+                            allocator="paged", block_size=2, num_blocks=16,
+                            num_window_blocks=9, preempt="swap",
+                            swap_bytes_budget=1)
+    for i in range(len(prompts)):
+        assert got[i].tokens.tolist() == base[i].tokens.tolist()
+        assert got[i].reason == base[i].reason
+    c = sched.counters
+    assert c["swapped_out"] == 0
+    assert c["preempted"] >= 1 and c["recomputed_decode_steps"] >= 1
+    st = sched.stats()
+    assert st["swap_rejected"] >= 1                     # the store's count
+    assert st["swap_bytes_held"] == 0 and st["swap_bytes_budget"] == 1
 
 
 # --------------------------------------------------------------------------
