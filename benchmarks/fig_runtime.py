@@ -12,6 +12,12 @@ gate checks (>= 2x at batch >= 32).
 
 Both paths produce bit-identical results (asserted here), so the
 comparison is pure dispatch-efficiency.
+
+A final table reports the dispatcher's own observability (PR 6): the
+compile-cache hit/miss counts and the compile-vs-execute wall-time
+split, overall (``runtime.dispatch.*`` registry metrics) and per bucket
+(``runtime.dispatch.bucket.*``) — where the amortization argument is
+measured rather than asserted.
 """
 
 from __future__ import annotations
@@ -21,7 +27,9 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro.obs import REGISTRY
 from repro.runtime import KernelService, Request, ServiceConfig
+from repro.runtime.dispatch import BUCKET_STATS
 
 BATCHES = (1, 8, 32, 128)
 
@@ -68,15 +76,38 @@ def bench_kernel(rows, name: str, make_request, svc: KernelService):
             f"speedup_vs_per_request={us_s / us_b:.2f}"))
 
 
+def report_dispatch(rows):
+    """Dispatcher observability rows: overall compile/execute split plus
+    the per-bucket table (hits amortize the bucket's one compile)."""
+    snap = REGISTRY.snapshot()
+    hits = snap.get("runtime.dispatch.cache_hits", 0)
+    misses = snap.get("runtime.dispatch.cache_misses", 0)
+    rows.append(common.emit(
+        "fig_runtime.dispatch.cache",
+        snap.get("runtime.dispatch.execute_ms.p50", 0.0) * 1e3,
+        f"hits={hits},misses={misses},"
+        f"compile_ms={snap.get('runtime.dispatch.compile_ms.sum', 0.0)},"
+        f"execute_ms={snap.get('runtime.dispatch.execute_ms.sum', 0.0)}"))
+    for key, b in sorted(BUCKET_STATS.buckets.items()):
+        rows.append(common.emit(
+            f"fig_runtime.dispatch.bucket.{key}",
+            b["execute_ms"] * 1e3 / max(b["hits"], 1),
+            f"hits={b['hits']},misses={b['misses']},"
+            f"compile_ms={b['compile_ms']:.1f},"
+            f"execute_ms={b['execute_ms']:.1f}"))
+
+
 def run(rows=None):
     rows = rows if rows is not None else []
     print("# fig_runtime: batched KernelService vs per-request dispatch")
     svc = KernelService(ServiceConfig(dtw_tile=16, seq_bucket=64))
+    BUCKET_STATS.clear()        # per-run table, not process history
     bench_kernel(rows, "chain",
                  lambda r: _chain_request(r, int(r.integers(64, 256))), svc)
     bench_kernel(rows, "dtw",
                  lambda r: _dtw_request(r, int(r.integers(24, 64)),
                                         int(r.integers(24, 64))), svc)
+    report_dispatch(rows)
     return rows
 
 

@@ -9,14 +9,23 @@ serves it twice: one request at a time (per-request dispatch, the
 identical; the wall-clock ratio is the dispatch-layer win.
 
     PYTHONPATH=src python examples/runtime_service.py [--requests 64]
+
+Observability (PR 6): ``--trace out.json`` records every bucket
+dispatch as Chrome trace events on the dispatcher track (load in
+https://ui.perfetto.dev); ``--metrics`` dumps the metrics registry —
+``runtime.dispatch.*`` compile-cache hit/miss counts and
+compile-vs-execute wall time, per-bucket splits, pipeline fence times,
+and per-kernel request counts — as JSON on exit.
 """
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 from repro.data import genomics
+from repro.obs import REGISTRY, Tracer, get_tracer, set_tracer
 from repro.runtime import KernelService, Request, ServiceConfig
 
 
@@ -61,7 +70,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--ref", type=int, default=12_000)
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record bucket dispatches as a Chrome trace "
+                         "(open in https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the metrics registry as JSON on exit")
     args = ap.parse_args()
+
+    if args.trace:
+        set_tracer(Tracer(enabled=True))
 
     rng = np.random.default_rng(0)
     ref = genomics.make_reference(args.ref, seed=0)
@@ -101,6 +118,14 @@ def main():
         ok = sum(1 for m in mapped if m.pos >= 0)
         print(f"mapper           : {ok}/{len(mapped)} reads mapped "
               f"(batched seed->chain->align)")
+
+    if args.trace:
+        get_tracer().export_chrome(args.trace)
+        print(f"trace            : {args.trace} "
+              f"({len(get_tracer().events)} events; "
+              f"load in https://ui.perfetto.dev)")
+    if args.metrics:
+        print(json.dumps(REGISTRY.snapshot(), indent=1, sort_keys=True))
 
 
 if __name__ == "__main__":

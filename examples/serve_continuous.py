@@ -10,9 +10,15 @@ Repeat prompts at the end hit the memoizing request cache and finish
 without touching the pool.
 
     PYTHONPATH=src python examples/serve_continuous.py --requests 10
+
+Observability (PR 6): ``--trace out.json`` records the serve as Chrome
+trace events (load in https://ui.perfetto.dev — one track per slot plus
+scheduler/dispatcher tracks); ``--metrics`` dumps the flat metrics
+registry (``serve.*``, ``serve.engine.*``, paging) as JSON on exit.
 """
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -21,6 +27,7 @@ import jax
 
 from repro import configs
 from repro.models import transformer as T
+from repro.obs import REGISTRY, Tracer, set_tracer
 from repro.serve import Scheduler, SchedulerConfig
 
 
@@ -58,7 +65,15 @@ def main():
                     help="paged: book blocks for prompt+max_new at "
                          "admission (QoS: admitted requests are never "
                          "preempted)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record a Chrome trace of the serve to OUT.json "
+                         "(open in https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the metrics registry as JSON on exit")
     args = ap.parse_args()
+
+    if args.trace:
+        set_tracer(Tracer(enabled=True))
 
     cfg = configs.reduced_config(args.arch)
     params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
@@ -130,6 +145,14 @@ def main():
               f"{st.get('swap_bytes_out', 0)} bytes swapped out, "
               f"{st.get('swap_rejected', 0)} swap rejections), "
               f"mean occupancy {st.get('mean_occupancy', 0):.2f}")
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().export_chrome(args.trace)
+        print(f"[serve_continuous] trace -> {args.trace} "
+              f"({len(get_tracer().events)} events; "
+              f"load in https://ui.perfetto.dev)")
+    if args.metrics:
+        print(json.dumps(REGISTRY.snapshot(), indent=1, sort_keys=True))
     print("[serve_continuous] OK")
 
 

@@ -1,0 +1,31 @@
+"""repro.obs — unified observability: metrics registry + structured
+tracer + the schemas that pin both.
+
+  * metrics — Counter/Gauge/Histogram under stable dotted names
+              (``serve.decode_steps``, ``paging.blocks_free``,
+              ``runtime.dispatch.compile_ms``) plus weakref *providers*
+              so the legacy per-component ``stats()`` dicts stay the
+              source of truth and one ``REGISTRY.snapshot()`` sees the
+              whole stack.
+  * trace   — bounded ring buffer of typed span/instant events
+              (admit / prefill-chunk / decode-tick / preempt / swap /
+              retire / bucket-dispatch / jit-compile), a no-op when
+              disabled, exported to JSONL or Chrome trace-event JSON
+              (drop into https://ui.perfetto.dev: one track per slot
+              plus scheduler/dispatcher tracks).
+  * schema  — documented stats() keys/types and Chrome-trace structural
+              validation (what CI gates the smoke export on).
+"""
+
+from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
+                               Registry, get_registry)
+from repro.obs.schema import (PAGED_STATS, SCHEDULER_STATS, SLOTS_STATS,
+                              validate_chrome_trace, validate_stats)
+from repro.obs.trace import (Event, Tracer, get_tracer, instrumented_jit,
+                             set_tracer)
+
+__all__ = ["REGISTRY", "Counter", "Gauge", "Histogram", "Registry",
+           "get_registry", "PAGED_STATS", "SCHEDULER_STATS",
+           "SLOTS_STATS", "validate_chrome_trace", "validate_stats",
+           "Event", "Tracer", "get_tracer", "instrumented_jit",
+           "set_tracer"]

@@ -1,0 +1,132 @@
+"""Documented schemas for the observability surface.
+
+Two things are pinned here so they can't drift silently:
+
+  * ``SCHEDULER_STATS``, ``SLOTS_STATS``, ``PAGED_STATS`` — the
+    documented ``stats()`` keys and their types. Every key must be
+    present (counters are pre-declared at zero, not grown lazily) and
+    correctly typed for BOTH slot backings; ``tests/test_obs.py`` is the
+    regression test, the README table is the human copy.
+  * ``validate_chrome_trace`` — structural validation of the exported
+    Chrome trace-event JSON (the thing the CI smoke run gates on): known
+    phases, required fields, non-negative durations, and per-track spans
+    that either nest properly or don't overlap at all. A trace that
+    passes loads in Perfetto with one named track per slot plus
+    scheduler/dispatcher tracks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+# -- documented stats() keys -------------------------------------------------
+
+#: serve.Scheduler.stats() — scheduler-owned keys (slots keys merge in).
+#: Counts are int, ratios float; every key present from construction.
+SCHEDULER_STATS: Dict[str, type] = {
+    "submitted": int, "admitted": int, "completed": int, "steps": int,
+    "decode_steps": int, "chunk_steps": int, "generated_tokens": int,
+    "prefill_tokens": int, "live_decode_slots": int, "preempted": int,
+    "swapped_in": int, "swapped_out": int, "recomputed_decode_steps": int,
+    "pending": int, "live": int, "coalesced_waiting": int,
+    "cache_hits": int, "cache_misses": int,
+    "cache_hit_rate": float, "mean_occupancy": float,
+}
+
+#: serve.SlotManager.stats() — present for BOTH backings.
+SLOTS_STATS: Dict[str, type] = {
+    "num_slots": int, "live": int, "free": int, "cache_slots": int,
+    "position_capacity": int, "total_rows": int, "allocator": str,
+}
+
+#: additional SlotManager.stats() keys for the paged backing
+#: (per-window ``ring<L>_blocks_*`` keys are workload-dependent extras).
+PAGED_STATS: Dict[str, type] = {
+    "page_groups": int, "blocks_total": int, "blocks_used": int,
+    "blocks_free": int, "block_size": int, "block_utilization": float,
+    "swapped_held": int, "swap_bytes_held": int, "swap_bytes_budget": int,
+    "swap_rejected": int, "swap_bytes_out": int, "swap_bytes_in": int,
+}
+
+
+def validate_stats(stats: Dict[str, Any],
+                   schema: Dict[str, type]) -> List[str]:
+    """Problems with ``stats`` against ``schema`` (empty == valid).
+    ints must be real ints (bool excluded); floats accept ints too."""
+    problems = []
+    for key, typ in schema.items():
+        if key not in stats:
+            problems.append(f"missing key {key!r}")
+            continue
+        v = stats[key]
+        if isinstance(v, bool):
+            problems.append(f"{key!r} is bool, wanted {typ.__name__}")
+        elif typ is float:
+            if not isinstance(v, (int, float)):
+                problems.append(f"{key!r} is {type(v).__name__}, "
+                                f"wanted float")
+        elif not isinstance(v, typ):
+            problems.append(f"{key!r} is {type(v).__name__}, "
+                            f"wanted {typ.__name__}")
+    return problems
+
+
+# -- chrome trace validation -------------------------------------------------
+
+_PHASES = {"X", "i", "M"}
+
+
+def validate_chrome_trace(data: Any) -> List[str]:
+    """Structural problems with a Chrome trace-event JSON object (empty
+    list == valid). Checks: top-level shape, per-event required fields,
+    non-negative ts/dur, and per-(pid, tid) 'X' spans that either nest
+    properly (a span entirely inside another — how jit-compile sits
+    inside bucket-dispatch) or are disjoint; partial overlap on one
+    track is corruption."""
+    problems: List[str] = []
+    if not isinstance(data, dict) or "traceEvents" not in data:
+        return ["top level must be a dict with 'traceEvents'"]
+    evs = data["traceEvents"]
+    if not isinstance(evs, list):
+        return ["'traceEvents' must be a list"]
+    spans: Dict[Any, List] = {}
+    for i, e in enumerate(evs):
+        if not isinstance(e, dict):
+            problems.append(f"event {i}: not a dict")
+            continue
+        ph = e.get("ph")
+        if ph not in _PHASES:
+            problems.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if "name" not in e or "pid" not in e or "tid" not in e:
+            problems.append(f"event {i}: missing name/pid/tid")
+            continue
+        if ph == "M":
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({e['name']}): bad ts {ts!r}")
+            continue
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i} ({e['name']}): bad dur "
+                                f"{dur!r}")
+                continue
+            spans.setdefault((e["pid"], e["tid"]), []).append(
+                (ts, ts + dur, e["name"]))
+    eps = 1e-3          # µs slop for float round-trips
+    for key, ss in spans.items():
+        ss.sort(key=lambda s: (s[0], -s[1]))
+        stack: List = []            # open span end-times
+        for t0, t1, name in ss:
+            while stack and t0 >= stack[-1][0] - eps:
+                stack.pop()
+            if stack and t1 > stack[-1][0] + eps:
+                problems.append(
+                    f"track {key}: span {name!r} [{t0:.1f}, {t1:.1f}] "
+                    f"partially overlaps {stack[-1][1]!r} "
+                    f"(ends {stack[-1][0]:.1f})")
+                continue
+            stack.append((t1, name))
+    return problems

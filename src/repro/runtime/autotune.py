@@ -64,10 +64,17 @@ class Autotuner:
         return self.get(key, default)
 
     def put(self, key: str, value, us: Optional[float] = None,
-            failed: Optional[Dict[str, str]] = None):
+            failed: Optional[Dict[str, str]] = None,
+            candidates: Optional[Dict[str, dict]] = None):
         entry = {"value": value, "us": us, "when": time.time()}
         if failed:
             entry["failed"] = failed
+        if candidates:
+            # per-candidate measurement records: steady-state us plus the
+            # warm (first-call) us whose excess over steady is the
+            # compile cost (runtime.dispatch's compile/execute split at
+            # sweep time)
+            entry["candidates"] = candidates
         self._cache[key] = entry
         self.save()
 
@@ -126,10 +133,13 @@ class Autotuner:
             candidates = {v: v for v in candidates}
         best_v, best_us = None, float("inf")
         failed: Dict[str, str] = {}
+        records: Dict[str, dict] = {}
         for label, cand in candidates.items():
             try:
                 thunk = make_thunk(cand)
+                t0 = time.perf_counter()
                 jax.block_until_ready(thunk())      # warm the compile cache
+                warm_us = (time.perf_counter() - t0) * 1e6
                 ts = []
                 for _ in range(repeats):
                     t0 = time.perf_counter()
@@ -139,12 +149,20 @@ class Autotuner:
                 failed[str(label)] = f"{type(e).__name__}: {e}"[:200]
                 continue
             us = sorted(ts)[len(ts) // 2] * 1e6
+            # warm - steady ~= one-time compile cost: choosing a candidate
+            # by steady-state speed alone can pick one whose compile never
+            # amortizes at low traffic, so the record keeps both
+            records[str(label)] = {"us": round(us, 1),
+                                   "warm_us": round(warm_us, 1),
+                                   "compile_us": round(
+                                       max(warm_us - us, 0.0), 1)}
             if us < best_us:
                 best_v, best_us = cand, us
         if best_us == float("inf"):
             raise RuntimeError(
                 f"autotune {key!r}: every candidate failed: {failed}")
-        self.put(key, best_v, us=best_us, failed=failed or None)
+        self.put(key, best_v, us=best_us, failed=failed or None,
+                 candidates=records)
         return best_v
 
 

@@ -14,17 +14,30 @@ Two entry points:
     compiled once per (fn, in_axes, shapes) — the per-bucket compile cache.
   * ``run_one(fn, leaves)`` — single-request dispatch with the same cache
     discipline (used by ReadMapper's per-read path).
+
+Every dispatch is timed and classified (did this call grow the compile
+cache?) into the metrics registry: ``runtime.dispatch.cache_hits`` /
+``cache_misses`` counters and ``compile_ms`` / ``execute_ms`` histograms
+process-wide, plus a per-bucket split under
+``runtime.dispatch.bucket.<fn>[b<batch>].*`` — the numbers the Autotuner
+stamps into its candidate records and fig_runtime reports. With a Tracer
+enabled each ``run`` also records a ``bucket-dispatch`` span on the
+dispatcher track.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 try:                                    # jax >= 0.6 re-exports at top level
     _shard_map = jax.shard_map
@@ -47,7 +60,9 @@ def make_worker_mesh(num_workers: Optional[int] = None,
 
 @functools.lru_cache(maxsize=None)
 def _jit_single(fn):
-    return jax.jit(fn)
+    return obs_trace.instrumented_jit(
+        jax.jit(fn), name=getattr(fn, "__name__", "fn"),
+        prefix="runtime.dispatch")
 
 
 @functools.lru_cache(maxsize=None)
@@ -58,6 +73,42 @@ def _jit_batched(fn, in_axes: Tuple, mesh: Optional[Mesh], axis):
         vfn = _shard_map(vfn, mesh=mesh, in_specs=specs,
                          out_specs=P(axis))
     return jax.jit(vfn)
+
+
+class _BucketStats:
+    """Per-bucket dispatch accounting: ``<fn>[b<batch>]`` -> hit/miss
+    counts and compile/execute wall-ms totals. Registry provider
+    ``runtime.dispatch.bucket`` — what the Autotuner's candidate records
+    and fig_runtime's dispatch table read."""
+
+    def __init__(self):
+        self.buckets: Dict[str, Dict[str, Any]] = {}
+
+    def record(self, key: str, compiled: bool, ms: float):
+        b = self.buckets.setdefault(
+            key, {"hits": 0, "misses": 0,
+                  "compile_ms": 0.0, "execute_ms": 0.0})
+        if compiled:
+            b["misses"] += 1
+            b["compile_ms"] += ms
+        else:
+            b["hits"] += 1
+            b["execute_ms"] += ms
+
+    def metrics(self) -> Dict[str, Any]:
+        return {f"{key}.{k}": (round(v, 3) if isinstance(v, float) else v)
+                for key, b in sorted(self.buckets.items())
+                for k, v in b.items()}
+
+    def clear(self):
+        self.buckets.clear()
+
+
+#: process-wide per-bucket dispatch stats (cleared by benchmarks that
+#: want a per-run table)
+BUCKET_STATS = _BucketStats()
+obs_metrics.REGISTRY.register_provider("runtime.dispatch.bucket",
+                                       BUCKET_STATS)
 
 
 class Dispatcher:
@@ -102,7 +153,30 @@ class Dispatcher:
                                 np.repeat(np.asarray(l)[-1:], pad, axis=0)])
                 if ax == 0 else l
                 for l, ax in zip(leaves, axes))
-        out = _jit_batched(fn, axes, self.mesh, self.axis)(*leaves)
+        jfn = _jit_batched(fn, axes, self.mesh, self.axis)
+        # qualname keeps factory closures apart ('_sort_fn.run' vs
+        # '_scan_fn.run' — plain __name__ is 'run' for both)
+        name = getattr(fn, "__qualname__",
+                       getattr(fn, "__name__", "fn")).replace(
+                           ".<locals>", "")
+        cache_size = getattr(jfn, "_cache_size", None)
+        n0 = cache_size() if cache_size is not None else -1
+        t0 = time.perf_counter()
+        out = jfn(*leaves)
+        t1 = time.perf_counter()
+        compiled = cache_size is not None and cache_size() > n0
+        reg = obs_metrics.REGISTRY
+        ms = (t1 - t0) * 1e3
+        if compiled:
+            reg.counter("runtime.dispatch.cache_misses").inc()
+            reg.histogram("runtime.dispatch.compile_ms").observe(ms)
+        else:
+            reg.counter("runtime.dispatch.cache_hits").inc()
+            reg.histogram("runtime.dispatch.execute_ms").observe(ms)
+        BUCKET_STATS.record(f"{name}[b{bsz + pad}]", compiled, ms)
+        obs_trace.get_tracer().complete(
+            "bucket-dispatch", "dispatcher", t0, t1, fn=name,
+            batch=bsz + pad, workers=w, compiled=compiled)
         if pad:
             out = jax.tree_util.tree_map(lambda x: x[:bsz], out)
         return out

@@ -18,10 +18,13 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from collections import deque
 from typing import Callable, Iterable, Iterator, TypeVar
 
 import jax
+
+from repro.obs import metrics as obs_metrics
 
 T = TypeVar("T")
 R = TypeVar("R")
@@ -83,10 +86,20 @@ def run_pipelined(items: Iterable[T], launch: Callable[[T], R],
     just before the result is handed to the caller — by which time the
     next batches are already padded (prefetch thread) and launched.
     """
+    # fence wall-time histogram: how long results-in-flight keep the host
+    # waiting — near-zero fences mean the overlap is doing its job
+    h_fence = obs_metrics.REGISTRY.histogram("runtime.pipeline.fence_ms")
+
+    def fence(x):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(x)
+        h_fence.observe((time.perf_counter() - t0) * 1e3)
+        return out
+
     inflight: deque = deque()
     for item in prefetched(items, buffer=buffer):
         inflight.append(launch(item))
         while len(inflight) > max(depth, 1):
-            yield jax.block_until_ready(inflight.popleft())
+            yield fence(inflight.popleft())
     while inflight:
-        yield jax.block_until_ready(inflight.popleft())
+        yield fence(inflight.popleft())

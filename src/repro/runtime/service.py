@@ -25,6 +25,7 @@ the true data, which none of these left-to-right recurrences can see.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -43,6 +44,7 @@ from repro.core import sort as rsort
 from repro.core import wavefront
 from repro.core.scan1d import affine_scan
 from repro.core.semiring import SEMIRINGS, finite_zero
+from repro.obs import metrics as obs_metrics
 from repro.runtime import bucketing
 from repro.runtime.autotune import Autotuner
 from repro.runtime.dispatch import Dispatcher
@@ -589,6 +591,11 @@ class KernelService:
         self._index = None
         self._adapters: Dict[str, KernelAdapter] = {
             a.name: a(self) for a in _ADAPTERS}
+        # per-kernel traffic: requests routed / bulk submits seen
+        self.request_counts = collections.Counter(
+            dict.fromkeys(self.kernels, 0))
+        self.submit_count = 0
+        obs_metrics.REGISTRY.register_provider("runtime.service", self)
 
     @property
     def index(self):
@@ -605,11 +612,21 @@ class KernelService:
     def kernels(self) -> Tuple[str, ...]:
         return tuple(sorted(self._adapters))
 
+    def metrics(self) -> Dict[str, Any]:
+        """Registry 'runtime.service' provider: per-kernel request
+        traffic (``requests.<kernel>``) + bulk submit count."""
+        out: Dict[str, Any] = {"submits": self.submit_count}
+        out.update({f"requests.{k}": int(v)
+                    for k, v in sorted(self.request_counts.items())})
+        return out
+
     def stats(self) -> Dict[str, Any]:
-        """Service-level introspection: registered kernels plus, when an
-        LM scheduler is attached, its pool/occupancy counters (incl. the
-        paged allocator's block utilization — serve.SlotManager.stats)."""
-        out: Dict[str, Any] = {"kernels": list(self.kernels)}
+        """Service-level introspection: registered kernels + per-kernel
+        traffic counters plus, when an LM scheduler is attached, its
+        pool/occupancy counters (incl. the paged allocator's block
+        utilization — serve.SlotManager.stats)."""
+        out: Dict[str, Any] = {"kernels": list(self.kernels),
+                               **self.metrics()}
         if self.lm is not None:
             out["lm"] = self.lm.stats()
         return out
@@ -623,7 +640,9 @@ class KernelService:
                 raise KeyError(f"unknown kernel {req.kernel!r}; "
                                f"have {self.kernels}")
             by_kernel.setdefault(req.kernel, []).append(i)
+        self.submit_count += 1
         for kernel, idxs in by_kernel.items():
+            self.request_counts[kernel] += len(idxs)
             got = self._adapters[kernel].run(
                 [requests[i].payload for i in idxs])
             for i, res in zip(idxs, got):

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.obs import trace as obs_trace
 from repro.sharding import named_sharding
 
 
@@ -127,12 +128,16 @@ def make_chunk_step(cfg: ModelConfig):
 
 @functools.lru_cache(maxsize=None)
 def jit_chunk_step(cfg: ModelConfig):
-    return jax.jit(make_chunk_step(cfg), donate_argnums=(1,))
+    return obs_trace.instrumented_jit(
+        jax.jit(make_chunk_step(cfg), donate_argnums=(1,)),
+        name=f"chunk_step[{cfg.name}]", prefix="serve.engine")
 
 
 @functools.lru_cache(maxsize=None)
 def jit_slot_decode_step(cfg: ModelConfig):
-    return jax.jit(make_slot_decode_step(cfg), donate_argnums=(1,))
+    return obs_trace.instrumented_jit(
+        jax.jit(make_slot_decode_step(cfg), donate_argnums=(1,)),
+        name=f"slot_decode_step[{cfg.name}]", prefix="serve.engine")
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +205,9 @@ def jit_paged_decode_step(cfg: ModelConfig):
         dense, paged = _split_paged(caches, paged, rows)
         return nxt, logits, dense, paged
 
-    return jax.jit(run, donate_argnums=(1, 2), static_argnums=(8,))
+    return obs_trace.instrumented_jit(
+        jax.jit(run, donate_argnums=(1, 2), static_argnums=(8,)),
+        name=f"paged_decode_step[{cfg.name}]", prefix="serve.engine")
 
 
 @functools.lru_cache(maxsize=None)
@@ -224,7 +231,9 @@ def jit_paged_chunk_step(cfg: ModelConfig):
             lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), dense, sub)
         return dense, paged
 
-    return jax.jit(run, donate_argnums=(1, 2), static_argnums=(7,))
+    return obs_trace.instrumented_jit(
+        jax.jit(run, donate_argnums=(1, 2), static_argnums=(7,)),
+        name=f"paged_chunk_step[{cfg.name}]", prefix="serve.engine")
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

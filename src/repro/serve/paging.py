@@ -259,10 +259,12 @@ class PageTable:
                 self.pool.allocated).tolist()):
             raise RuntimeError("table / pool free list disagree")
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, Any]:
+        """Counts are int, utilization float (obs.schema pins this)."""
         used = self.pool.used_count
         return {"blocks_total": self.pool.num_blocks,
                 "blocks_used": used,
+                "blocks_free": self.pool.num_blocks - used,
                 "block_size": self.block_size,
                 "block_utilization": used / self.pool.num_blocks}
 

@@ -52,6 +52,17 @@ What preemption discards is the ``preempt`` policy:
 ``admission='reserved'`` books blocks_for(prompt + max_new) at admit
 instead of blocks_for(prompt) — growth can then never fail, so admitted
 (QoS) traffic is never preempted, at the cost of admitted concurrency.
+
+Observability (repro.obs): the scheduler registers itself as the
+``serve`` provider of the metrics registry (all ``stats()`` keys,
+pre-declared so they never appear lazily), stamps every request's
+per-phase timeline (queue-wait, prefill, first token, swapped-out time,
+recompute waste — surfaced as ``Completion.queue_wait`` / ``ttft`` /
+``decode_s`` / ``itl``), and, when a Tracer is enabled, records
+``admit`` / ``prefill`` / ``decode`` / ``preempt`` / ``swap-out`` /
+``swap-in`` / ``retire`` events per slot track plus ``decode-tick`` /
+``prefill-chunk`` spans on the scheduler track — a serve run exports
+straight to Perfetto (obs.trace.Tracer.export_chrome).
 """
 
 from __future__ import annotations
@@ -67,6 +78,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime import bucketing
 from repro.serve.slots import SlotManager
 
@@ -136,6 +149,19 @@ class _Slot:
 
 
 @dataclasses.dataclass
+class _Timeline:
+    """Per-request phase stamps (perf_counter), kept while the request
+    is in flight and folded into its Completion at finish."""
+    submit_t: float
+    admit_t: Optional[float] = None     # first slot claim (None = cached)
+    first_token_t: Optional[float] = None
+    swap_out_t: Optional[float] = None  # open swap interval, if any
+    swapped_s: float = 0.0              # total time parked in the SwapStore
+    recomputed_steps: int = 0           # decode ticks redone after preempt
+    preemptions: int = 0
+
+
+@dataclasses.dataclass
 class Completion:
     rid: int
     tokens: np.ndarray          # int32 (g,)
@@ -143,12 +169,50 @@ class Completion:
     prompt_len: int
     submit_t: float             # time.perf_counter() stamp at submit
     finish_t: float             # time.perf_counter() stamp at finish
+    # per-phase stamps (defaults match cache-served completions, which
+    # never touch the pool)
+    admit_t: Optional[float] = None     # first slot claim
+    first_token_t: Optional[float] = None
+    swapped_s: float = 0.0              # time parked in the SwapStore
+    recomputed_steps: int = 0           # decode ticks redone after preempt
+    preemptions: int = 0
 
     @property
     def latency(self) -> float:
         # perf_counter deltas are monotonic: a wall-clock (NTP) step can
         # never make a latency negative and skew fig_serve's p50/p95
         return self.finish_t - self.submit_t
+
+    @property
+    def queue_wait(self) -> float:
+        """Submit -> first admission. 0 for cache-served requests."""
+        return self.admit_t - self.submit_t if self.admit_t is not None \
+            else 0.0
+
+    @property
+    def ttft(self) -> float:
+        """Submit -> first generated token (== latency when the request
+        was served from cache or produced its one token at finish)."""
+        return self.first_token_t - self.submit_t \
+            if self.first_token_t is not None else self.latency
+
+    @property
+    def prefill_s(self) -> float:
+        """Admission -> first token: prompt consumption time."""
+        if self.admit_t is None or self.first_token_t is None:
+            return 0.0
+        return self.first_token_t - self.admit_t
+
+    @property
+    def decode_s(self) -> float:
+        """First token -> finish: pure generation time."""
+        return self.finish_t - self.first_token_t \
+            if self.first_token_t is not None else 0.0
+
+    @property
+    def itl(self) -> float:
+        """Mean inter-token latency over the decode phase."""
+        return self.decode_s / max(len(self.tokens) - 1, 1)
 
 
 class RequestCache:
@@ -198,11 +262,22 @@ class RequestCache:
         return self.hits / n if n else 0.0
 
 
+#: scheduler-owned counters, pre-declared at zero so stats() keys are
+#: stable from construction (obs.schema.SCHEDULER_STATS pins them)
+_COUNTER_KEYS = (
+    "submitted", "admitted", "completed", "steps", "decode_steps",
+    "chunk_steps", "generated_tokens", "prefill_tokens",
+    "live_decode_slots", "preempted", "swapped_in", "swapped_out",
+    "recomputed_decode_steps",
+)
+
+
 class Scheduler:
     """submit(prompts) / step() / drain() continuous-batching engine."""
 
     def __init__(self, cfg: ModelConfig, params,
-                 sched: SchedulerConfig = SchedulerConfig()):
+                 sched: SchedulerConfig = SchedulerConfig(),
+                 tracer: Optional[obs_trace.Tracer] = None):
         self.cfg = cfg
         self.params = params
         self.sched = sched
@@ -223,13 +298,34 @@ class Scheduler:
         self._by_slot: Dict[int, _Slot] = {}
         self._inflight: Dict[Tuple, List[int]] = {}
         self._fresh: List[int] = []     # finished, not yet handed out
-        self._submit_t: Dict[int, float] = {}
+        self._tl: Dict[int, _Timeline] = {}
         self.results: Dict[int, Completion] = {}
         self.request_cache = RequestCache(sched.request_cache_size)
         self._key = jax.random.PRNGKey(sched.seed)
         self._next_rid = 0
         self._next_seq = 0          # admission sequence (preempt youngest)
-        self.counters = collections.Counter()
+        self.counters = collections.Counter(dict.fromkeys(_COUNTER_KEYS, 0))
+        self._tracer = tracer
+        # slot -> (phase name, t0, rid): the open per-slot phase span,
+        # closed at first-token / preempt / retire (tracer enabled only)
+        self._open_phase: Dict[int, Tuple[str, float, int]] = {}
+        obs_metrics.REGISTRY.register_provider("serve", self)
+
+    @property
+    def tracer(self) -> obs_trace.Tracer:
+        return self._tracer if self._tracer is not None \
+            else obs_trace.get_tracer()
+
+    def _phase_begin(self, slot: int, name: str, rid: int):
+        if self.tracer.enabled:
+            self._open_phase[slot] = (name, time.perf_counter(), rid)
+
+    def _phase_end(self, slot: int):
+        open_ = self._open_phase.pop(slot, None)
+        if open_ is not None:
+            name, t0, rid = open_
+            self.tracer.complete(name, f"slot{slot}", t0,
+                                 time.perf_counter(), rid=rid)
 
     # -- submission ----------------------------------------------------------
 
@@ -262,8 +358,9 @@ class Scheduler:
                     raise ValueError(why)
             rid = self._next_rid
             self._next_rid += 1
-            self._submit_t[rid] = time.perf_counter()
+            self._tl[rid] = _Timeline(submit_t=time.perf_counter())
             self.counters["submitted"] += 1
+            self.tracer.instant("submit", "scheduler", rid=rid)
             if self.sched.cache_requests and temp <= 0.0:
                 key = RequestCache.key(p, mnt, self.sched.eos_token)
                 if key in self._inflight:
@@ -324,17 +421,25 @@ class Scheduler:
     def live(self) -> int:
         return len(self._by_slot)
 
+    def metrics(self) -> dict:
+        """Scheduler-owned metrics (registry 'serve' provider): every
+        counter (pre-declared), queue/pool levels and cache rates.
+        ``stats()`` = this + the slot pool's keys."""
+        decode_steps = self.counters["decode_steps"]
+        return {**{k: int(v) for k, v in self.counters.items()},
+                "pending": len(self._queue),
+                "live": len(self._by_slot),
+                "coalesced_waiting": sum(
+                    len(v) for v in self._inflight.values()),
+                "cache_hits": self.request_cache.hits,
+                "cache_misses": self.request_cache.misses,
+                "cache_hit_rate": round(self.request_cache.hit_rate, 4),
+                "mean_occupancy": round(
+                    self.counters["live_decode_slots"] / decode_steps, 4)
+                if decode_steps else 0.0}
+
     def stats(self) -> dict:
-        out = {**{k: int(v) for k, v in self.counters.items()},
-               "cache_hits": self.request_cache.hits,
-               "cache_misses": self.request_cache.misses,
-               "cache_hit_rate": round(self.request_cache.hit_rate, 4),
-               **self.slots.stats()}
-        if self.counters["decode_steps"]:
-            out["mean_occupancy"] = round(
-                self.counters["live_decode_slots"]
-                / self.counters["decode_steps"], 4)
-        return out
+        return {**self.metrics(), **self.slots.stats()}
 
     # -- internals -----------------------------------------------------------
 
@@ -346,6 +451,7 @@ class Scheduler:
         # preserves arrival order and starves no request.
         while self._queue:
             st = self._queue[0]
+            swapped_in = False
             if self.slots.is_swapped(st.rid):
                 # resume a swap-preempted request: remap + upload its
                 # saved blocks; it continues at st.ctx with st.out intact
@@ -354,6 +460,7 @@ class Scheduler:
                     return
                 slot, _ = got
                 self.counters["swapped_in"] += 1
+                swapped_in = True
             else:
                 # reserved admission books the whole generation budget up
                 # front: growth can never OOB, so QoS traffic is never
@@ -369,6 +476,20 @@ class Scheduler:
             self._next_seq += 1
             self._by_slot[slot] = st
             self.counters["admitted"] += 1
+            now = time.perf_counter()
+            tl = self._tl[st.rid]
+            if tl.admit_t is None:
+                tl.admit_t = now        # first admission only (queue-wait)
+            if swapped_in:
+                if tl.swap_out_t is not None:
+                    tl.swapped_s += now - tl.swap_out_t
+                    tl.swap_out_t = None
+                self.tracer.instant("swap-in", f"slot{slot}", rid=st.rid)
+            else:
+                self.tracer.instant("admit", f"slot{slot}", rid=st.rid,
+                                    prompt_len=len(st.prompt))
+            self._phase_begin(slot, "prefill" if st.ctx < len(st.prompt)
+                              else "decode", st.rid)
 
     def _preempt(self, slot: int):
         """Evict a live slot to free its blocks (paged growth failure);
@@ -382,6 +503,8 @@ class Scheduler:
         case this victim degrades to a recompute restart (the store
         counts the rejection; stats()['swap_rejected'])."""
         st = self._by_slot.pop(slot)
+        self._phase_end(slot)
+        tl = self._tl[st.rid]
         swapped = False
         if self.sched.preempt == "swap":
             # bytes moved AND budget rejections are tracked once, by the
@@ -391,18 +514,25 @@ class Scheduler:
             swapped = self.slots.swap_out(slot) is not None
             if swapped:
                 self.counters["swapped_out"] += 1
+                tl.swap_out_t = time.perf_counter()
+                self.tracer.instant("swap-out", f"slot{slot}", rid=st.rid)
         if not swapped:
             self.slots.release(slot)
             # decode ticks this victim consumed (ctx minus chunk-step
             # tokens) that the restart will pay for again
-            self.counters["recomputed_decode_steps"] += \
-                st.ctx - st.chunk_tokens
+            wasted = st.ctx - st.chunk_tokens
+            self.counters["recomputed_decode_steps"] += wasted
+            tl.recomputed_steps += wasted
+            tl.first_token_t = None     # the restart re-earns its TTFT
+            self.tracer.instant("preempt", f"slot{slot}", rid=st.rid,
+                                wasted_steps=wasted)
             st.ctx = 0
             st.chunk_tokens = 0
             st.out = []
         st.admit_seq = -1
         self._queue.appendleft(st)
         self.counters["preempted"] += 1
+        tl.preemptions += 1
 
     def _ensure_or_preempt(self, slot: int, upto_pos: int) -> bool:
         """Grow ``slot``'s storage to cover ``upto_pos``; on block
@@ -449,7 +579,9 @@ class Scheduler:
                 for s in idx])
             pos = np.asarray([self._by_slot[s].ctx for s in idx], np.int32)
             # pad rows duplicate row 0 bit-for-bit -> scatter deterministic
-            self.slots.run_chunk(self.params, idx, toks, pos)
+            with self.tracer.span("prefill-chunk", "scheduler",
+                                  slots=m, chunk=ch):
+                self.slots.run_chunk(self.params, idx, toks, pos)
             for s in need:
                 self._by_slot[s].ctx += ch
                 self._by_slot[s].chunk_tokens += ch
@@ -479,10 +611,12 @@ class Scheduler:
             pos[s] = st.ctx
             temps[s] = st.temperature
         self._key, ks = jax.random.split(self._key)
-        nxt = self.slots.run_decode(
-            self.params, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(temps), ks)
-        nxt = np.asarray(nxt)
+        with self.tracer.span("decode-tick", "scheduler",
+                              live=len(self._by_slot)):
+            nxt = self.slots.run_decode(
+                self.params, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(temps), ks)
+            nxt = np.asarray(nxt)
         self.counters["decode_steps"] += 1
         # admitted-concurrency numerator: mean live slots per decode tick
         # = live_decode_slots / decode_steps (fig_serve's occupancy gate)
@@ -496,6 +630,13 @@ class Scheduler:
             tok = int(nxt[s])
             st.out.append(tok)
             self.counters["generated_tokens"] += 1
+            if len(st.out) == 1:
+                tl = self._tl[st.rid]
+                if tl.first_token_t is None:
+                    tl.first_token_t = time.perf_counter()
+                # the prefill phase ends at the first sampled token
+                self._phase_end(s)
+                self._phase_begin(s, "decode", st.rid)
             eos = (self.sched.eos_token is not None
                    and tok == self.sched.eos_token)
             if eos or len(st.out) >= st.max_new_tokens:
@@ -503,6 +644,9 @@ class Scheduler:
 
     def _retire(self, slot: int, reason: str):
         st = self._by_slot.pop(slot)
+        self._phase_end(slot)
+        self.tracer.instant("retire", f"slot{slot}", rid=st.rid,
+                            reason=reason)
         self.slots.release(slot)
         toks = np.asarray(st.out, np.int32)
         if self.sched.cache_requests and st.temperature <= 0.0:
@@ -517,6 +661,10 @@ class Scheduler:
                 reason: str):
         self.counters["completed"] += 1
         self._fresh.append(rid)
+        tl = self._tl.pop(rid)
         self.results[rid] = Completion(
             rid=rid, tokens=tokens, reason=reason, prompt_len=prompt_len,
-            submit_t=self._submit_t.pop(rid), finish_t=time.perf_counter())
+            submit_t=tl.submit_t, finish_t=time.perf_counter(),
+            admit_t=tl.admit_t, first_token_t=tl.first_token_t,
+            swapped_s=tl.swapped_s, recomputed_steps=tl.recomputed_steps,
+            preemptions=tl.preemptions)

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention, transformer as T
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime import bucketing
 from repro.serve import engine
 from repro.serve.paging import BlockPool, PageTable, SwapEntry, SwapStore
@@ -85,7 +87,8 @@ def _pooled_chunk_step(cfg: ModelConfig):
         return jax.tree_util.tree_map(
             lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), caches, sub)
 
-    return run
+    return obs_trace.instrumented_jit(
+        run, name=f"pooled_chunk_step[{cfg.name}]", prefix="serve.engine")
 
 
 def _pad_rows(arr: np.ndarray, pad: int) -> np.ndarray:
@@ -501,6 +504,7 @@ class _PagedBacking:
                "page_groups": len(self.groups),
                "blocks_total": total,
                "blocks_used": used,
+               "blocks_free": total - used,
                "block_size": self.block_size,
                "block_utilization": used / max(total, 1),
                **self.swaps.stats()}
@@ -509,6 +513,10 @@ class _PagedBacking:
                 out[f"ring{vl}_blocks_total"] = g.pool.num_blocks
                 out[f"ring{vl}_blocks_used"] = g.pool.used_count
         return out
+
+    def metrics(self) -> dict:
+        """Registry 'paging' provider: the numeric stats() keys."""
+        return {k: v for k, v in self.stats().items() if k != "allocator"}
 
 
 # ---------------------------------------------------------------------------
@@ -553,6 +561,9 @@ class SlotManager:
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self.owner: List[Optional[int]] = [None] * num_slots
         self.valid = np.zeros(num_slots, bool)
+        obs_metrics.REGISTRY.register_provider("serve.slots", self)
+        if paged:
+            obs_metrics.REGISTRY.register_provider("paging", self.backing)
 
     @property
     def paged(self) -> bool:
@@ -705,10 +716,15 @@ class SlotManager:
         one jitted program per tick.)"""
         return self.backing.run_decode(params, tokens, pos, temps, key)
 
-    def stats(self) -> dict:
+    def metrics(self) -> dict:
+        """Registry 'serve.slots' provider: pool-facade levels (the
+        backing's keys go out under 'paging' when paged)."""
         return {"num_slots": self.num_slots,
                 "live": int(self.valid.sum()),
                 "free": self.free_count,
                 "cache_slots": self.cache_slots,
                 "position_capacity": self.position_capacity,
-                **self.backing.stats()}
+                "total_rows": self.total_rows}
+
+    def stats(self) -> dict:
+        return {**self.metrics(), **self.backing.stats()}

@@ -1,0 +1,318 @@
+"""Observability layer (PR 6): metrics registry semantics, tracer
+event/ring behavior, Chrome trace-event schema validation, scheduler
+span monotonicity, stats-key regression across both slot backings, the
+Completion per-phase timeline, and the hypothesis counter-reconciliation
+invariant ``submitted == completed + live + pending + coalesced_waiting``
+across random submit/step/drain interleavings."""
+
+import gc
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.models import transformer as T
+from repro.obs import (PAGED_STATS, REGISTRY, SCHEDULER_STATS, SLOTS_STATS,
+                       Registry, Tracer, get_tracer, instrumented_jit,
+                       set_tracer, validate_chrome_trace, validate_stats)
+from repro.serve import Scheduler, SchedulerConfig
+
+
+@pytest.fixture(scope="module")
+def rwkv():
+    cfg = configs.reduced_config("rwkv6-1.6b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = configs.reduced_config("gemma-2b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(rng, vocab, lens):
+    return [rng.integers(0, vocab, l).astype(np.int32) for l in lens]
+
+
+def _serve(cfg, params, prompts, max_new=6, tracer=None, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", max(len(p) for p in prompts) + max_new + 2)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("cache_requests", False)
+    sched = Scheduler(cfg, params, SchedulerConfig(**kw), tracer=tracer)
+    for p in prompts:
+        sched.submit([p], max_new_tokens=max_new)
+    sched.drain()
+    return sched
+
+
+# --------------------------------------------------------------------------
+# metrics registry
+# --------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram():
+    reg = Registry()
+    reg.counter("a.hits").inc()
+    reg.counter("a.hits").inc(4)            # get-or-create: same counter
+    reg.gauge("a.depth").set(7)
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        reg.histogram("a.ms").observe(v)
+    snap = reg.snapshot()
+    assert snap["a.hits"] == 5
+    assert snap["a.depth"] == 7
+    assert snap["a.ms.count"] == 4
+    assert snap["a.ms.sum"] == pytest.approx(10.0)
+    assert snap["a.ms.max"] == pytest.approx(4.0)
+    assert snap["a.ms.p50"] == pytest.approx(2.0, abs=1.0)
+
+
+def test_registry_provider_prefix_and_weakref():
+    reg = Registry()
+
+    class Prov:
+        def __init__(self, n):
+            self.n = n
+
+        def metrics(self):
+            return {"n": self.n}
+
+    p = Prov(3)
+    reg.register_provider("x", p)
+    assert reg.snapshot()["x.n"] == 3
+    # latest registration wins for a prefix (schedulers re-register per
+    # construction in benchmarks; dead ones must not shadow the live one)
+    q = Prov(9)
+    reg.register_provider("x", q)
+    assert reg.snapshot()["x.n"] == 9
+    # weakref: a dropped provider vanishes from the snapshot (no leak,
+    # no stale numbers)
+    del q
+    gc.collect()
+    assert "x.n" not in reg.snapshot()
+    reg.register_provider("x", p)
+    assert reg.snapshot()["x.n"] == 3
+
+
+def test_registry_dump_json(tmp_path):
+    reg = Registry()
+    reg.counter("k").inc(2)
+    out = tmp_path / "m.json"
+    reg.dump_json(str(out))
+    assert json.loads(out.read_text())["k"] == 2
+
+
+# --------------------------------------------------------------------------
+# tracer
+# --------------------------------------------------------------------------
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("s", "scheduler", k=1):
+        tr.instant("i", "scheduler")
+    tr.complete("c", "dispatcher", 0.0, 1.0)
+    assert len(tr.events) == 0
+    assert tr.chrome_trace()["traceEvents"] == []
+    # module default is disabled: event sites on the tier-1 path are a
+    # single attribute check
+    assert not get_tracer().enabled
+
+
+def test_tracer_ring_bounded_and_counts_drops():
+    tr = Tracer(enabled=True, capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}", "scheduler")
+    assert len(tr.events) == 4
+    data = tr.chrome_trace()
+    assert data["otherData"]["dropped_events"] == 6
+    names = [e["name"] for e in data["traceEvents"]
+             if e["ph"] != "M"]
+    assert names == ["e6", "e7", "e8", "e9"]    # oldest evicted first
+
+
+def test_chrome_trace_schema_and_tracks():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", "scheduler"):
+        with tr.span("inner", "scheduler"):
+            pass
+    tr.instant("mark", "slot0", rid=3)
+    data = tr.chrome_trace()
+    assert validate_chrome_trace(data) == []
+    meta = {e["args"]["name"]: e for e in data["traceEvents"]
+            if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"scheduler", "slot0"} <= set(meta)
+    xs = [e for e in data["traceEvents"] if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"outer", "inner"}
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] >= 0 and e["pid"] == 1
+
+
+def test_validator_rejects_partial_overlap():
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": 10.0, "args": {}},
+        {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 5.0,
+         "dur": 10.0, "args": {}},
+    ], "displayTimeUnit": "ms", "otherData": {}}
+    assert validate_chrome_trace(bad)
+
+
+def test_instrumented_jit_classifies_compile_vs_hit():
+    reg_before = REGISTRY.snapshot()
+    f = instrumented_jit(jax.jit(lambda x: x * 2 + 1),
+                        name="obs_test_fn", prefix="test.obsjit")
+    f(np.float32(2.0))                          # compile
+    f(np.float32(3.0))                          # hit
+    f(np.ones(3, np.float32))                   # new shape: compile
+    snap = REGISTRY.snapshot()
+    assert snap["test.obsjit.cache_misses"] - \
+        reg_before.get("test.obsjit.cache_misses", 0) == 2
+    assert snap["test.obsjit.cache_hits"] - \
+        reg_before.get("test.obsjit.cache_hits", 0) == 1
+    assert snap["test.obsjit.compile_ms.count"] >= 2
+    assert snap["test.obsjit.execute_ms.count"] >= 1
+
+
+# --------------------------------------------------------------------------
+# scheduler tracing: lifecycle, per-slot monotonicity
+# --------------------------------------------------------------------------
+
+def test_traced_serve_validates_and_slot_spans_are_monotonic(rwkv):
+    cfg, params = rwkv
+    rng = np.random.default_rng(0)
+    tr = Tracer(enabled=True)
+    _serve(cfg, params, _prompts(rng, cfg.vocab, [5, 9, 3, 7, 6]),
+           tracer=tr)
+    data = tr.chrome_trace()
+    assert validate_chrome_trace(data) == []
+    names = {e["name"] for e in data["traceEvents"]}
+    assert {"submit", "admit", "prefill", "decode", "decode-tick",
+            "retire"} <= names
+    # per-slot phase spans never overlap and strictly advance in time:
+    # a slot serves one request phase at a time
+    by_tid = {}
+    tids = {e["args"]["name"]: e["tid"] for e in data["traceEvents"]
+            if e.get("ph") == "M" and e["name"] == "thread_name"}
+    for e in data["traceEvents"]:
+        if e["ph"] == "X":
+            by_tid.setdefault(e["tid"], []).append(e)
+    slot_tids = [t for n, t in tids.items() if n.startswith("slot")]
+    assert len(slot_tids) >= 2
+    for tid in slot_tids:
+        spans = sorted(by_tid.get(tid, []), key=lambda e: e["ts"])
+        assert spans, "slot track with no phase spans"
+        for a, b in zip(spans, spans[1:]):
+            assert a["ts"] + a["dur"] <= b["ts"] + 1e-3, \
+                f"overlapping phase spans on tid {tid}"
+    # instants on every track are time-ordered as emitted (ring preserves
+    # emission order; ts monotone within a track)
+    for tid, evs in by_tid.items():
+        ts = [e["ts"] for e in sorted(evs, key=lambda e: e["ts"])]
+        assert ts == sorted(ts)
+
+
+def test_tracer_off_serve_emits_zero_events(rwkv):
+    cfg, params = rwkv
+    rng = np.random.default_rng(1)
+    tr = Tracer(enabled=False)
+    sched = _serve(cfg, params, _prompts(rng, cfg.vocab, [4, 6]),
+                   tracer=tr)
+    assert len(tr.events) == 0
+    assert sched.counters["completed"] == 2
+
+
+# --------------------------------------------------------------------------
+# stats schema: both backings expose the same keys/types
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("allocator", ["contiguous", "paged"])
+def test_stats_keys_stable_across_backings(gemma, allocator):
+    cfg, params = gemma
+    rng = np.random.default_rng(2)
+    kw = {} if allocator == "contiguous" else {
+        "allocator": "paged", "block_size": 4}
+    fresh = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=2, max_len=16, prefill_chunk=4, cache_requests=False,
+        **kw))
+    schema = dict(SCHEDULER_STATS, **SLOTS_STATS)
+    if allocator == "paged":
+        schema.update(PAGED_STATS)
+    fresh_keys = set(fresh.stats())
+    assert validate_stats(fresh.stats(), schema) == []
+    served = _serve(cfg, params, _prompts(rng, cfg.vocab, [5, 3, 7]),
+                    max_new=4, **kw)
+    assert validate_stats(served.stats(), schema) == []
+    # regression: serving must not invent or drop keys — dashboards and
+    # the benchmark emitters index these names
+    assert set(served.stats()) == fresh_keys
+
+
+# --------------------------------------------------------------------------
+# per-request timeline (Completion phases)
+# --------------------------------------------------------------------------
+
+def test_completion_phase_stamps(rwkv):
+    cfg, params = rwkv
+    rng = np.random.default_rng(3)
+    sched = _serve(cfg, params, _prompts(rng, cfg.vocab, [6, 8, 4, 9]),
+                   max_new=5, admit="continuous")
+    done = [sched.results[r] for r in sorted(sched.results)]
+    assert len(done) == 4
+    for c in done:
+        assert c.queue_wait >= 0.0
+        assert c.ttft >= c.queue_wait
+        assert c.ttft <= c.latency + 1e-9
+        assert c.prefill_s >= 0.0 and c.decode_s >= 0.0
+        assert c.ttft == pytest.approx(c.queue_wait + c.prefill_s,
+                                       abs=1e-6)
+        assert c.itl >= 0.0
+        assert c.swapped_s == 0.0 and c.recomputed_steps == 0
+
+
+# --------------------------------------------------------------------------
+# counter reconciliation (hypothesis)
+# --------------------------------------------------------------------------
+
+def test_property_counters_reconcile_across_interleavings(rwkv):
+    """At every observable point, every submitted request is in exactly
+    one place: finished, on a slot, queued, or waiting behind an
+    identical in-flight request (coalesced)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg, params = rwkv
+
+    def check(sched):
+        m = sched.metrics()
+        assert m["submitted"] == (m["completed"] + m["live"] +
+                                  m["pending"] + m["coalesced_waiting"]), m
+        assert m["live"] == sched.stats()["live"]   # slots agree
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.data())
+    def prop(data):
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        sched = Scheduler(cfg, params, SchedulerConfig(
+            num_slots=2, max_len=12, prefill_chunk=4,
+            cache_requests=True, admit="continuous"))
+        pool = _prompts(rng, cfg.vocab, [3, 4, 5])
+        check(sched)
+        for _ in range(data.draw(st.integers(2, 8))):
+            op = data.draw(st.sampled_from(["submit", "dup", "step"]))
+            if op == "submit":
+                sched.submit([pool[data.draw(st.integers(0, 2))]],
+                             max_new_tokens=3)
+            elif op == "dup":                   # coalesce candidate
+                sched.submit([pool[0], pool[0]], max_new_tokens=3)
+            else:
+                sched.step()
+            check(sched)
+        sched.drain()
+        check(sched)
+        m = sched.metrics()
+        assert m["live"] == m["pending"] == m["coalesced_waiting"] == 0
+        assert m["submitted"] == m["completed"]
+
+    prop()
