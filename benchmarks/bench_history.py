@@ -1,0 +1,336 @@
+"""Benchmark-trajectory recorder + regression gate over the smoke suite.
+
+The paper's claims are measurements; a growing reproduction needs its
+measurements to only move FORWARD. This tool runs the serving and
+runtime smoke suites, folds their headline metrics (plus the live
+sampler's steady-state rates) into schema-versioned JSON baselines at
+the repo root — ``BENCH_serve.json`` / ``BENCH_runtime.json`` — and
+compares fresh runs against them, failing CI when a *gated* metric
+regresses beyond its tolerance.
+
+Two metric classes per baseline:
+
+  * gated         — deterministic quantities (decode-step ratios,
+                    equal-memory occupancy ratios, zipf cache hit rate,
+                    dispatch compile counts): seed-fixed, scheduler-
+                    determined numbers a code change can silently
+                    regress. ``tolerance`` is the allowed relative slack
+                    in the bad ``direction``.
+  * informational — wall-clock quantities (tokens/sec, tracer overhead,
+                    sampler rates): recorded so the trajectory is
+                    visible in git history, never gated (``tolerance``
+                    is null — CI machines are not comparable clocks).
+
+Baselines RATCHET: ``--write`` keeps the better of {old, new} per gated
+metric (the recorded trajectory never loosens by accident); an
+intentional trade-off is recorded with ``--write --reset``, which
+replaces the file wholesale.
+
+    PYTHONPATH=src python -m benchmarks.bench_history \
+        --smoke --check [--write [--reset]] [--suite serve|runtime|all]
+        [--trace /tmp/serve_trace.json] [--out DIR]
+
+Exit status: 1 when ``--check`` finds a regression (or a baseline is
+missing), else 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.obs import Sampler, set_sampler
+
+SCHEMA_VERSION = 1
+
+#: default baseline location: the repo root (committed next to the code
+#: whose trajectory they record)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# row parsing (the benchmarks.common.emit contract: "name,us,derived")
+# ---------------------------------------------------------------------------
+
+def parse_rows(rows: List[str]) -> Dict[str, Dict[str, Any]]:
+    """``name -> {"us": float, <derived k=v pairs...>}``. The derived
+    field is a comma-joined ``k=v`` list for every row this tool reads;
+    non-numeric values survive as strings, bare (non k=v) derived
+    fields land under ``"derived"``."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for row in rows:
+        parts = str(row).split(",")
+        if len(parts) < 2:
+            continue
+        d: Dict[str, Any] = {"us": float(parts[1])}
+        for part in parts[2:]:
+            if "=" in part:
+                k, v = part.split("=", 1)
+                try:
+                    d[k] = float(v)
+                except ValueError:
+                    d[k] = v
+            elif part:
+                d["derived"] = part
+        out[parts[0]] = d
+    return out
+
+
+def _metric(value, direction: str, tolerance: Optional[float]):
+    return {"value": round(float(value), 6), "direction": direction,
+            "tolerance": tolerance}
+
+
+# ---------------------------------------------------------------------------
+# suites
+# ---------------------------------------------------------------------------
+
+def _steady_rates(smp: Sampler, keys) -> Dict[str, Any]:
+    """Informational sampler-derived steady-state rates (per second,
+    warmup sample skipped)."""
+    out = {}
+    for key in keys:
+        r = smp.steady_rate(key)
+        if r is not None:
+            out[f"rate.{key}_per_s"] = _metric(r, "higher", None)
+    return out
+
+
+def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
+    """fig_serve with every arm on (paged + windowed + swap + the
+    closed-loop trace arms when ``trace`` is set) under a wall-clock
+    sampler; returns the baseline document."""
+    from benchmarks import fig_serve
+
+    smp = Sampler(wall_clock=True, min_interval_s=0.05, capacity=4096)
+    prev = set_sampler(smp)
+    try:
+        rows = fig_serve.run(smoke=smoke, paged=True, preempt="swap",
+                             trace=trace)
+    finally:
+        set_sampler(prev)
+    idx = parse_rows(rows)
+    m: Dict[str, Any] = {}
+    # gated: deterministic scheduling/occupancy quantities (seed-fixed
+    # workloads, greedy decode — a shift means the scheduler changed)
+    cv = idx["fig_serve.continuous_vs_static"]
+    m["step_ratio"] = _metric(cv["step_ratio"], "higher", 0.02)
+    m["zipf_hit_rate"] = _metric(idx["fig_serve.zipf_cache"]["hit_rate"],
+                                 "higher", 0.0)
+    m["paged_occupancy_ratio"] = _metric(
+        idx["fig_serve.paged_vs_contiguous"]["occupancy_ratio"],
+        "higher", 0.02)
+    m["windowed_occupancy_ratio"] = _metric(
+        idx["fig_serve.windowed_paged_vs_contiguous"]["occupancy_ratio"],
+        "higher", 0.02)
+    pp = idx["fig_serve.preempt_swap_vs_recompute"]
+    m["overload_swap_occupancy"] = _metric(pp["occupancy_swap"],
+                                           "higher", 0.02)
+    m["overload_recompute_occupancy"] = _metric(pp["occupancy_recompute"],
+                                                "higher", 0.02)
+    # informational: wall-clock (machine-dependent) quantities
+    m["continuous_vs_static_speedup"] = _metric(cv["speedup"],
+                                                "higher", None)
+    for policy in ("static", "continuous"):
+        m[f"{policy}_tok_per_s"] = _metric(
+            idx[f"fig_serve.{policy}.tok_per_s"]["tok_per_s"],
+            "higher", None)
+        m[f"{policy}_ttft_p95_s"] = _metric(
+            idx[f"fig_serve.{policy}.ttft"]["p95_s"], "lower", None)
+    if trace:
+        m["trace_overhead_pct"] = _metric(
+            idx["fig_serve.trace_overhead"]["overhead_pct"], "lower", None)
+        cl = idx["fig_serve.closed_loop"]
+        m["closed_loop_fired"] = _metric(cl["fired"], "higher", None)
+        m["closed_loop_engaged"] = _metric(cl["engaged"], "higher", None)
+    m.update(_steady_rates(smp, ("serve.generated_tokens",
+                                 "serve.decode_steps",
+                                 "serve.prefill_tokens")))
+    return {"schema_version": SCHEMA_VERSION, "suite": "serve",
+            "smoke": bool(smoke), "metrics": m}
+
+
+def run_runtime(smoke: bool) -> Dict[str, Any]:
+    """fig_runtime under a wall-clock sampler; returns the baseline
+    document."""
+    from benchmarks import fig_runtime
+    from repro.runtime.dispatch import BUCKET_STATS
+
+    smp = Sampler(wall_clock=True, min_interval_s=0.05, capacity=4096)
+    prev = set_sampler(smp)
+    try:
+        rows = fig_runtime.run(smoke=smoke)
+    finally:
+        set_sampler(prev)
+    idx = parse_rows(rows)
+    m: Dict[str, Any] = {}
+    # gated: the dispatch layer's compile behavior is shape-deterministic
+    # (fixed seeds + fixed batch ladder -> a fixed set of bucket
+    # programs); more misses means bucketing regressed
+    cache = idx["fig_runtime.dispatch.cache"]
+    m["dispatch_cache_misses"] = _metric(cache["misses"], "lower", 0.0)
+    m["dispatch_buckets"] = _metric(len(BUCKET_STATS.buckets), "lower", 0.0)
+    # informational: wall-clock speedups and rates
+    for name, d in idx.items():
+        if "speedup_vs_per_request" in d:
+            arm = name.split(".", 1)[1].replace(".", "_")
+            m[f"{arm}_speedup"] = _metric(d["speedup_vs_per_request"],
+                                          "higher", None)
+    m["dispatch_cache_hits"] = _metric(cache["hits"], "higher", None)
+    m.update(_steady_rates(smp, ("runtime.dispatch.cache_hits",
+                                 "runtime.service.submits")))
+    return {"schema_version": SCHEMA_VERSION, "suite": "runtime",
+            "smoke": bool(smoke), "metrics": m}
+
+
+# ---------------------------------------------------------------------------
+# comparison + ratcheted write
+# ---------------------------------------------------------------------------
+
+def compare(baseline: Dict[str, Any],
+            current: Dict[str, Any]) -> List[str]:
+    """Regressions of ``current`` vs ``baseline``, as human-readable
+    strings (empty = pass). Only gated metrics (tolerance != null)
+    gate; a gated baseline metric missing from the current run is
+    itself a regression (a silently dropped measurement must not pass).
+    """
+    problems: List[str] = []
+    if baseline.get("schema_version") != SCHEMA_VERSION:
+        problems.append(
+            f"baseline schema_version {baseline.get('schema_version')} "
+            f"!= {SCHEMA_VERSION} (regenerate with --write --reset)")
+        return problems
+    cur = current.get("metrics", {})
+    for name, spec in baseline.get("metrics", {}).items():
+        tol = spec.get("tolerance")
+        if tol is None:
+            continue
+        got = cur.get(name)
+        if got is None:
+            problems.append(f"{name}: gated metric missing from this run")
+            continue
+        base_v, cur_v = float(spec["value"]), float(got["value"])
+        if spec["direction"] == "higher":
+            floor = base_v * (1.0 - tol)
+            if cur_v < floor:
+                problems.append(
+                    f"{name}: {cur_v:.4f} < {floor:.4f} "
+                    f"(baseline {base_v:.4f}, tolerance {tol})")
+        else:
+            ceil = base_v * (1.0 + tol)
+            if cur_v > ceil:
+                problems.append(
+                    f"{name}: {cur_v:.4f} > {ceil:.4f} "
+                    f"(baseline {base_v:.4f}, tolerance {tol})")
+    return problems
+
+
+def ratchet(old: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:
+    """Merge a fresh run into an existing baseline: gated metrics keep
+    the BETTER of {old, new} (the trajectory only tightens),
+    informational metrics always take the fresh measurement, and
+    metrics new to this run are added."""
+    merged = dict(new)
+    out = dict(new.get("metrics", {}))
+    for name, spec in old.get("metrics", {}).items():
+        tol = spec.get("tolerance")
+        got = out.get(name)
+        if got is None:
+            out[name] = spec        # keep retired-but-gated history
+            continue
+        if tol is None or got.get("tolerance") is None:
+            continue
+        better = max if spec["direction"] == "higher" else min
+        if better(spec["value"], got["value"]) == spec["value"]:
+            out[name] = dict(got, value=spec["value"])
+    merged["metrics"] = out
+    return merged
+
+
+def baseline_path(suite: str, out_dir: str) -> str:
+    return os.path.join(out_dir, f"BENCH_{suite}.json")
+
+
+def _dump(doc: Dict[str, Any], path: str):
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run the smoke benchmark suites and gate/record "
+                    "their metric trajectory")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes (CI cadence; baselines are "
+                         "recorded at smoke scale)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baselines; "
+                         "exit 1 on any gated regression")
+    ap.add_argument("--write", action="store_true",
+                    help="update the baselines (ratcheted: gated "
+                         "metrics keep the better of old/new)")
+    ap.add_argument("--reset", action="store_true",
+                    help="with --write: replace baselines wholesale "
+                         "(record an intentional trade-off)")
+    ap.add_argument("--suite", choices=["serve", "runtime", "all"],
+                    default="all")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="forward to fig_serve: run the closed-loop "
+                         "trace arms and export the Chrome trace here")
+    ap.add_argument("--out", default=REPO_ROOT,
+                    help="baseline directory (default: repo root)")
+    args = ap.parse_args(argv)
+    if args.reset and not args.write:
+        ap.error("--reset requires --write")
+    if not (args.check or args.write):
+        ap.error("nothing to do: pass --check and/or --write")
+
+    suites = ("serve", "runtime") if args.suite == "all" else (args.suite,)
+    failures: List[str] = []
+    for suite in suites:
+        print(f"# bench_history: running {suite} suite "
+              f"({'smoke' if args.smoke else 'full'})")
+        if suite == "serve":
+            doc = run_serve(args.smoke, args.trace)
+        else:
+            doc = run_runtime(args.smoke)
+        path = baseline_path(suite, args.out)
+        old: Optional[Dict[str, Any]] = None
+        if os.path.exists(path):
+            with open(path) as f:
+                old = json.load(f)
+        if args.check:
+            if old is None:
+                failures.append(f"{suite}: no baseline at {path} "
+                                f"(generate with --write)")
+            else:
+                problems = compare(old, doc)
+                for p in problems:
+                    print(f"# bench_history: REGRESSION [{suite}] {p}")
+                failures.extend(f"{suite}: {p}" for p in problems)
+                if not problems:
+                    print(f"# bench_history: {suite} within baseline "
+                          f"({sum(1 for s in old['metrics'].values() if s['tolerance'] is not None)} gated metrics)")
+        if args.write:
+            doc = doc if (old is None or args.reset) else ratchet(old, doc)
+            _dump(doc, path)
+            print(f"# bench_history: wrote {path} "
+                  f"({len(doc['metrics'])} metrics)")
+    if failures:
+        print(f"# bench_history: {len(failures)} regression(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

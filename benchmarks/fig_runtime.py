@@ -66,9 +66,10 @@ def _throughput(svc: KernelService, reqs, repeats: int = 3):
     return us_b, us_s
 
 
-def bench_kernel(rows, name: str, make_request, svc: KernelService):
+def bench_kernel(rows, name: str, make_request, svc: KernelService,
+                 batches=BATCHES):
     rng = np.random.default_rng(0)
-    for bsz in BATCHES:
+    for bsz in batches:
         reqs = [make_request(rng) for _ in range(bsz)]
         us_b, us_s = _throughput(svc, reqs)
         rows.append(common.emit(
@@ -97,19 +98,23 @@ def report_dispatch(rows):
             f"execute_ms={b['execute_ms']:.1f}"))
 
 
-def run(rows=None):
+def run(rows=None, smoke: bool = False):
     rows = rows if rows is not None else []
     print("# fig_runtime: batched KernelService vs per-request dispatch")
     svc = KernelService(ServiceConfig(dtw_tile=16, seq_bucket=64))
     BUCKET_STATS.clear()        # per-run table, not process history
+    batches = BATCHES[:3] if smoke else BATCHES     # smoke: skip b128
     bench_kernel(rows, "chain",
-                 lambda r: _chain_request(r, int(r.integers(64, 256))), svc)
+                 lambda r: _chain_request(r, int(r.integers(64, 256))), svc,
+                 batches)
     bench_kernel(rows, "dtw",
                  lambda r: _dtw_request(r, int(r.integers(24, 64)),
-                                        int(r.integers(24, 64))), svc)
+                                        int(r.integers(24, 64))), svc,
+                 batches)
     report_dispatch(rows)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(smoke="--smoke" in sys.argv)

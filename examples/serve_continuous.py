@@ -15,6 +15,14 @@ Observability (PR 6): ``--trace out.json`` records the serve as Chrome
 trace events (load in https://ui.perfetto.dev — one track per slot plus
 scheduler/dispatcher tracks); ``--metrics`` dumps the flat metrics
 registry (``serve.*``, ``serve.engine.*``, paging) as JSON on exit.
+
+Closed loop (PR 7): ``--sample out.jsonl`` installs a live Sampler
+ticking off every scheduler step and exports the sample ring as a JSONL
+time-series (with ``--trace`` the levels also land as Perfetto counter
+tracks); ``--slo`` wires a queue-wait SLO monitor with hysteresis to a
+BackpressureController — pair with ``--paged --num-blocks <small>`` and
+watch the admission cap engage while the alert fires and release when
+the queue drains.
 """
 
 import argparse
@@ -27,7 +35,8 @@ import jax
 
 from repro import configs
 from repro.models import transformer as T
-from repro.obs import REGISTRY, Tracer, set_tracer
+from repro.obs import (REGISTRY, BackpressureController, Rule, Sampler,
+                       SLOManager, Tracer, set_sampler, set_tracer)
 from repro.serve import Scheduler, SchedulerConfig
 
 
@@ -70,6 +79,14 @@ def main():
                          "(open in https://ui.perfetto.dev)")
     ap.add_argument("--metrics", action="store_true",
                     help="dump the metrics registry as JSON on exit")
+    ap.add_argument("--sample", metavar="OUT.jsonl", default=None,
+                    help="live-sample the registry every scheduler step "
+                         "and export the ring as JSONL (with --trace the "
+                         "levels also become Perfetto counter tracks)")
+    ap.add_argument("--slo", action="store_true",
+                    help="close the loop: a queue-wait SLO monitor drives "
+                         "a BackpressureController (admission cap + swap "
+                         "preempt while firing; restored on clear)")
     args = ap.parse_args()
 
     if args.trace:
@@ -89,6 +106,21 @@ def main():
         swap_bytes_budget=args.swap_budget,
         preempt=args.preempt,
         admission="reserved" if args.reserved else "optimistic"))
+
+    smp = slo = None
+    if args.sample or args.slo:
+        smp = Sampler(counter_tracks=(
+            ("serve.pending", "value"), ("serve.live", "value"),
+            ("serve.generated_tokens", "rate")) if args.trace else ())
+        set_sampler(smp)
+    if args.slo:
+        slo = SLOManager([Rule("queue_wait",
+                               key="serve.queue_head_wait_s", op="<",
+                               threshold=0.01, fire_after=2,
+                               clear_after=2)])
+        ctrl = BackpressureController(sched, admit_cap=1, preempt="swap")
+        slo.subscribe(ctrl)
+        smp.add_listener(slo.on_sample)
 
     prompts = [rng.integers(0, cfg.vocab,
                             int(rng.integers(4, args.max_prompt))
@@ -151,6 +183,17 @@ def main():
         print(f"[serve_continuous] trace -> {args.trace} "
               f"({len(get_tracer().events)} events; "
               f"load in https://ui.perfetto.dev)")
+    if args.slo:
+        snap = REGISTRY.snapshot()
+        print(f"[serve_continuous] closed loop: queue_wait fired "
+              f"{snap['obs.slo.queue_wait.fired']}x, backpressure "
+              f"engaged {snap['obs.control.backpressure.engaged']}x "
+              f"(firing now: {slo.monitors['queue_wait'].firing})")
+    if args.sample:
+        smp.export_jsonl(args.sample)
+        print(f"[serve_continuous] samples -> {args.sample} "
+              f"({smp.sample_count} samples, "
+              f"{len(smp.samples)} retained)")
     if args.metrics:
         print(json.dumps(REGISTRY.snapshot(), indent=1, sort_keys=True))
     print("[serve_continuous] OK")

@@ -1,5 +1,6 @@
 """repro.obs — unified observability: metrics registry + structured
-tracer + the schemas that pin both.
+tracer + live sampling + SLO monitors + controllers, and the schemas
+that pin the surface.
 
   * metrics — Counter/Gauge/Histogram under stable dotted names
               (``serve.decode_steps``, ``paging.blocks_free``,
@@ -7,20 +8,35 @@ tracer + the schemas that pin both.
               so the legacy per-component ``stats()`` dicts stay the
               source of truth and one ``REGISTRY.snapshot()`` sees the
               whole stack.
-  * trace   — bounded ring buffer of typed span/instant events
+  * trace   — bounded ring buffer of typed span/instant/counter events
               (admit / prefill-chunk / decode-tick / preempt / swap /
-              retire / bucket-dispatch / jit-compile), a no-op when
+              retire / bucket-dispatch / jit-compile / slo-fire /
+              backpressure-on / metric counter tracks), a no-op when
               disabled, exported to JSONL or Chrome trace-event JSON
               (drop into https://ui.perfetto.dev: one track per slot
-              plus scheduler/dispatcher tracks).
+              plus scheduler/dispatcher/slo/control/metrics tracks).
+  * sampler — tick-driven snapshot ring over the registry: timestamped
+              samples, counter rates (tokens/sec, swap bytes/sec), a
+              JSONL time-series export and Perfetto counter tracks —
+              live numbers, no background thread.
+  * slo     — declarative rules over sampled series with hysteresis
+              (N consecutive breaches to fire, M to clear), alerts as
+              trace events + ``obs.slo.*`` metrics.
+  * control — actuators driven by fired monitors: overload backpressure
+              on the scheduler, bounded online autotune re-sweeps —
+              timing/admission only, never outputs.
   * schema  — documented stats() keys/types and Chrome-trace structural
               validation (what CI gates the smoke export on).
 """
 
+from repro.obs.control import (AutotuneController, BackpressureController,
+                               build_serve_loop, dispatch_imbalance_rule)
 from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
                                Registry, get_registry)
+from repro.obs.sampler import Sample, Sampler, get_sampler, set_sampler
 from repro.obs.schema import (PAGED_STATS, SCHEDULER_STATS, SLOTS_STATS,
                               validate_chrome_trace, validate_stats)
+from repro.obs.slo import Monitor, Rule, SLOManager, default_serve_rules
 from repro.obs.trace import (Event, Tracer, get_tracer, instrumented_jit,
                              set_tracer)
 
@@ -28,4 +44,8 @@ __all__ = ["REGISTRY", "Counter", "Gauge", "Histogram", "Registry",
            "get_registry", "PAGED_STATS", "SCHEDULER_STATS",
            "SLOTS_STATS", "validate_chrome_trace", "validate_stats",
            "Event", "Tracer", "get_tracer", "instrumented_jit",
-           "set_tracer"]
+           "set_tracer", "Sample", "Sampler", "get_sampler",
+           "set_sampler", "Monitor", "Rule", "SLOManager",
+           "default_serve_rules", "AutotuneController",
+           "BackpressureController", "build_serve_loop",
+           "dispatch_imbalance_rule"]

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import collections
 import json
+import os
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -85,19 +86,31 @@ class Histogram:
         self.max = max(self.max, v)
         self._window.append(v)
 
+    @staticmethod
+    def _pick(xs: List[float], p: float) -> float:
+        i = min(int(round(p / 100.0 * (len(xs) - 1))), len(xs) - 1)
+        return xs[i]
+
     def percentile(self, p: float) -> float:
         """p in [0, 100] over the recent window; 0.0 when empty."""
         if not self._window:
             return 0.0
-        xs = sorted(self._window)
-        i = min(int(round(p / 100.0 * (len(xs) - 1))), len(xs) - 1)
-        return xs[i]
+        return self._pick(sorted(self._window), p)
 
     def summary(self) -> Dict[str, float]:
+        """Flat summary. ``count``/``sum`` are the MONOTONIC lifetime
+        totals (not the percentile window's): the sampler differentiates
+        them into rates, and a bursty phase that blows past the window
+        must still account for every observation. Percentiles (p50/p95)
+        are over the recent window only (one shared sort — summary is on
+        the sampler's per-sample path)."""
         if not self.count:
-            return {"count": 0, "sum": 0.0, "p50": 0.0, "max": 0.0}
+            return {"count": 0, "sum": 0.0, "p50": 0.0, "p95": 0.0,
+                    "max": 0.0}
+        xs = sorted(self._window)
         return {"count": self.count, "sum": round(self.total, 3),
-                "p50": round(self.percentile(50), 3),
+                "p50": round(self._pick(xs, 50), 3),
+                "p95": round(self._pick(xs, 95), 3),
                 "max": round(self.max, 3)}
 
 
@@ -167,9 +180,22 @@ class Registry:
         return dict(sorted(out.items()))
 
     def dump_json(self, path: str):
-        with open(path, "w") as f:
-            json.dump(self.snapshot(), f, indent=1, sort_keys=True,
-                      default=str)
+        """Atomic snapshot dump: write to a per-pid tempfile and rename.
+        Concurrent dumpers (a sweep fanned out over processes, the same
+        lesson as Autotuner.save) can't clobber each other's half-written
+        file, and a crash mid-write leaves any existing ``path`` intact."""
+        tmp = f"{path}.{os.getpid()}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self.snapshot(), f, indent=1, sort_keys=True,
+                          default=str)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
 
 #: process-wide default registry (components register into it unless

@@ -31,7 +31,22 @@ SCHEDULER_STATS: Dict[str, type] = {
     "pending": int, "live": int, "coalesced_waiting": int,
     "cache_hits": int, "cache_misses": int,
     "cache_hit_rate": float, "mean_occupancy": float,
+    # the live overload signal the SLO layer monitors: how long the
+    # current queue head has been waiting (0.0 when the queue is empty)
+    "queue_head_wait_s": float,
+    # backpressure-controller knobs, surfaced so every actuation is
+    # visible in the same snapshot the monitors read (-1 = uncapped)
+    "admit_cap": int, "preempt_policy": str,
 }
+
+#: per-request latency histograms the scheduler owns (flattened into
+#: stats() as ``<name>.<field>`` — lifetime count/sum, windowed
+#: percentiles): the series SLO rules like ``ttft_p95 < X`` read.
+SCHEDULER_LATENCY_HISTS = ("queue_wait_ms", "ttft_ms", "itl_ms")
+_HIST_FIELDS: Dict[str, type] = {"count": int, "sum": float, "p50": float,
+                                 "p95": float, "max": float}
+SCHEDULER_STATS.update({f"{h}.{f}": t for h in SCHEDULER_LATENCY_HISTS
+                        for f, t in _HIST_FIELDS.items()})
 
 #: serve.SlotManager.stats() — present for BOTH backings.
 SLOTS_STATS: Dict[str, type] = {
@@ -73,22 +88,35 @@ def validate_stats(stats: Dict[str, Any],
 
 # -- chrome trace validation -------------------------------------------------
 
-_PHASES = {"X", "i", "M"}
+_PHASES = {"X", "i", "M", "C"}
 
 
 def validate_chrome_trace(data: Any) -> List[str]:
     """Structural problems with a Chrome trace-event JSON object (empty
     list == valid). Checks: top-level shape, per-event required fields,
-    non-negative ts/dur, and per-(pid, tid) 'X' spans that either nest
-    properly (a span entirely inside another — how jit-compile sits
-    inside bucket-dispatch) or are disjoint; partial overlap on one
-    track is corruption."""
+    non-negative ts/dur, counter ('C') events carrying numeric series,
+    the ``otherData.dropped_events`` loss metadata (a trace whose ring
+    overflowed silently is not trustworthy — the count must be present),
+    and per-(pid, tid) 'X' spans that either nest properly (a span
+    entirely inside another — how jit-compile sits inside
+    bucket-dispatch) or are disjoint; partial overlap on one track is
+    corruption."""
     problems: List[str] = []
     if not isinstance(data, dict) or "traceEvents" not in data:
         return ["top level must be a dict with 'traceEvents'"]
     evs = data["traceEvents"]
     if not isinstance(evs, list):
         return ["'traceEvents' must be a list"]
+    other = data.get("otherData")
+    if not isinstance(other, dict):
+        problems.append("'otherData' metadata missing")
+    else:
+        dropped = other.get("dropped_events")
+        if not isinstance(dropped, int) or isinstance(dropped, bool) \
+                or dropped < 0:
+            problems.append(
+                f"otherData.dropped_events must be a non-negative int, "
+                f"got {dropped!r}")
     spans: Dict[Any, List] = {}
     for i, e in enumerate(evs):
         if not isinstance(e, dict):
@@ -106,6 +134,14 @@ def validate_chrome_trace(data: Any) -> List[str]:
         ts = e.get("ts")
         if not isinstance(ts, (int, float)) or ts < 0:
             problems.append(f"event {i} ({e['name']}): bad ts {ts!r}")
+            continue
+        if ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) and not isinstance(v, bool)
+                    for v in args.values()):
+                problems.append(f"event {i} ({e['name']}): counter args "
+                                f"must be a non-empty numeric dict")
             continue
         if ph == "X":
             dur = e.get("dur")

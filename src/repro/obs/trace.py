@@ -47,10 +47,11 @@ from repro.obs import metrics as _metrics
 @dataclasses.dataclass
 class Event:
     """One trace event. ``ph`` follows the Chrome trace-event phases:
-    'X' = complete span (``dur`` > 0 possible), 'i' = instant."""
+    'X' = complete span (``dur`` > 0 possible), 'i' = instant,
+    'C' = counter sample (args carry the numeric series values)."""
     name: str
     track: str
-    ph: str                     # 'X' | 'i'
+    ph: str                     # 'X' | 'i' | 'C'
     ts: float                   # perf_counter seconds (span start)
     dur: float = 0.0            # seconds ('X' only)
     args: Optional[Dict[str, Any]] = None
@@ -108,7 +109,12 @@ class Tracer:
 
     def _push(self, ev: Event):
         if len(self.events) == self.capacity:
+            # ring overflow is data LOSS, not just recycling: count it
+            # both locally (export metadata) and in the registry so a
+            # sampler/SLO rule can alarm on a drop rate — a silent ring
+            # overwrite would undermine every trace-derived conclusion
             self.dropped += 1
+            _metrics.REGISTRY.counter("obs.trace.dropped").inc()
         self.events.append(ev)
 
     def span(self, name: str, track: str, **args):
@@ -124,6 +130,17 @@ class Tracer:
             return
         self._push(Event(name, track, "i", time.perf_counter(),
                          args=args or None))
+
+    def counter(self, name: str, track: str, **values):
+        """Counter sample ('C'): Perfetto renders one counter track per
+        ``name`` with the numeric ``values`` series stacked — the
+        sampler's live metric feeds (``tokens_per_s``, ``blocks_free``)
+        next to the span tracks, so a throttling decision lines up with
+        the level that triggered it."""
+        if not self.enabled:
+            return
+        self._push(Event(name, track, "C", time.perf_counter(),
+                         args={k: float(v) for k, v in values.items()}))
 
     def complete(self, name: str, track: str, t0: float, t1: float,
                  **args):
@@ -172,8 +189,9 @@ class Tracer:
                                  "ts": (e.ts - t_base) * 1e6}
             if e.ph == "X":
                 d["dur"] = e.dur * 1e6
-            else:
+            elif e.ph == "i":
                 d["s"] = "t"                # instant scope: thread
+            # 'C' (counter) carries its series in args, nothing extra
             if e.args:
                 d["args"] = dict(e.args)
             out.append(d)

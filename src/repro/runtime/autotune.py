@@ -111,24 +111,11 @@ class Autotuner:
 
     # -- measurement ---------------------------------------------------------
 
-    def tune(self, key: str, candidates: Dict, make_thunk: Callable,
-             repeats: int = 3, force: bool = False):
-        """Measure ``make_thunk(candidate)()`` per candidate, persist and
-        return the fastest candidate value (must be JSON-serializable).
-        Cached unless ``force``.
-
-        candidates: a {label: value} dict or an iterable of values.
-
-        A candidate whose thunk raises (e.g. a block size incompatible
-        with the bucket shape) is SKIPPED, not fatal — the sweep still
-        returns the fastest of the survivors, and the failures are
-        recorded in the cache entry under ``"failed"`` for inspection.
-        Only when *every* candidate fails does tune raise.
-        """
-        if not force:
-            got = self.get(key)
-            if got is not None:
-                return got
+    @staticmethod
+    def _measure(candidates: Dict, make_thunk: Callable, repeats: int):
+        """Time every candidate; returns ``(best_v, best_us, failed,
+        records)``. Failing candidates are skipped, not fatal; best_us is
+        inf when every candidate failed."""
         if not isinstance(candidates, dict):
             candidates = {v: v for v in candidates}
         best_v, best_us = None, float("inf")
@@ -158,12 +145,66 @@ class Autotuner:
                                        max(warm_us - us, 0.0), 1)}
             if us < best_us:
                 best_v, best_us = cand, us
+        return best_v, best_us, failed, records
+
+    def tune(self, key: str, candidates: Dict, make_thunk: Callable,
+             repeats: int = 3, force: bool = False):
+        """Measure ``make_thunk(candidate)()`` per candidate, persist and
+        return the fastest candidate value (must be JSON-serializable).
+        Cached unless ``force``.
+
+        candidates: a {label: value} dict or an iterable of values.
+
+        A candidate whose thunk raises (e.g. a block size incompatible
+        with the bucket shape) is SKIPPED, not fatal — the sweep still
+        returns the fastest of the survivors, and the failures are
+        recorded in the cache entry under ``"failed"`` for inspection.
+        Only when *every* candidate fails does tune raise.
+        """
+        if not force:
+            got = self.get(key)
+            if got is not None:
+                return got
+        best_v, best_us, failed, records = self._measure(
+            candidates, make_thunk, repeats)
         if best_us == float("inf"):
             raise RuntimeError(
                 f"autotune {key!r}: every candidate failed: {failed}")
         self.put(key, best_v, us=best_us, failed=failed or None,
                  candidates=records)
         return best_v
+
+    def retune(self, key: str, candidates: Dict, make_thunk: Callable,
+               repeats: int = 3, min_improvement: float = 0.02):
+        """Bounded ONLINE re-sweep (the obs AutotuneController's entry
+        point): re-measure the candidates and persist the winner only if
+        it beats the incumbent entry's recorded ``us`` by at least
+        ``min_improvement`` (relative) — a live system's knob never
+        regresses from a noisy re-measurement. Returns ``(value,
+        improved)``: the knob to use and whether it changed.
+
+        Unlike :meth:`tune`, a fully-failing re-sweep does NOT raise —
+        the serve keeps its incumbent knob and the failure is recorded
+        in the cache entry under ``"resweep_failed"``.
+        """
+        incumbent = self._cache.get(key)
+        best_v, best_us, failed, records = self._measure(
+            candidates, make_thunk, repeats)
+        if best_us == float("inf"):
+            if incumbent is not None:
+                incumbent = dict(incumbent)
+                incumbent["resweep_failed"] = failed
+                self._cache[key] = incumbent
+                self.save()
+                return incumbent["value"], False
+            return None, False
+        inc_us = incumbent.get("us") if incumbent else None
+        if incumbent is not None and inc_us is not None and \
+                best_us >= inc_us * (1.0 - min_improvement):
+            return incumbent["value"], False        # keep the incumbent
+        self.put(key, best_v, us=best_us, failed=failed or None,
+                 candidates=records)
+        return best_v, True
 
 
 # --------------------------------------------------------------------------

@@ -37,6 +37,7 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import sampler as obs_sampler
 from repro.obs import trace as obs_trace
 
 try:                                    # jax >= 0.6 re-exports at top level
@@ -177,6 +178,7 @@ class Dispatcher:
         obs_trace.get_tracer().complete(
             "bucket-dispatch", "dispatcher", t0, t1, fn=name,
             batch=bsz + pad, workers=w, compiled=compiled)
+        obs_sampler.tick("dispatch.run")
         if pad:
             out = jax.tree_util.tree_map(lambda x: x[:bsz], out)
         return out

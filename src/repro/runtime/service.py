@@ -45,6 +45,7 @@ from repro.core import wavefront
 from repro.core.scan1d import affine_scan
 from repro.core.semiring import SEMIRINGS, finite_zero
 from repro.obs import metrics as obs_metrics
+from repro.obs import sampler as obs_sampler
 from repro.runtime import bucketing
 from repro.runtime.autotune import Autotuner
 from repro.runtime.dispatch import Dispatcher
@@ -647,4 +648,5 @@ class KernelService:
                 [requests[i].payload for i in idxs])
             for i, res in zip(idxs, got):
                 results[i] = res
+        obs_sampler.tick("service.submit")
         return results

@@ -79,6 +79,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.obs import metrics as obs_metrics
+from repro.obs import sampler as obs_sampler
 from repro.obs import trace as obs_trace
 from repro.runtime import bucketing
 from repro.serve.slots import SlotManager
@@ -305,6 +306,19 @@ class Scheduler:
         self._next_rid = 0
         self._next_seq = 0          # admission sequence (preempt youngest)
         self.counters = collections.Counter(dict.fromkeys(_COUNTER_KEYS, 0))
+        # per-request latency histograms (lifetime count/sum, windowed
+        # p50/p95) — the sampled series SLO rules like ``ttft_p95 < X``
+        # monitor; fresh per scheduler so benchmarks don't cross-pollute
+        self._lat = {name: obs_metrics.Histogram()
+                     for name in ("queue_wait_ms", "ttft_ms", "itl_ms")}
+        # closed-loop actuator knobs (obs.control.BackpressureController):
+        # admit_cap caps admissions per tick while an overload alert
+        # fires (None = uncapped FCFS), preempt_override flips the
+        # preemption policy without touching the frozen config. Both only
+        # ever change timing/admission — greedy token streams are
+        # bit-identical with or without them (tests/test_obs_loop.py).
+        self.admit_cap: Optional[int] = None
+        self.preempt_override: Optional[str] = None
         self._tracer = tracer
         # slot -> (phase name, t0, rid): the open per-slot phase span,
         # closed at first-token / preempt / retire (tracer enabled only)
@@ -315,6 +329,13 @@ class Scheduler:
     def tracer(self) -> obs_trace.Tracer:
         return self._tracer if self._tracer is not None \
             else obs_trace.get_tracer()
+
+    @property
+    def preempt_policy(self) -> str:
+        """The policy preempt-on-OOB actually uses this tick: the
+        controller's override when backpressure is engaged, else the
+        configured one."""
+        return self.preempt_override or self.sched.preempt
 
     def _phase_begin(self, slot: int, name: str, rid: int):
         if self.tracer.enabled:
@@ -395,6 +416,10 @@ class Scheduler:
         self.counters["steps"] += 1
         out = [self.results[rid] for rid in self._fresh]
         self._fresh.clear()
+        # tick the installed sampler (if any) AFTER the tick's work, so
+        # a sample sees the levels this step produced; one global load +
+        # None check when live sampling is off
+        obs_sampler.tick("serve.step")
         return out
 
     def drain(self) -> List[Completion]:
@@ -423,20 +448,34 @@ class Scheduler:
 
     def metrics(self) -> dict:
         """Scheduler-owned metrics (registry 'serve' provider): every
-        counter (pre-declared), queue/pool levels and cache rates.
+        counter (pre-declared), queue/pool levels, cache rates, the
+        latency histograms (flattened ``<name>.<field>``) and the live
+        overload signal + actuator knobs the SLO/control loop reads.
         ``stats()`` = this + the slot pool's keys."""
         decode_steps = self.counters["decode_steps"]
-        return {**{k: int(v) for k, v in self.counters.items()},
-                "pending": len(self._queue),
-                "live": len(self._by_slot),
-                "coalesced_waiting": sum(
-                    len(v) for v in self._inflight.values()),
-                "cache_hits": self.request_cache.hits,
-                "cache_misses": self.request_cache.misses,
-                "cache_hit_rate": round(self.request_cache.hit_rate, 4),
-                "mean_occupancy": round(
-                    self.counters["live_decode_slots"] / decode_steps, 4)
-                if decode_steps else 0.0}
+        head_wait = 0.0
+        if self._queue:
+            head_wait = time.perf_counter() \
+                - self._tl[self._queue[0].rid].submit_t
+        out = {**{k: int(v) for k, v in self.counters.items()},
+               "pending": len(self._queue),
+               "live": len(self._by_slot),
+               "coalesced_waiting": sum(
+                   len(v) for v in self._inflight.values()),
+               "cache_hits": self.request_cache.hits,
+               "cache_misses": self.request_cache.misses,
+               "cache_hit_rate": round(self.request_cache.hit_rate, 4),
+               "mean_occupancy": round(
+                   self.counters["live_decode_slots"] / decode_steps, 4)
+               if decode_steps else 0.0,
+               "queue_head_wait_s": round(head_wait, 6),
+               "admit_cap": -1 if self.admit_cap is None
+               else int(self.admit_cap),
+               "preempt_policy": self.preempt_policy}
+        for name, h in self._lat.items():
+            for k, v in h.summary().items():
+                out[f"{name}.{k}"] = v
+        return out
 
     def stats(self) -> dict:
         return {**self.metrics(), **self.slots.stats()}
@@ -449,7 +488,14 @@ class Scheduler:
         # FCFS with head-of-line blocking: if the queue head's blocks
         # aren't free (paged), nothing behind it jumps the line —
         # preserves arrival order and starves no request.
+        admitted_this_tick = 0
         while self._queue:
+            # backpressure: while the overload alert fires the
+            # controller caps admissions per tick (order is still FCFS —
+            # only timing changes, so greedy streams are unchanged)
+            if self.admit_cap is not None \
+                    and admitted_this_tick >= self.admit_cap:
+                return
             st = self._queue[0]
             swapped_in = False
             if self.slots.is_swapped(st.rid):
@@ -476,10 +522,13 @@ class Scheduler:
             self._next_seq += 1
             self._by_slot[slot] = st
             self.counters["admitted"] += 1
+            admitted_this_tick += 1
             now = time.perf_counter()
             tl = self._tl[st.rid]
             if tl.admit_t is None:
                 tl.admit_t = now        # first admission only (queue-wait)
+                self._lat["queue_wait_ms"].observe(
+                    (now - tl.submit_t) * 1e3)
             if swapped_in:
                 if tl.swap_out_t is not None:
                     tl.swapped_s += now - tl.swap_out_t
@@ -506,7 +555,7 @@ class Scheduler:
         self._phase_end(slot)
         tl = self._tl[st.rid]
         swapped = False
-        if self.sched.preempt == "swap":
+        if self.preempt_policy == "swap":
             # bytes moved AND budget rejections are tracked once, by the
             # backing's SwapStore (surfaced through stats() —
             # 'swap_rejected' has a single owner); counters only count
@@ -634,6 +683,8 @@ class Scheduler:
                 tl = self._tl[st.rid]
                 if tl.first_token_t is None:
                     tl.first_token_t = time.perf_counter()
+                    self._lat["ttft_ms"].observe(
+                        (tl.first_token_t - tl.submit_t) * 1e3)
                 # the prefill phase ends at the first sampled token
                 self._phase_end(s)
                 self._phase_begin(s, "decode", st.rid)
@@ -662,9 +713,14 @@ class Scheduler:
         self.counters["completed"] += 1
         self._fresh.append(rid)
         tl = self._tl.pop(rid)
-        self.results[rid] = Completion(
+        comp = Completion(
             rid=rid, tokens=tokens, reason=reason, prompt_len=prompt_len,
             submit_t=tl.submit_t, finish_t=time.perf_counter(),
             admit_t=tl.admit_t, first_token_t=tl.first_token_t,
             swapped_s=tl.swapped_s, recomputed_steps=tl.recomputed_steps,
             preemptions=tl.preemptions)
+        self.results[rid] = comp
+        # ITL is only meaningful for pool-served requests (cache hits
+        # have no decode phase)
+        if tl.admit_t is not None and tl.first_token_t is not None:
+            self._lat["itl_ms"].observe(comp.itl * 1e3)

@@ -1,0 +1,123 @@
+"""Benchmark-trajectory gate (PR 7): row parsing, the comparator's
+gated/informational split (a degraded gated metric, a silently dropped
+gated metric and a schema bump must all FAIL the check), and the
+ratcheted-write merge semantics. Pure functions — no benchmarks run."""
+
+import json
+
+import pytest
+
+from benchmarks.bench_history import (SCHEMA_VERSION, _dump, _metric,
+                                      baseline_path, compare, parse_rows,
+                                      ratchet)
+
+
+def _doc(metrics, schema=SCHEMA_VERSION):
+    return {"schema_version": schema, "suite": "serve", "smoke": True,
+            "metrics": metrics}
+
+
+# --------------------------------------------------------------------------
+# row parsing (the benchmarks.common.emit contract)
+# --------------------------------------------------------------------------
+
+def test_parse_rows():
+    idx = parse_rows([
+        "fig.a,12.5,speedup=2.0,steps=42",
+        "fig.b,3.0,label=paged,note",
+        "not-a-row",
+    ])
+    assert idx["fig.a"] == {"us": 12.5, "speedup": 2.0, "steps": 42.0}
+    assert idx["fig.b"] == {"us": 3.0, "label": "paged", "derived": "note"}
+    assert "not-a-row" not in idx
+
+
+# --------------------------------------------------------------------------
+# comparator: only gated metrics gate, in their bad direction
+# --------------------------------------------------------------------------
+
+def test_compare_passes_on_equal_and_improved():
+    base = _doc({"ratio": _metric(2.0, "higher", 0.02),
+                 "misses": _metric(3.0, "lower", 0.0),
+                 "tok_per_s": _metric(1000.0, "higher", None)})
+    assert compare(base, base) == []
+    better = _doc({"ratio": _metric(2.5, "higher", 0.02),
+                   "misses": _metric(2.0, "lower", 0.0),
+                   "tok_per_s": _metric(5.0, "higher", None)})
+    assert compare(base, better) == []      # informational never gates
+
+
+def test_compare_fails_on_degraded_gated_metric():
+    base = _doc({"ratio": _metric(2.0, "higher", 0.02)})
+    ok = _doc({"ratio": _metric(1.97, "higher", 0.02)})
+    assert compare(base, ok) == []          # inside tolerance
+    bad = _doc({"ratio": _metric(1.9, "higher", 0.02)})
+    problems = compare(base, bad)
+    assert len(problems) == 1 and "ratio" in problems[0]
+    # 'lower' direction: exceeding the ceiling fails
+    base = _doc({"misses": _metric(3.0, "lower", 0.0)})
+    assert compare(base, _doc({"misses": _metric(4.0, "lower", 0.0)}))
+    assert compare(base, _doc({"misses": _metric(3.0, "lower", 0.0)})) == []
+
+
+def test_compare_fails_on_missing_gated_metric_and_schema_bump():
+    base = _doc({"ratio": _metric(2.0, "higher", 0.02),
+                 "tok_per_s": _metric(1000.0, "higher", None)})
+    # dropped gated measurement must not silently pass; dropped
+    # informational one is fine
+    problems = compare(base, _doc({}))
+    assert len(problems) == 1 and "ratio" in problems[0]
+    stale = _doc({"ratio": _metric(2.0, "higher", 0.02)},
+                 schema=SCHEMA_VERSION + 1)
+    problems = compare(stale, _doc({"ratio": _metric(2.0, "higher", 0.02)}))
+    assert len(problems) == 1 and "schema_version" in problems[0]
+
+
+# --------------------------------------------------------------------------
+# ratchet: gated keeps the better value, informational takes the fresh
+# --------------------------------------------------------------------------
+
+def test_ratchet_semantics():
+    old = _doc({"ratio": _metric(2.5, "higher", 0.02),
+                "misses": _metric(2.0, "lower", 0.0),
+                "tok_per_s": _metric(1000.0, "higher", None),
+                "retired": _metric(7.0, "higher", 0.0)})
+    new = _doc({"ratio": _metric(2.1, "higher", 0.02),    # worse
+                "misses": _metric(3.0, "lower", 0.0),     # worse
+                "tok_per_s": _metric(1200.0, "higher", None),
+                "fresh": _metric(1.0, "higher", 0.02)})
+    m = ratchet(old, new)["metrics"]
+    assert m["ratio"]["value"] == 2.5       # gated never loosens
+    assert m["misses"]["value"] == 2.0
+    assert m["tok_per_s"]["value"] == 1200.0    # informational refreshes
+    assert m["fresh"]["value"] == 1.0           # new metrics added
+    assert m["retired"]["value"] == 7.0         # gated history retained
+    # an improved fresh value wins the ratchet
+    new2 = _doc({"ratio": _metric(3.0, "higher", 0.02)})
+    assert ratchet(old, new2)["metrics"]["ratio"]["value"] == 3.0
+
+
+def test_dump_and_baseline_path(tmp_path):
+    path = baseline_path("serve", str(tmp_path))
+    assert path.endswith("BENCH_serve.json")
+    doc = _doc({"ratio": _metric(2.0, "higher", 0.02)})
+    _dump(doc, path)
+    assert json.load(open(path)) == doc
+    assert [p.name for p in tmp_path.iterdir()] == ["BENCH_serve.json"]
+
+
+def test_committed_baselines_are_valid():
+    """The files CI gates against must exist at the repo root, carry the
+    current schema, and have at least one gated metric each (a baseline
+    with no gated metrics gates nothing)."""
+    from benchmarks.bench_history import REPO_ROOT
+
+    for suite in ("serve", "runtime"):
+        with open(baseline_path(suite, REPO_ROOT)) as f:
+            doc = json.load(f)
+        assert doc["schema_version"] == SCHEMA_VERSION
+        gated = [n for n, s in doc["metrics"].items()
+                 if s["tolerance"] is not None]
+        assert gated, f"{suite}: no gated metrics in committed baseline"
+        for spec in doc["metrics"].values():
+            assert spec["direction"] in ("higher", "lower")

@@ -104,6 +104,46 @@ def test_registry_dump_json(tmp_path):
     assert json.loads(out.read_text())["k"] == 2
 
 
+def test_registry_dump_json_crash_mid_write_keeps_old_file(tmp_path,
+                                                          monkeypatch):
+    """Atomicity: a dump that dies mid-write must leave the previous
+    snapshot intact on disk (and no litter) — dashboards tailing the
+    file never see a truncated JSON."""
+    reg = Registry()
+    reg.counter("k").inc(2)
+    out = tmp_path / "m.json"
+    reg.dump_json(str(out))
+    before = out.read_text()
+
+    def boom(*a, **kw):
+        raise RuntimeError("simulated crash mid-serialization")
+
+    monkeypatch.setattr(json, "dump", boom)
+    with pytest.raises(RuntimeError):
+        reg.dump_json(str(out))
+    monkeypatch.undo()
+    assert out.read_text() == before            # old snapshot survives
+    assert list(tmp_path.iterdir()) == [out]    # no tmp litter
+
+
+def test_histogram_lifetime_count_sum_beyond_window():
+    """count/sum are MONOTONIC lifetime totals even after the percentile
+    window (512) wraps — the sampler differentiates them into rates, so
+    a windowed reset would fabricate negative traffic."""
+    from repro.obs import Histogram
+
+    h = Histogram(window=16)
+    n = 100                                     # >> window
+    for i in range(n):
+        h.observe(float(i))
+    s = h.summary()
+    assert s["count"] == n
+    assert s["sum"] == pytest.approx(sum(range(n)))
+    assert s["max"] == pytest.approx(n - 1)
+    # percentiles are over the recent window only (the last 16 values)
+    assert s["p50"] >= n - 16
+
+
 # --------------------------------------------------------------------------
 # tracer
 # --------------------------------------------------------------------------
@@ -173,6 +213,154 @@ def test_instrumented_jit_classifies_compile_vs_hit():
         reg_before.get("test.obsjit.cache_hits", 0) == 1
     assert snap["test.obsjit.compile_ms.count"] >= 2
     assert snap["test.obsjit.execute_ms.count"] >= 1
+
+
+def test_tracer_ring_overflow_feeds_registry_counter():
+    """Ring overwrites are data loss: each one must increment the
+    ``obs.trace.dropped`` registry counter so a sampler/SLO rule can
+    alarm on the drop rate, not just the export metadata."""
+    before = REGISTRY.counter("obs.trace.dropped").value
+    tr = Tracer(enabled=True, capacity=3)
+    for i in range(8):
+        tr.instant(f"e{i}", "scheduler")
+    assert tr.dropped == 5
+    assert REGISTRY.counter("obs.trace.dropped").value - before == 5
+
+
+def test_counter_events_export_and_validate():
+    """'C' (counter) events: numeric args, rendered as Perfetto counter
+    tracks, accepted by the schema validator; empty/non-numeric args
+    must be rejected."""
+    tr = Tracer(enabled=True)
+    tr.counter("serve.pending", "metrics", value=3)
+    tr.counter("tok_per_s", "metrics", value=812.5)
+    data = tr.chrome_trace()
+    assert validate_chrome_trace(data) == []
+    cs = [e for e in data["traceEvents"] if e["ph"] == "C"]
+    assert len(cs) == 2
+    assert cs[0]["args"] == {"value": 3.0}
+    bad = dict(data)
+    bad["traceEvents"] = data["traceEvents"] + [
+        {"name": "x", "ph": "C", "pid": 1, "tid": 0, "ts": 0.0,
+         "args": {}}]
+    assert validate_chrome_trace(bad)
+
+
+# --------------------------------------------------------------------------
+# sampler: tick cadence, rates, reset tolerance, export
+# --------------------------------------------------------------------------
+
+def test_sampler_tick_cadence_and_rates():
+    from repro.obs import Sampler
+
+    reg = Registry()
+    c = reg.counter("k.events")
+    smp = Sampler(registry=reg, every_ticks=2)
+    assert smp.tick() is not None       # first tick always samples
+    c.inc(10)
+    assert smp.tick() is None           # cadence: every 2nd tick
+    s = smp.tick()
+    assert s is not None and s.values["k.events"] == 10
+    assert s.rates["k.events"] > 0      # 10 events over the interval
+    # series() reads the retained ring
+    ser = smp.series("k.events")
+    assert [v for _, v in ser] == [0.0, 10.0]
+
+
+def test_sampler_counter_reset_skips_rate():
+    """A provider re-registration can make a counter DECREASE between
+    samples; that is a reset, not negative traffic — the rate for that
+    key must be absent, never negative (Prometheus semantics)."""
+    from repro.obs import Sampler
+
+    reg = Registry()
+
+    class Prov:
+        def __init__(self, n):
+            self.n = n
+
+        def metrics(self):
+            return {"done": self.n}
+
+    p = Prov(100)
+    reg.register_provider("x", p)
+    smp = Sampler(registry=reg)
+    smp.tick()
+    p2 = Prov(3)                        # fresh component, counter reset
+    reg.register_provider("x", p2)
+    s = smp.tick()
+    assert s.values["x.done"] == 3
+    assert "x.done" not in s.rates
+    p2.n = 7                            # and rates resume next sample
+    s = smp.tick()
+    assert s.rates["x.done"] > 0
+
+
+def test_sampler_ring_bounded_and_steady_rate():
+    from repro.obs import Sampler
+
+    reg = Registry()
+    c = reg.counter("k.n")
+    smp = Sampler(registry=reg, capacity=4)
+    for _ in range(10):
+        c.inc(5)
+        smp.tick()
+    assert len(smp.samples) == 4        # ring evicts oldest
+    assert smp.sample_count == 10       # monotonic
+    r = smp.steady_rate("k.n")
+    assert r is not None and r > 0
+    assert smp.steady_rate("missing.key") is None
+
+
+def test_sampler_jsonl_export_and_self_metrics(tmp_path):
+    from repro.obs import Sampler
+
+    reg = Registry()
+    reg.counter("k.n").inc(2)
+    smp = Sampler(registry=reg)
+    smp.tick()
+    smp.tick()
+    out = tmp_path / "samples.jsonl"
+    smp.export_jsonl(str(out))
+    lines = [json.loads(l) for l in out.read_text().splitlines()]
+    assert len(lines) == 2
+    assert lines[0]["values"]["k.n"] == 2
+    assert smp.metrics() == {"ticks": 2, "samples": 2, "retained": 2}
+
+
+def test_sampler_counter_tracks_mirror_into_tracer():
+    from repro.obs import Sampler
+
+    reg = Registry()
+    reg.counter("k.n").inc(4)
+    tr = Tracer(enabled=True)
+    smp = Sampler(registry=reg, tracer=tr,
+                  counter_tracks=(("k.n", "value"), ("k.n", "rate")))
+    smp.tick()
+    smp.tick()
+    cs = [e for e in tr.events if e.ph == "C"]
+    assert {e.name for e in cs} == {"k.n", "k.n/s"}
+    assert all(e.track == "metrics" for e in cs)
+    assert validate_chrome_trace(tr.chrome_trace()) == []
+
+
+def test_module_tick_hook_installs_and_uninstalls():
+    from repro.obs import Sampler, get_sampler, set_sampler
+    from repro.obs import sampler as sampler_mod
+
+    reg = Registry()
+    smp = Sampler(registry=reg)
+    prev = set_sampler(smp)
+    try:
+        sampler_mod.tick("test")
+        assert smp.ticks == 1
+        assert get_sampler() is smp
+        # installed sampler is a registry provider of its own cadence
+        assert reg.snapshot()["obs.sampler.ticks"] == 1
+    finally:
+        set_sampler(prev)
+    sampler_mod.tick("test")            # uninstalled: no-op, no error
+    assert smp.ticks == 1
 
 
 # --------------------------------------------------------------------------

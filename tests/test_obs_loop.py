@@ -1,0 +1,397 @@
+"""Closed-loop observability (PR 7): SLO rule/monitor hysteresis (unit +
+hypothesis property vs an independent reference model), SLOManager
+transition events/metrics/subscriber callbacks, BackpressureController
+save/restore semantics, the forced-overload control-invariant
+differential (backpressure-on greedy streams bit-identical to the
+uncontrolled twin), Autotuner.retune online re-sweep semantics, and the
+AutotuneController cooldown/apply-on-improvement behavior."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.models import transformer as T
+from repro.obs import (REGISTRY, AutotuneController, BackpressureController,
+                       Monitor, Registry, Rule, Sampler, SLOManager, Tracer,
+                       build_serve_loop, dispatch_imbalance_rule,
+                       set_sampler, set_tracer)
+from repro.runtime.autotune import Autotuner
+from repro.serve import Scheduler, SchedulerConfig
+
+
+# --------------------------------------------------------------------------
+# rule validation + extraction
+# --------------------------------------------------------------------------
+
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        Rule("r", key="k", op="!=")
+    with pytest.raises(ValueError):
+        Rule("r", key="k", source="median")
+    with pytest.raises(ValueError):
+        Rule("r", key="k", fire_after=0)
+    with pytest.raises(ValueError):
+        Rule("r", key="k", clear_after=0)
+    with pytest.raises(ValueError):
+        Rule("r")                       # needs key or value_fn
+
+
+def test_rule_sources_and_value_fn():
+    values, rates = {"a": 5.0}, {"a": 2.0}
+    assert Rule("v", key="a").extract(values, rates) == 5.0
+    assert Rule("r", key="a", source="rate").extract(values, rates) == 2.0
+    assert Rule("m", key="missing").extract(values, rates) is None
+    fn = Rule("f", value_fn=lambda v, r: v["a"] + r["a"])
+    assert fn.extract(values, rates) == 7.0
+
+
+# --------------------------------------------------------------------------
+# hysteresis: exact fire/clear semantics
+# --------------------------------------------------------------------------
+
+def test_monitor_fires_on_nth_breach_clears_on_mth_ok():
+    # SLO holds when value < 0; 1.0 breaches, -1.0 conforms
+    m = Monitor(Rule("r", key="k", op="<", threshold=0.0,
+                     fire_after=3, clear_after=2))
+    assert [m.observe(1.0) for _ in range(2)] == [None, None]
+    assert m.observe(1.0) == "fire"         # 3rd consecutive breach
+    assert m.firing
+    assert m.observe(1.0) is None           # already firing: no re-fire
+    assert m.observe(-1.0) is None
+    assert m.observe(-1.0) == "clear"       # 2nd consecutive OK
+    assert not m.firing
+
+
+def test_monitor_streak_resets():
+    m = Monitor(Rule("r", key="k", op="<", threshold=0.0,
+                     fire_after=2, clear_after=2))
+    # breach streak broken by a conforming sample: never fires
+    assert m.observe(1.0) is None
+    assert m.observe(-1.0) is None
+    assert m.observe(1.0) is None
+    assert m.observe(1.0) == "fire"
+    # ok streak broken by a breach: stays firing
+    assert m.observe(-1.0) is None
+    assert m.observe(1.0) is None
+    assert m.observe(-1.0) is None
+    assert m.observe(-1.0) == "clear"
+
+
+def test_monitor_hysteresis_property():
+    """Differential vs an independent reference model over random breach
+    patterns: transitions strictly alternate fire->clear, fire lands
+    exactly on the sample completing the fire_after-th consecutive
+    breach while not firing, clear exactly on the clear_after-th
+    consecutive OK while firing."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    def reference(seq, fire_after, clear_after):
+        firing, breaches, oks, out = False, 0, 0, []
+        for breach in seq:
+            if breach:
+                breaches, oks = breaches + 1, 0
+                fire = not firing and breaches == fire_after
+                firing = firing or fire
+                out.append("fire" if fire else None)
+            else:
+                oks, breaches = oks + 1, 0
+                clear = firing and oks == clear_after
+                firing = firing and not clear
+                out.append("clear" if clear else None)
+        return out
+
+    @settings(max_examples=200, deadline=None)
+    @given(seq=st.lists(st.booleans(), max_size=60),
+           fire_after=st.integers(1, 4), clear_after=st.integers(1, 4))
+    def check(seq, fire_after, clear_after):
+        m = Monitor(Rule("r", key="k", op="<", threshold=0.0,
+                         fire_after=fire_after, clear_after=clear_after))
+        got = [m.observe(1.0 if breach else -1.0) for breach in seq]
+        assert got == reference(seq, fire_after, clear_after)
+        transitions = [t for t in got if t]
+        # strict alternation starting with fire
+        assert transitions == (["fire", "clear"]
+                               * len(transitions))[:len(transitions)]
+        assert m.firing == (transitions[-1:] == ["fire"])
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# SLO manager: events, metrics, subscribers
+# --------------------------------------------------------------------------
+
+def test_slo_manager_transitions_metrics_and_subscribers():
+    reg = Registry()
+    tr = Tracer(enabled=True)
+    mgr = SLOManager([Rule("lat", key="ms", op="<", threshold=10.0,
+                           fire_after=2, clear_after=1)],
+                     registry=reg, tracer=tr)
+    calls = []
+
+    class Sub:
+        def on_fire(self, rule, value):
+            calls.append(("fire", rule.name, value))
+
+        def on_clear(self, rule, value):
+            calls.append(("clear", rule.name, value))
+
+    mgr.subscribe(Sub())
+    # namespace pre-declared at construction
+    assert reg.snapshot()["obs.slo.lat.firing"] == 0
+
+    assert mgr.evaluate({"ms": 50.0}, {}) == []
+    assert mgr.evaluate({"ms": 50.0}, {}) == ["lat:fire"]
+    assert mgr.evaluate({"ms": 50.0}, {}) == []     # no re-fire
+    assert mgr.evaluate({"ms": 1.0}, {}) == ["lat:clear"]
+    snap = reg.snapshot()
+    assert snap["obs.slo.lat.fired"] == 1
+    assert snap["obs.slo.lat.cleared"] == 1
+    assert snap["obs.slo.lat.breaches"] == 3
+    assert snap["obs.slo.lat.firing"] == 0
+    assert calls == [("fire", "lat", 50.0), ("clear", "lat", 1.0)]
+    evs = [(e.name, e.track) for e in tr.events]
+    assert evs == [("slo-fire", "slo"), ("slo-clear", "slo")]
+
+
+def test_slo_manager_missing_key_skips_hysteresis():
+    reg = Registry()
+    mgr = SLOManager([Rule("lat", key="ms", op="<", threshold=10.0,
+                           fire_after=2)], registry=reg,
+                     tracer=Tracer(enabled=False))
+    assert mgr.evaluate({"ms": 50.0}, {}) == []
+    # absent key: no state change, the breach streak survives the gap
+    assert mgr.evaluate({}, {}) == []
+    assert mgr.evaluate({"ms": 50.0}, {}) == ["lat:fire"]
+
+
+def test_slo_manager_rejects_duplicate_rule_names():
+    with pytest.raises(ValueError):
+        SLOManager([Rule("r", key="a"), Rule("r", key="b")],
+                   registry=Registry(), tracer=Tracer(enabled=False))
+
+
+# --------------------------------------------------------------------------
+# backpressure controller: save/restore semantics
+# --------------------------------------------------------------------------
+
+class _FakeSlots:
+    def __init__(self, paged):
+        self.paged = paged
+
+
+class _FakeSched:
+    """The knob surface BackpressureController actuates on."""
+
+    def __init__(self, paged=True):
+        self.admit_cap = None
+        self.preempt_override = None
+        self.slots = _FakeSlots(paged)
+        self._preempt = "recompute"
+
+    @property
+    def preempt_policy(self):
+        return self.preempt_override or self._preempt
+
+
+def test_backpressure_saves_and_restores_exactly():
+    reg = Registry()
+    sched = _FakeSched(paged=True)
+    ctrl = BackpressureController(sched, admit_cap=2, preempt="swap",
+                                  registry=reg, tracer=Tracer(enabled=False))
+    rule = Rule("queue_wait", key="k", op="<", threshold=0.0)
+    ctrl.on_fire(rule, 1.0)
+    assert ctrl.engaged
+    assert sched.admit_cap == 2
+    assert sched.preempt_override == "swap"
+    ctrl.on_fire(rule, 2.0)                 # idempotent while engaged
+    assert sched.admit_cap == 2
+    ctrl.on_clear(rule, 0.0)
+    assert not ctrl.engaged
+    assert sched.admit_cap is None          # exactly what was saved
+    assert sched.preempt_override is None
+    snap = reg.snapshot()
+    assert snap["obs.control.backpressure.engaged"] == 1
+    assert snap["obs.control.backpressure.released"] == 1
+    assert snap["obs.control.backpressure.active"] == 0
+
+
+def test_backpressure_ignores_other_rules_and_contiguous_preempt():
+    sched = _FakeSched(paged=False)
+    ctrl = BackpressureController(sched, registry=Registry(),
+                                  tracer=Tracer(enabled=False))
+    other = Rule("ttft_p95", key="k", op="<", threshold=0.0)
+    ctrl.on_fire(other, 1.0)
+    assert not ctrl.engaged and sched.admit_cap is None
+    ctrl.on_clear(other, 0.0)               # clear while not engaged: no-op
+    mine = Rule("queue_wait", key="k", op="<", threshold=0.0)
+    ctrl.on_fire(mine, 1.0)
+    assert sched.admit_cap == 1
+    assert sched.preempt_override is None   # no swap on contiguous pools
+
+
+def test_backpressure_rejects_starving_cap():
+    with pytest.raises(ValueError):
+        BackpressureController(_FakeSched(), admit_cap=0,
+                               registry=Registry())
+
+
+def test_build_serve_loop_wiring():
+    sched = _FakeSched()
+    smp, slo, ctrls = build_serve_loop(sched, install=False,
+                                       queue_wait_s=0.1)
+    assert len(ctrls) == 1 and isinstance(ctrls[0], BackpressureController)
+    assert slo.monitors["queue_wait"].rule.threshold == 0.1
+    # sampler -> manager is wired: a sample with no serve.* keys is a
+    # clean no-op through the whole chain
+    smp.tick()
+    assert slo.firing == {name: False for name in slo.monitors}
+
+
+# --------------------------------------------------------------------------
+# the control invariant: forced-overload differential
+# --------------------------------------------------------------------------
+
+def test_forced_overload_backpressure_streams_bit_identical():
+    """Greedy token streams with the closed loop engaged (queue-wait SLO
+    fires -> admissions capped + swap preempt -> clears on drain) must
+    be bit-identical to the uncontrolled twin: controllers change timing
+    and admission order pressure only, never outputs."""
+    cfg = configs.reduced_config("gemma-2b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_prompt, tail_new, block = 12, 32, 8
+    max_len = max_prompt + tail_new + 8
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(4, max_prompt + 1))
+               .astype(np.int32) for _ in range(8)]
+    mnts = [int(rng.integers(8, tail_new + 1)) for _ in prompts]
+    sc = SchedulerConfig(
+        num_slots=6, max_len=max_len, prefill_chunk=8,
+        cache_requests=False, allocator="paged", block_size=block,
+        num_blocks=(2 * max_len // block - 1) // 2, preempt="swap")
+
+    def serve(controlled):
+        sched = Scheduler(cfg, params, sc)
+        if controlled:
+            smp = Sampler()
+            slo = SLOManager(
+                [Rule("queue_wait", key="serve.queue_head_wait_s",
+                      op="<", threshold=1e-4, fire_after=2,
+                      clear_after=2)],
+                tracer=Tracer(enabled=False))
+            ctrl = BackpressureController(sched, admit_cap=1,
+                                          preempt="swap",
+                                          tracer=Tracer(enabled=False))
+            smp.add_listener(slo.on_sample)
+            slo.subscribe(ctrl)
+            prev = set_sampler(smp)
+        try:
+            for p, m in zip(prompts, mnts):
+                sched.submit([p], max_new_tokens=m)
+            done = sched.drain()
+        finally:
+            if controlled:
+                set_sampler(prev)
+        streams = {c.rid: c.tokens.tolist() for c in done}
+        return streams, (slo, ctrl, sched) if controlled else None
+
+    fired0 = REGISTRY.counter("obs.slo.queue_wait.fired").value
+    base, _ = serve(controlled=False)
+    ctl, (slo, ctrl, sched) = serve(controlled=True)
+    assert ctl == base, "controller changed the token streams"
+    fired = REGISTRY.counter("obs.slo.queue_wait.fired").value - fired0
+    assert fired >= 1, "SLO never fired under forced overload"
+    assert not slo.monitors["queue_wait"].firing and not ctrl.engaged
+    assert sched.admit_cap is None and sched.preempt_override is None
+
+
+# --------------------------------------------------------------------------
+# online autotune: retune semantics + controller
+# --------------------------------------------------------------------------
+
+def _fast_thunk(_cand):
+    return lambda: 0
+
+
+def test_retune_applies_only_on_improvement(tmp_path):
+    tuner = Autotuner(str(tmp_path / "cache.json"))
+    # incumbent is unbeatable (0 us): re-measurement keeps it
+    tuner.put("k.knob", 16, us=0.0)
+    value, improved = tuner.retune("k.knob", [16, 32], _fast_thunk)
+    assert (value, improved) == (16, False)
+    # incumbent is terrible: any real measurement wins and persists
+    tuner.put("k.knob", 16, us=1e12)
+    value, improved = tuner.retune("k.knob", [16, 32], _fast_thunk)
+    assert improved and value in (16, 32)
+    assert tuner.get("k.knob") == value
+    entry = tuner._cache["k.knob"]
+    assert entry["us"] < 1e12
+
+
+def test_retune_all_fail_keeps_incumbent_never_raises(tmp_path):
+    tuner = Autotuner(str(tmp_path / "cache.json"))
+
+    def broken(_cand):
+        def thunk():
+            raise RuntimeError("bad candidate")
+        return thunk
+
+    # no incumbent: nothing to keep, still no raise
+    assert tuner.retune("k.knob", [1, 2], broken) == (None, False)
+    tuner.put("k.knob", 8, us=5.0)
+    value, improved = tuner.retune("k.knob", [1, 2], broken)
+    assert (value, improved) == (8, False)
+    assert "resweep_failed" in tuner._cache["k.knob"]
+    assert tuner.get("k.knob") == 8         # incumbent value untouched
+
+
+def test_autotune_controller_cooldown_and_apply(tmp_path):
+    reg = Registry()
+
+    class FakeTuner:
+        def __init__(self):
+            self.calls = 0
+            self.result = (32, True)
+
+        def retune(self, key, candidates, make_thunk):
+            self.calls += 1
+            return self.result
+
+    tuner = FakeTuner()
+    applied = []
+    ctrl = AutotuneController(tuner, "k.knob", [16, 32], _fast_thunk,
+                              apply=applied.append, cooldown_s=3600.0,
+                              registry=reg, tracer=Tracer(enabled=False))
+    rule = dispatch_imbalance_rule("run[b32]")
+    other = Rule("queue_wait", key="k", op="<", threshold=0.0)
+    ctrl.on_fire(other, 1.0)                # wrong rule: ignored
+    assert tuner.calls == 0
+    ctrl.on_fire(rule, 2.0)
+    assert tuner.calls == 1 and applied == [32]
+    ctrl.on_fire(rule, 2.0)                 # inside cooldown: skipped
+    assert tuner.calls == 1
+    ctrl.on_clear(rule, 0.5)                # nothing to undo
+    ctrl._last_sweep = None                 # cooldown expired
+    tuner.result = (16, False)              # no improvement: not applied
+    ctrl.on_fire(rule, 2.0)
+    assert tuner.calls == 2 and applied == [32]
+    snap = reg.snapshot()
+    assert snap["obs.control.autotune.resweeps"] == 2
+    assert snap["obs.control.autotune.applied"] == 1
+
+
+def test_dispatch_imbalance_rule_value_fn():
+    rule = dispatch_imbalance_rule("run[b32]", ratio=1.0,
+                                   min_execute_ms=1.0)
+    c = "runtime.dispatch.bucket.run[b32].compile_ms"
+    e = "runtime.dispatch.bucket.run[b32].execute_ms"
+    # under min_execute_ms: no signal yet, sample skipped
+    assert rule.extract({c: 50.0, e: 0.5}, {}) is None
+    assert rule.extract({}, {}) is None
+    v = rule.extract({c: 25.0, e: 10.0}, {})
+    assert v == pytest.approx(2.5)
+    assert not rule.holds(v)                # compile 2.5x execute: breach
+    assert rule.holds(rule.extract({c: 5.0, e: 10.0}, {}))
