@@ -126,6 +126,9 @@ def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
     m["windowed_occupancy_ratio"] = _metric(
         idx["fig_serve.windowed_paged_vs_contiguous"]["occupancy_ratio"],
         "higher", 0.02)
+    m["shared_prefix_occupancy_ratio"] = _metric(
+        idx["fig_serve.shared_prefix"]["occupancy_ratio"],
+        "higher", 0.02)
     pp = idx["fig_serve.preempt_swap_vs_recompute"]
     m["overload_swap_occupancy"] = _metric(pp["occupancy_swap"],
                                            "higher", 0.02)

@@ -273,8 +273,14 @@ def paged_view(flat: KVCache, rows: Array, live_rows: int) -> KVCache:
 def paged_writeback(flat: KVCache, view: KVCache, rows: Array) -> KVCache:
     """Scatter an updated per-slot view back into the physical pool.
 
-    Mapped rows are unique across the page table (BlockPool invariant),
-    so their writes are deterministic; writes for unmapped view positions
+    A mapped physical row has at most ONE writer per step, so the
+    scatter is deterministic. That used to follow from blocks being
+    uniquely mapped; with copy-on-write prefix sharing a block may be
+    mapped read-shared under MANY slots (refcount > 1), and the
+    guarantee instead comes from the scheduler: a shared block is never
+    inside any slot's write span — the first write into one is preceded
+    by a CoW copy onto a fresh private block (serve/slots.py ensure()).
+    Writes for unmapped view positions
     (including whole dead slots) land in the trash block, which is never
     read unmasked. Ring writeback is the same scatter: a ring write at
     ``pos % V`` dirties exactly one view position, whose block the

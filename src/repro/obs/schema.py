@@ -28,6 +28,9 @@ SCHEDULER_STATS: Dict[str, type] = {
     "decode_steps": int, "chunk_steps": int, "generated_tokens": int,
     "prefill_tokens": int, "live_decode_slots": int, "preempted": int,
     "swapped_in": int, "swapped_out": int, "recomputed_decode_steps": int,
+    # prompt positions admitted already-written via prefix sharing
+    # (0 unless SchedulerConfig.prefix_sharing)
+    "prefix_shared_tokens": int,
     "pending": int, "live": int, "coalesced_waiting": int,
     "cache_hits": int, "cache_misses": int,
     "cache_hit_rate": float, "mean_occupancy": float,
@@ -59,6 +62,11 @@ SLOTS_STATS: Dict[str, type] = {
 PAGED_STATS: Dict[str, type] = {
     "page_groups": int, "blocks_total": int, "blocks_used": int,
     "blocks_free": int, "block_size": int, "block_utilization": float,
+    # prefix sharing / copy-on-write (all 0 when sharing is off —
+    # pre-declared so the keys never appear lazily)
+    "shared_blocks": int, "cow_copies": int, "prefix_shared_chunks": int,
+    "prefix_entries": int, "prefix_lookups": int, "prefix_hit_chunks": int,
+    "prefix_published": int, "prefix_evicted": int,
     "swapped_held": int, "swap_bytes_held": int, "swap_bytes_budget": int,
     "swap_rejected": int, "swap_bytes_out": int, "swap_bytes_in": int,
 }

@@ -102,6 +102,29 @@ def _spec(size: int, mode: str) -> bucketing.BucketSpec:
     return bucketing.BucketSpec(size=size, mode=mode)
 
 
+def _payload_key(payload: Dict) -> Tuple:
+    """Content key for a kernel payload (bulk-submit dedup). dtype +
+    shape ride along with the bytes for the same reason RequestCache.key
+    carries them: equal bytes alone collide across dtypes/shapes."""
+    parts: List[Tuple] = []
+    for k in sorted(payload):
+        v = payload[k]
+        if isinstance(v, (np.ndarray, jnp.ndarray, list, tuple)):
+            a = np.ascontiguousarray(v)
+            parts.append((k, a.tobytes(), a.dtype.str, a.shape))
+        else:
+            parts.append((k, v))
+    return tuple(parts)
+
+
+def _copy_result(res: Any) -> Any:
+    """Fresh arrays for a deduped duplicate: handing every requester the
+    SAME array would let one caller's in-place edit corrupt another's
+    result (the RequestCache aliasing bug, one layer down)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.copy() if isinstance(x, np.ndarray) else x, res)
+
+
 # --------------------------------------------------------------------------
 # cached batched building blocks
 # --------------------------------------------------------------------------
@@ -202,6 +225,32 @@ class KernelAdapter:
 
     # generic pipeline ---------------------------------------------------
     def run(self, payloads: List[Dict]) -> List[Any]:
+        """Dedup identical payloads (content hash — cheap next to a
+        dispatch), run the unique set through the bucketed pipeline,
+        fan results back out. A bulk submit repeating one hot read /
+        key array pays for ONE dispatch; duplicates receive fresh
+        array copies so no two requesters alias the same buffer."""
+        keys = []
+        for p in payloads:
+            try:
+                keys.append(_payload_key(p))
+            except TypeError:       # unhashable extra → never deduped
+                keys.append(object())
+        first: Dict[Any, int] = {}
+        uniq: List[int] = []
+        for i, k in enumerate(keys):
+            if k not in first:
+                first[k] = len(uniq)
+                uniq.append(i)
+        if len(uniq) == len(payloads):
+            return self._run_unique(payloads)
+        self.svc.deduped_requests += len(payloads) - len(uniq)
+        got = self._run_unique([payloads[i] for i in uniq])
+        return [got[first[k]] if i == uniq[first[k]]
+                else _copy_result(got[first[k]])
+                for i, k in enumerate(keys)]
+
+    def _run_unique(self, payloads: List[Dict]) -> List[Any]:
         groups = bucketing.group_by_key(
             [self.bucket_key(p) for p in payloads])
         results: List[Any] = [None] * len(payloads)
@@ -592,10 +641,12 @@ class KernelService:
         self._index = None
         self._adapters: Dict[str, KernelAdapter] = {
             a.name: a(self) for a in _ADAPTERS}
-        # per-kernel traffic: requests routed / bulk submits seen
+        # per-kernel traffic: requests routed / bulk submits seen /
+        # duplicate payloads served from a sibling's dispatch
         self.request_counts = collections.Counter(
             dict.fromkeys(self.kernels, 0))
         self.submit_count = 0
+        self.deduped_requests = 0
         obs_metrics.REGISTRY.register_provider("runtime.service", self)
 
     @property
@@ -616,7 +667,8 @@ class KernelService:
     def metrics(self) -> Dict[str, Any]:
         """Registry 'runtime.service' provider: per-kernel request
         traffic (``requests.<kernel>``) + bulk submit count."""
-        out: Dict[str, Any] = {"submits": self.submit_count}
+        out: Dict[str, Any] = {"submits": self.submit_count,
+                               "deduped_requests": self.deduped_requests}
         out.update({f"requests.{k}": int(v)
                     for k, v in sorted(self.request_counts.items())})
         return out

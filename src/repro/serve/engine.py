@@ -279,6 +279,24 @@ def upload_block_rows(paged, saved, rows):
             for key, c in paged.items()}
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_block_rows(paged, src_rows, dst_rows):
+    """Device-side block copy: duplicate the physical ``src_rows`` into
+    ``dst_rows`` on every paged cache leaf — the copy half of
+    copy-on-write (PageTable.cow_block picks the blocks; this moves the
+    bytes without a host round-trip). Row vectors use the same
+    PageTable.block_rows layout as gather/upload and may be pow2-padded
+    with trash->trash pairs (the trash block copies onto itself:
+    harmless, deterministic)."""
+    from repro.models.attention import KVCache
+
+    return {key: KVCache(
+        k=c.k.at[:, dst_rows].set(jnp.take(c.k, src_rows, axis=1)),
+        v=c.v.at[:, dst_rows].set(jnp.take(c.v, src_rows, axis=1)),
+        pos=c.pos.at[:, dst_rows].set(jnp.take(c.pos, src_rows, axis=1)))
+            for key, c in paged.items()}
+
+
 def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
              *, temperature: float = 0.0, eos_token: Optional[int] = None,
              prefill_chunk: int = 32, cache_slots: int = 0,

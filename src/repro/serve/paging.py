@@ -23,9 +23,21 @@ Unmapped logical blocks point at a single TRASH block appended past the
 pool (physical index ``num_blocks``): gathers through a trash row are
 masked to the empty-slot encoding (k=v=0, pos=-1), and scatters of rows
 the model computed for dead/unmapped positions land there instead of
-corrupting live blocks. Mapped physical blocks are unique across the
-table (the double-assignment invariant the property tests pin), so every
-scatter over mapped rows is deterministic.
+corrupting live blocks.
+
+Sharing (prefix reuse): blocks carry *refcounts*. ``alloc`` hands out a
+block at refcount 1; ``ref`` lets a second slot (or the ``PrefixIndex``)
+map the same physical block read-shared; ``free`` drops one reference
+and only returns the block to the free list at refcount 0. A block may
+therefore be mapped under several page-table rows at once — the old
+"mapped physical blocks are unique" invariant is replaced by a refcount
+agreement invariant (mapping count + index holds == refcount, checked by
+``check_invariants``). Scatters over shared rows stay deterministic *in
+value* because every sharer writes back exactly the bytes it gathered
+(the only row a step modifies is the current write position, which lives
+in a private block — ``cow_block`` copies a shared block to a fresh one
+before the first write into it, so no sharer ever observes another's
+write).
 
 Ring mode (``ring=True``): sliding-window attention layers keep a ring
 buffer of ``window`` positions addressed ``pos % window``. A ring slot's
@@ -64,9 +76,14 @@ import numpy as np
 
 
 class BlockPool:
-    """Free list of ``num_blocks`` physical cache blocks of ``block_size``
-    positions each. LIFO reuse (like the slot free list) keeps hot blocks
-    hot; ``allocated`` is the double-assignment guard."""
+    """Refcounted free list of ``num_blocks`` physical cache blocks of
+    ``block_size`` positions each. LIFO reuse (like the slot free list)
+    keeps hot blocks hot. ``alloc`` hands a block out at refcount 1;
+    ``ref`` adds a sharer; ``free`` (== ``unref``) drops one reference
+    and only returns the block to the free list when the count reaches
+    zero — so a prefix block shared by many slots survives until the
+    last sharer lets go. ``allocated`` stays the double-assignment
+    guard for the free list itself."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 1 or block_size < 1:
@@ -76,6 +93,7 @@ class BlockPool:
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self.allocated = np.zeros(num_blocks, bool)
+        self.refs = np.zeros(num_blocks, np.int32)
 
     @property
     def free_count(self) -> int:
@@ -85,21 +103,59 @@ class BlockPool:
     def used_count(self) -> int:
         return self.num_blocks - len(self._free)
 
+    @property
+    def shared_count(self) -> int:
+        """Blocks currently held by more than one reference."""
+        return int(np.sum(self.refs > 1))
+
+    def _check_id(self, block: int):
+        """Reject out-of-range ids with ValueError (never IndexError, and
+        never numpy negative indexing: ``free(-1)`` used to silently free
+        the LAST block and push ``-1`` onto the free list, so a later
+        ``alloc()`` returned ``-1`` and every derived flat row aliased
+        another slot's KV)."""
+        if not 0 <= block < self.num_blocks:
+            raise ValueError(f"block id {block} outside pool "
+                             f"[0, {self.num_blocks})")
+
     def alloc(self) -> Optional[int]:
-        """Claim one block; None when the pool is exhausted."""
+        """Claim one block (refcount 1); None when the pool is
+        exhausted."""
         if not self._free:
             return None
         b = self._free.pop()
         if self.allocated[b]:
             raise RuntimeError(f"block {b} double-assigned")
         self.allocated[b] = True
+        self.refs[b] = 1
         return b
 
-    def free(self, block: int):
+    def ref(self, block: int):
+        """Add one reference to an allocated block (read-shared map)."""
+        self._check_id(block)
+        if not self.allocated[block]:
+            raise ValueError(f"cannot ref unallocated block {block}")
+        self.refs[block] += 1
+
+    def refcount(self, block: int) -> int:
+        self._check_id(block)
+        return int(self.refs[block])
+
+    def free(self, block: int) -> bool:
+        """Drop one reference; the block returns to the free list only
+        at refcount 0. Returns True when this call actually freed it."""
+        self._check_id(block)
         if not self.allocated[block]:
             raise ValueError(f"block {block} is not allocated")
+        self.refs[block] -= 1
+        if self.refs[block] > 0:
+            return False
         self.allocated[block] = False
         self._free.append(block)
+        return True
+
+    # ``unref`` is the refcount-native name; ``free`` predates sharing.
+    unref = free
 
 
 class PageTable:
@@ -175,12 +231,79 @@ class PageTable:
         return True, new
 
     def free_slot(self, slot: int) -> List[int]:
-        """Unmap and free every block of ``slot`` (retire/preempt)."""
-        freed = [int(b) for b in self.table[slot] if b != self.trash]
-        for b in freed:
+        """Unmap ``slot`` and drop its reference on every block it held
+        (retire/preempt). Returns the blocks *released from this slot* —
+        shared blocks stay allocated for their remaining sharers (and
+        the PrefixIndex), only refcount-0 blocks hit the free list."""
+        released = [int(b) for b in self.table[slot] if b != self.trash]
+        for b in released:
             self.pool.free(b)
         self.table[slot] = self.trash
-        return freed
+        return released
+
+    # -- prefix sharing / copy-on-write ---------------------------------
+
+    def map_shared(self, slot: int, blocks: Sequence[int]):
+        """Map ``blocks`` (already-allocated physical ids, e.g. a prefix
+        hit from the PrefixIndex) as the logical prefix of ``slot``,
+        read-shared: each gains one reference. The target logical slots
+        must be unmapped."""
+        if len(blocks) > self.blocks_per_slot:
+            raise ValueError(f"{len(blocks)} shared blocks into a slot "
+                             f"of {self.blocks_per_slot}")
+        for lb, b in enumerate(blocks):
+            if self.table[slot, lb] != self.trash:
+                raise RuntimeError(f"slot {slot} logical block {lb} is "
+                                   f"already mapped")
+            self.pool.ref(int(b))       # raises on unallocated / bad id
+            self.table[slot, lb] = int(b)
+
+    def is_shared(self, slot: int, lb: int) -> bool:
+        b = int(self.table[slot, lb])
+        return b != self.trash and self.pool.refs[b] > 1
+
+    def write_blocks(self, slot: int, lo_pos: int, hi_pos: int) -> List[int]:
+        """Logical blocks an upcoming write over positions
+        [``lo_pos``, ``hi_pos``] will touch — the set a caller must CoW
+        if shared. Ring mode reduces positions mod the ring (a wrapped
+        write lands at ``pos % slot_positions``, possibly inside a
+        shared prefix block); a span covering the whole ring touches
+        every block."""
+        if hi_pos < lo_pos:
+            raise ValueError(f"empty write span [{lo_pos}, {hi_pos}]")
+        if self.ring and hi_pos - lo_pos + 1 >= self.slot_positions:
+            return list(range(self.blocks_per_slot))
+        if self.ring:
+            vps = {p % self.slot_positions
+                   for p in range(lo_pos, hi_pos + 1)}
+            return sorted({vp // self.block_size for vp in vps})
+        hi = min(hi_pos, self.slot_positions - 1)
+        if lo_pos > hi:
+            return []
+        return list(range(lo_pos // self.block_size,
+                          hi // self.block_size + 1))
+
+    def cow_block(self, slot: int, lb: int) -> Optional[Tuple[int, int]]:
+        """Give ``slot`` a private copy of shared logical block ``lb``:
+        allocate a fresh physical block, remap, and drop this slot's
+        reference on the old one (its other sharers keep theirs).
+        Returns (old_phys, new_phys) — the caller must copy the old
+        block's device rows into the new one (engine.copy_block_rows)
+        before the next step reads them — or None when the pool is
+        exhausted (state unchanged; the caller preempts or retries)."""
+        old = int(self.table[slot, lb])
+        if old == self.trash:
+            raise RuntimeError(f"cow of unmapped logical block {lb} "
+                               f"of slot {slot}")
+        if self.pool.refs[old] <= 1:
+            raise RuntimeError(f"cow of private block {old} (slot {slot}, "
+                               f"logical {lb})")
+        new = self.pool.alloc()
+        if new is None:
+            return None
+        self.table[slot, lb] = new
+        self.pool.free(old)             # drop our share; old stays alive
+        return old, new
 
     # -- swap-out preemption --------------------------------------------
 
@@ -197,6 +320,10 @@ class PageTable:
         if mapped.size and not (mapped == np.arange(mapped.size)).all():
             raise RuntimeError(f"slot {slot} mapping is not a logical "
                                f"prefix: {row.tolist()}")
+        # Shared blocks are *released*, not stolen: free() only drops this
+        # slot's reference, so other sharers (and the PrefixIndex) keep
+        # the block — the victim's bytes were gathered to host before
+        # this call, a copy, never a steal.
         freed = self.free_slot(slot)
         return row, freed
 
@@ -248,15 +375,27 @@ class PageTable:
 
     # -- introspection ---------------------------------------------------
 
-    def check_invariants(self):
-        """No physical block mapped twice; table and pool free list agree.
-        (Exercised by the property tests on every operation.) Raises
-        RuntimeError — must fire under ``python -O`` too."""
+    def check_invariants(self, external_refs: Optional[np.ndarray] = None):
+        """Refcount agreement: every block's mapping count in the table,
+        plus any references held outside it (``external_refs`` — e.g.
+        the PrefixIndex's holds), equals ``pool.refs``; refcount > 0 iff
+        allocated; the free list is exactly the unallocated blocks, no
+        duplicates. (Exercised by the property tests on every
+        operation.) Raises RuntimeError — must fire under ``python -O``
+        too."""
         mapped = self.table[self.table != self.trash]
-        if len(mapped) != len(set(mapped.tolist())):
-            raise RuntimeError("physical block mapped to two logical blocks")
-        if set(mapped.tolist()) != set(np.flatnonzero(
-                self.pool.allocated).tolist()):
+        counts = np.bincount(mapped, minlength=self.pool.num_blocks)
+        if external_refs is not None:
+            counts = counts + np.asarray(external_refs, np.int64)
+        if not (counts == self.pool.refs).all():
+            raise RuntimeError("table/index mapping counts disagree with "
+                               "pool refcounts")
+        if not ((self.pool.refs > 0) == self.pool.allocated).all():
+            raise RuntimeError("refcount > 0 iff allocated violated")
+        free = self.pool._free
+        if len(free) != len(set(free)):
+            raise RuntimeError("duplicate block on the free list")
+        if set(free) != set(np.flatnonzero(~self.pool.allocated).tolist()):
             raise RuntimeError("table / pool free list disagree")
 
     def stats(self) -> Dict[str, Any]:
@@ -266,7 +405,126 @@ class PageTable:
                 "blocks_used": used,
                 "blocks_free": self.pool.num_blocks - used,
                 "block_size": self.block_size,
-                "block_utilization": used / self.pool.num_blocks}
+                "block_utilization": used / self.pool.num_blocks,
+                "shared_blocks": self.pool.shared_count}
+
+
+# ---------------------------------------------------------------------------
+# prefix index (hash of block-aligned prompt chunks -> physical blocks)
+# ---------------------------------------------------------------------------
+
+class PrefixIndex:
+    """LRU map from a *chained* hash of block-aligned prompt-token chunks
+    to the physical blocks holding that chunk's KV, one block per
+    page-table group (keyed by view length).
+
+    The hash chains (digest of chunk i folds in chunk i-1's digest)
+    because KV at a position depends on the entire prefix before it —
+    two prompts sharing chunk i's tokens but diverging earlier must NOT
+    share chunk i's blocks. Matching therefore walks chunks 0, 1, ...
+    and stops at the first miss.
+
+    The index itself is a *reference holder*: the owning backing refs a
+    block once per entry it appears in, so published blocks survive
+    their donor's retirement. Entries are bounded (``capacity``, LRU)
+    and evictable under pool pressure — evicting an entry only returns
+    blocks nobody else maps (refcount reaching 0); blocks still shared
+    by live slots merely lose their index hold.
+
+    Pure bookkeeping: the backing does the pool ref/unref around
+    ``publish``/``evict_lru`` (it owns the per-group pools)."""
+
+    def __init__(self, capacity: int = 512):
+        if capacity < 1:
+            raise ValueError(f"need capacity >= 1, got {capacity}")
+        from collections import OrderedDict
+        self.capacity = capacity
+        self._entries: "OrderedDict[bytes, Dict[int, int]]" = OrderedDict()
+        self.lookups = 0        # match() calls
+        self.hit_chunks = 0     # chunks matched, cumulative
+        self.published = 0      # entries inserted, cumulative
+        self.evicted = 0        # entries evicted (LRU or pressure)
+
+    @staticmethod
+    def chunk_keys(tokens: Sequence[int], block_size: int,
+                   max_chunks: int) -> List[bytes]:
+        """Chained digests of the leading full ``block_size`` chunks of
+        ``tokens`` (at most ``max_chunks``)."""
+        import hashlib
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        n = min(len(toks) // block_size, max(max_chunks, 0))
+        keys: List[bytes] = []
+        digest = b""
+        for i in range(n):
+            chunk = toks[i * block_size:(i + 1) * block_size]
+            digest = hashlib.blake2b(digest + chunk.tobytes(),
+                                     digest_size=16).digest()
+            keys.append(digest)
+        return keys
+
+    def match(self, keys: Sequence[bytes]) -> List[Dict[int, int]]:
+        """Longest indexed prefix of ``keys``: per-chunk
+        {view_len: physical block} dicts, stopping at the first miss.
+        Hits refresh LRU order."""
+        out: List[Dict[int, int]] = []
+        for k in keys:
+            entry = self._entries.get(k)
+            if entry is None:
+                break
+            self._entries.move_to_end(k)
+            out.append(entry)
+        self.lookups += 1
+        self.hit_chunks += len(out)
+        return out
+
+    def publish(self, key: bytes, blocks: Dict[int, int]) -> bool:
+        """Insert ``key`` -> ``blocks`` if absent. Returns True when
+        inserted (the caller must have ref'd every block first); False
+        when the chunk is already indexed (concurrent prefills of the
+        same new prefix: first publisher wins)."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return False
+        self._entries[key] = dict(blocks)
+        self.published += 1
+        return True
+
+    def evict_lru(self, keep: Optional[set] = None) \
+            -> Optional[Dict[int, int]]:
+        """Drop the least-recently-used entry whose key is not in
+        ``keep``, returning its blocks so the caller can unref them;
+        None when nothing is evictable (empty, or only kept entries
+        remain — an admission must not evict the very chain it is about
+        to map)."""
+        for key in self._entries:           # LRU -> MRU order
+            if not keep or key not in keep:
+                blocks = self._entries.pop(key)
+                self.evicted += 1
+                return blocks
+        return None
+
+    def holds(self, num_blocks_by_view: Dict[int, int]) \
+            -> Dict[int, np.ndarray]:
+        """Per-group reference counts this index holds, as
+        {view_len: int64[num_blocks]} — the ``external_refs`` argument
+        of PageTable.check_invariants."""
+        out = {vl: np.zeros(n, np.int64)
+               for vl, n in num_blocks_by_view.items()}
+        for blocks in self._entries.values():
+            for vl, b in blocks.items():
+                if vl in out:
+                    out[vl][b] += 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        return {"prefix_entries": len(self._entries),
+                "prefix_lookups": self.lookups,
+                "prefix_hit_chunks": self.hit_chunks,
+                "prefix_published": self.published,
+                "prefix_evicted": self.evicted}
 
 
 # ---------------------------------------------------------------------------

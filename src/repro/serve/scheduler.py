@@ -69,6 +69,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -134,6 +135,17 @@ class SchedulerConfig:
     # hit OOB -> preempt); 'reserved' books blocks_for(prompt + max_new)
     # at admission, so admitted traffic can never be preempted (QoS).
     admission: str = "optimistic"
+    # paged: share block-aligned prompt prefixes across requests through
+    # a refcounted PrefixIndex (serve.paging) — an admitted prompt whose
+    # leading chunks are indexed maps those blocks read-shared and starts
+    # prefill past them; copy-on-write keeps sharers isolated. Greedy
+    # streams stay bit-identical to unshared (the shared region is
+    # chunk-aligned, so the remaining prefill chunks at the same
+    # offsets an unshared run would).
+    prefix_sharing: bool = False
+    # prefix_sharing: LRU entry bound on the prefix index (each entry
+    # holds one block per page-table group alive).
+    prefix_index_capacity: int = 512
 
 
 @dataclasses.dataclass
@@ -252,6 +264,12 @@ class RequestCache:
         return got
 
     def put(self, key: Tuple, tokens: np.ndarray, reason: str):
+        # defensive copy, frozen: the caller (and the original
+        # requester's Completion) may hold the array we were handed —
+        # memoizing it by reference would let `completion.tokens[0] = x`
+        # corrupt every future hit. get() consumers copy on the way out.
+        tokens = np.asarray(tokens, np.int32).copy()
+        tokens.setflags(write=False)
         self._d[key] = (tokens, reason)
         self._d.move_to_end(key)
         while len(self._d) > self.maxsize:
@@ -269,7 +287,7 @@ _COUNTER_KEYS = (
     "submitted", "admitted", "completed", "steps", "decode_steps",
     "chunk_steps", "generated_tokens", "prefill_tokens",
     "live_decode_slots", "preempted", "swapped_in", "swapped_out",
-    "recomputed_decode_steps",
+    "recomputed_decode_steps", "prefix_shared_tokens",
 )
 
 
@@ -288,13 +306,25 @@ class Scheduler:
             if getattr(sched, field) not in allowed:
                 raise ValueError(f"SchedulerConfig.{field}="
                                  f"{getattr(sched, field)!r} not in {allowed}")
+        if sched.prefix_sharing and sched.allocator != "paged":
+            raise ValueError("prefix_sharing requires allocator='paged' "
+                             "(blocks are the sharing granule)")
+        # shared prefixes must end on a chunk boundary AND a block
+        # boundary: the sharer skips whole chunk steps and maps whole
+        # blocks, so only lcm-aligned prefixes keep the remaining
+        # prefill chunking (and so the greedy stream) bit-identical to
+        # an unshared run.
+        prefix_align = math.lcm(sched.prefill_chunk, sched.block_size)
         self.slots = SlotManager(cfg, sched.num_slots, sched.max_len,
                                  paged=sched.allocator == "paged",
                                  block_size=sched.block_size,
                                  num_blocks=sched.num_blocks,
                                  paged_window=sched.paged_window_attn,
                                  num_window_blocks=sched.num_window_blocks,
-                                 swap_bytes_budget=sched.swap_bytes_budget)
+                                 swap_bytes_budget=sched.swap_bytes_budget,
+                                 prefix_sharing=sched.prefix_sharing,
+                                 prefix_align=prefix_align,
+                                 prefix_capacity=sched.prefix_index_capacity)
         self._queue: "collections.deque[_Slot]" = collections.deque()
         self._by_slot: Dict[int, _Slot] = {}
         self._inflight: Dict[Tuple, List[int]] = {}
@@ -360,9 +390,14 @@ class Scheduler:
         rids = []
         # user-input feasibility checks raise ValueError (not assert:
         # they must hold under `python -O` too — the pool's progress
-        # guarantee depends on them)
+        # guarantee depends on them). The WHOLE batch is validated
+        # before anything is enqueued: a mid-batch failure must not
+        # leave earlier prompts admitted as orphans whose rids the
+        # caller never received (they would complete into `results`
+        # with nobody to pop them).
         if mnt < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        batch = []
         for p in prompts:
             p = np.asarray(p, np.int32).reshape(-1)
             if not 1 <= len(p) <= self.sched.max_len - mnt:
@@ -377,6 +412,8 @@ class Scheduler:
                 why = self.slots.fits_pool(len(p) + mnt)
                 if why is not None:
                     raise ValueError(why)
+            batch.append(p)
+        for p in batch:
             rid = self._next_rid
             self._next_rid += 1
             self._tl[rid] = _Timeline(submit_t=time.perf_counter())
@@ -514,9 +551,25 @@ class Scheduler:
                 need = len(st.prompt) + (
                     st.max_new_tokens
                     if self.sched.admission == "reserved" else 0)
-                if not self.slots.can_admit(need):
+                # prefix sharing needs the prompt (to match the index)
+                # and the request's full span (ring groups only share
+                # when the span fits the ring, so no wrap can ever
+                # write through a shared block)
+                span = len(st.prompt) + st.max_new_tokens
+                if not self.slots.can_admit(need, prompt=st.prompt,
+                                            span=span):
                     return
-                slot = self.slots.alloc(st.rid, prompt_len=need)
+                slot = self.slots.alloc(st.rid, prompt_len=need,
+                                        prompt=st.prompt, span=span)
+                start = self.slots.prefill_start(slot)
+                if start:
+                    # the leading `start` positions were admitted mapped
+                    # to index-held blocks: their KV already exists, so
+                    # prefill resumes past them (chunk-aligned, so the
+                    # remaining chunking is identical to an unshared run)
+                    st.ctx = start
+                    st.chunk_tokens = start
+                    self.counters["prefix_shared_tokens"] += start
             self._queue.popleft()
             st.admit_seq = self._next_seq
             self._next_seq += 1
@@ -617,7 +670,12 @@ class Scheduler:
                 # outside the assert (python -O strips assert statements
                 # — the mapping itself must not depend on them).
                 for s in need:
-                    ok = self.slots.ensure(s, self._by_slot[s].ctx + ch - 1)
+                    # write_from bounds the copy-on-write scan to the
+                    # chunk's actual write span [ctx, ctx+ch-1] — which
+                    # by construction starts at/after the slot's shared
+                    # prefix, so admission-path writes never trigger CoW
+                    ok = self.slots.ensure(s, self._by_slot[s].ctx + ch - 1,
+                                           write_from=self._by_slot[s].ctx)
                     assert ok, "prefill chunk outgrew the admission mapping"
             m = len(need)
             bsz = bucketing.round_up_pow2(m, 1)
@@ -688,6 +746,12 @@ class Scheduler:
                 # the prefill phase ends at the first sampled token
                 self._phase_end(s)
                 self._phase_begin(s, "decode", st.rid)
+                # publish the prompt's chunk-consumed prefix blocks to
+                # the prefix index now that their KV is fully written
+                # (no-op unless prefix_sharing; idempotent per prompt)
+                self.slots.register_prefix(
+                    s, st.prompt, len(st.prompt) + st.max_new_tokens,
+                    st.chunk_tokens)
             eos = (self.sched.eos_token is not None
                    and tok == self.sched.eos_token)
             if eos or len(st.out) >= st.max_new_tokens:

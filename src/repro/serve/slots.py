@@ -51,7 +51,8 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.runtime import bucketing
 from repro.serve import engine
-from repro.serve.paging import BlockPool, PageTable, SwapEntry, SwapStore
+from repro.serve.paging import (BlockPool, PageTable, PrefixIndex,
+                                SwapEntry, SwapStore)
 
 _SLOT_AXIS = 1      # every per_slot_pos cache leaf: (periods, B, ...)
 
@@ -149,21 +150,35 @@ class _ContiguousBacking:
         return sum(self.num_slots * _attn_view_len(s, self.cache_slots)
                    for s in self.cfg.pattern if s.mixer == "attn")
 
-    def can_admit(self, prompt_len: int) -> bool:
+    def can_admit(self, prompt_len: int, prompt=None,
+                  span: Optional[int] = None) -> bool:
         return True                     # a free slot is the only gate
 
     def fits_pool(self, n_positions: int) -> Optional[str]:
         return None                     # rows are pre-reserved
 
-    def alloc_reset(self, slot: int, prompt_len: int):
+    def alloc_reset(self, slot: int, prompt_len: int, prompt=None,
+                    span: Optional[int] = None) -> int:
         self.caches = _reset(self.caches, self._template,
                              jnp.asarray([slot], jnp.int32))
+        return 0                        # no prefix sharing: prefill from 0
 
-    def ensure(self, slot: int, upto_pos: int) -> bool:
+    def ensure(self, slot: int, upto_pos: int,
+               write_from: Optional[int] = None) -> bool:
         return True                     # rows are pre-reserved
 
     def release_slot(self, slot: int) -> List[int]:
         return []                       # nothing block-granular to free
+
+    def prefill_start(self, slot: int) -> int:
+        return 0                        # no prefix sharing
+
+    def register_prefix(self, slot: int, prompt, span: int,
+                        upto_tokens: int) -> int:
+        return 0                        # no prefix sharing
+
+    def flush_prefix(self) -> int:
+        return 0
 
     def gather(self, idx):
         return _gather(self.caches, jnp.asarray(idx, jnp.int32))
@@ -223,7 +238,10 @@ class _PagedBacking:
                  block_size: int, num_blocks: Optional[int],
                  paged_window: bool = True,
                  num_window_blocks: Optional[int] = None,
-                 swap_bytes_budget: Optional[int] = None):
+                 swap_bytes_budget: Optional[int] = None,
+                 prefix_sharing: bool = False,
+                 prefix_align: Optional[int] = None,
+                 prefix_capacity: int = 512):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_slots = cache_slots
@@ -261,6 +279,24 @@ class _PagedBacking:
         self.position_capacity = (g_global.pool.num_blocks * block_size
                                   if g_global else num_slots * cache_slots)
         self.swaps = SwapStore(max_bytes=swap_bytes_budget)
+        # prefix sharing: only sound when EVERY layer's per-position state
+        # is paged attention KV — a dense recurrent leaf (SSM state, an
+        # unpaged ring) is a function of the whole prefix that skipping
+        # prefill would leave stale
+        shareable = (all(s.mixer == "attn" for s in cfg.pattern)
+                     and len(self.key_view) == len(cfg.pattern))
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(capacity=prefix_capacity)
+            if prefix_sharing and shareable else None)
+        # shared_pos must stay aligned to the scheduler's prefill-chunk
+        # quantum (lcm'd with the block size by the caller): chunk-step
+        # and decode-ramp KV are not interchangeable bitwise, and chunk
+        # boundaries are absolute — so a sharer's remaining prefill must
+        # chunk at the same offsets the unshared run would
+        self.prefix_align = max(prefix_align or block_size, block_size)
+        self._shared_pos: Dict[int, int] = {}   # slot -> prefill start
+        self.cow_copies = 0         # CoW block copies, cumulative
+        self.shared_chunks_mapped = 0   # chunks admitted read-shared
         # one-slot dense snapshot size is a constant (the template IS
         # that snapshot's shape): precompute for swap_bytes_estimate
         self._dense_slot_bytes = int(sum(
@@ -280,11 +316,142 @@ class _PagedBacking:
                                                          self.cache_slots)
         return total
 
+    # -- prefix sharing --------------------------------------------------
+
+    def _share_cap(self, prompt_len: int, span: int) -> int:
+        """Leading blocks of a ``prompt_len`` prompt eligible for
+        read-sharing, given the request will write ``span`` positions
+        total (prompt + generation budget). The block holding the last
+        prompt position stays private (its KV is written during this
+        request's prefill/decode), and a ring group only shares when the
+        whole span fits its ring — a wrapped write would land inside the
+        shared prefix, forcing a CoW the reserved-admission path could
+        not absorb. 0 disables sharing for this request."""
+        if self.prefix is None or prompt_len < 2:
+            return 0
+        cap = (prompt_len - 1) // self.block_size
+        for g in self.groups.values():
+            if g.ring:
+                if span > g.view_len:
+                    return 0
+                cap = min(cap, g.view_len // self.block_size)
+            else:
+                cap = min(cap, g.pt.blocks_per_slot)
+        return max(cap, 0)
+
+    def _match_shared(self, prompt, prompt_len: int, span: int) \
+            -> Tuple[int, List[Dict[int, int]], List[bytes]]:
+        """Longest admissible shared prefix for ``prompt``: number of
+        blocks (aligned down to the prefill-chunk quantum), the per-chunk
+        {view_len: block} entries, and the chunk digests (LRU-refreshed —
+        reclaim spares them)."""
+        cap = self._share_cap(prompt_len, span)
+        if cap <= 0:
+            return 0, [], []
+        keys = PrefixIndex.chunk_keys(prompt, self.block_size, cap)
+        hit = self.prefix.match(keys)
+        # align the shared region down to whole prefill chunks
+        step = self.prefix_align // self.block_size
+        n = (len(hit) // max(step, 1)) * max(step, 1)
+        return n, hit[:n], keys
+
+    def _reclaim(self, g: _PageGroup, need: int,
+                 keep: Sequence[bytes] = ()) -> bool:
+        """Free blocks for ``need`` new mappings in group ``g`` by
+        evicting cold PrefixIndex entries (skipping ``keep`` — the chain
+        the current admission is about to map). Evicting an entry only
+        liberates blocks no live slot still shares; the loop runs until
+        the group can map or the index is dry."""
+        if self.prefix is None:
+            return g.pt.can_map(need)
+        keep_set = set(keep)
+        while not g.pt.can_map(need):
+            dropped = self.prefix.evict_lru(keep=keep_set)
+            if dropped is None:
+                return False
+            for vl, b in dropped.items():
+                self.groups[vl].pool.free(b)
+        return True
+
+    def prefill_start(self, slot: int) -> int:
+        """First position ``slot``'s prefill must write — nonzero when
+        admission mapped a shared prefix (its KV is already resident)."""
+        return self._shared_pos.get(slot, 0)
+
+    def register_prefix(self, slot: int, prompt, span: int,
+                        upto_tokens: int) -> int:
+        """Publish ``slot``'s fully-prefilled leading blocks into the
+        PrefixIndex (called once prefill completes). Only positions
+        consumed via chunk steps or inherited shared blocks
+        (``upto_tokens``) are eligible — decode-ramp KV is not
+        bitwise-interchangeable with the chunk-step KV an unshared run
+        would compute. Each published block gains an index-held
+        reference, so it outlives this donor. Returns entries
+        inserted."""
+        if self.prefix is None:
+            return 0
+        cap = min(self._share_cap(len(prompt), span),
+                  max(upto_tokens, 0) // self.block_size)
+        if cap <= 0:
+            return 0
+        keys = PrefixIndex.chunk_keys(prompt, self.block_size, cap)
+        inserted = 0
+        for i, key in enumerate(keys):
+            blocks: Dict[int, int] = {}
+            for vl, g in self.groups.items():
+                b = int(g.pt.table[slot, i])
+                if b == g.pt.trash:
+                    blocks = {}
+                    break
+                blocks[vl] = b
+            if not blocks:
+                break
+            for vl, b in blocks.items():
+                self.groups[vl].pool.ref(b)
+            if self.prefix.publish(key, blocks):
+                inserted += 1
+            else:           # already indexed (first publisher won)
+                for vl, b in blocks.items():
+                    self.groups[vl].pool.free(b)
+        while len(self.prefix) > self.prefix.capacity:
+            dropped = self.prefix.evict_lru()
+            for vl, b in dropped.items():
+                self.groups[vl].pool.free(b)
+        return inserted
+
+    def flush_prefix(self) -> int:
+        """Drop every PrefixIndex entry (releasing the index's block
+        references) — the test/leak-check hook: after a flush and full
+        retire, blocks_used must be 0 again."""
+        if self.prefix is None:
+            return 0
+        n = 0
+        while True:
+            dropped = self.prefix.evict_lru()
+            if dropped is None:
+                return n
+            for vl, b in dropped.items():
+                self.groups[vl].pool.free(b)
+            n += 1
+
+    def prefix_holds(self) -> Dict[int, np.ndarray]:
+        """Per-group index-held refcounts (check_invariants helper)."""
+        if self.prefix is None:
+            return {vl: np.zeros(g.pool.num_blocks, np.int64)
+                    for vl, g in self.groups.items()}
+        return self.prefix.holds(
+            {vl: g.pool.num_blocks for vl, g in self.groups.items()})
+
     # -- page-table lifecycle -------------------------------------------
 
-    def can_admit(self, prompt_len: int) -> bool:
+    def can_admit(self, prompt_len: int, prompt=None,
+                  span: Optional[int] = None) -> bool:
         n = max(prompt_len, 1)
-        return all(g.pt.can_map(g.pt.blocks_for(n))
+        shared, _, keys = (self._match_shared(prompt, len(prompt),
+                                              span or prompt_len)
+                           if prompt is not None and self.prefix is not None
+                           else (0, [], []))
+        return all(self._reclaim(g, g.pt.blocks_for(n) - shared, keep=keys)
                    for g in self.groups.values())
 
     def fits_pool(self, n_positions: int) -> Optional[str]:
@@ -302,23 +469,78 @@ class _PagedBacking:
                         f"{g.pool.num_blocks}")
         return None
 
-    def alloc_reset(self, slot: int, prompt_len: int):
+    def alloc_reset(self, slot: int, prompt_len: int, prompt=None,
+                    span: Optional[int] = None) -> int:
+        """Reset ``slot`` and map its prompt blocks. With prefix sharing
+        on and ``prompt`` given, the longest indexed chunk-aligned
+        prefix is mapped read-shared first (its KV is already resident —
+        prefill starts past it); the remainder maps private as usual.
+        Returns the prefill start position (0 without a hit)."""
         self.dense = _reset(self.dense, self._template,
                             jnp.asarray([slot], jnp.int32))
+        shared_pos = 0
+        if self.prefix is not None and prompt is not None:
+            n, hit, _ = self._match_shared(prompt, len(prompt),
+                                           span or prompt_len)
+            if n:
+                for vl, g in self.groups.items():
+                    g.pt.map_shared(slot, [e[vl] for e in hit])
+                shared_pos = n * self.block_size
+                self.shared_chunks_mapped += n
+                self._rows_cache = None
+        self._shared_pos[slot] = shared_pos
         ok = self.ensure(slot, max(prompt_len, 1) - 1)
         if not ok:
             raise RuntimeError(
                 "alloc_reset after can_admit ran out of blocks")
+        return shared_pos
 
-    def ensure(self, slot: int, upto_pos: int) -> bool:
+    def _cow_copy(self, g: _PageGroup, pairs: List[Tuple[int, int]]):
+        """Duplicate each (old, new) physical block pair on device —
+        pow2-padded with trash->trash pairs like every block-rows
+        kernel."""
+        n = bucketing.round_up_pow2(len(pairs), 1)
+        srcs = [p[0] for p in pairs] + [g.pt.trash] * (n - len(pairs))
+        dsts = [p[1] for p in pairs] + [g.pt.trash] * (n - len(pairs))
+        sub = {k: self.paged[k] for k in g.keys}
+        self.paged.update(engine.copy_block_rows(
+            sub, jnp.asarray(PageTable.block_rows(srcs, self.block_size)),
+            jnp.asarray(PageTable.block_rows(dsts, self.block_size))))
+        self.cow_copies += len(pairs)
+        self._rows_cache = None
+
+    def ensure(self, slot: int, upto_pos: int,
+               write_from: Optional[int] = None) -> bool:
         """Map (and zero) every block covering positions [0, upto_pos] in
         every group — ring groups clamp to their ring, so past the window
-        they are a no-op. False on pool exhaustion (the scheduler's
-        preempt-on-OOB path); blocks mapped so far stay mapped, and a
-        retry after preemption is idempotent."""
+        they are a no-op — and copy-on-write any *shared* block the
+        upcoming write over [``write_from``, ``upto_pos``] (default: just
+        ``upto_pos``, the decode case) would touch: the writer gets a
+        private copy, so no sharer ever observes the write. False on pool
+        exhaustion (the scheduler's preempt-on-OOB path); blocks mapped
+        or copied so far stay, and a retry after preemption is
+        idempotent."""
+        lo = upto_pos if write_from is None else write_from
         ok_all = True
         for g in self.groups.values():
+            if g.pool.shared_count:
+                pairs: List[Tuple[int, int]] = []
+                for lb in g.pt.write_blocks(slot, lo, upto_pos):
+                    if not g.pt.is_shared(slot, lb):
+                        continue
+                    got = g.pt.cow_block(slot, lb)
+                    if got is None and self._reclaim(g, 1):
+                        got = g.pt.cow_block(slot, lb)
+                    if got is None:
+                        ok_all = False
+                        break
+                    pairs.append(got)
+                if pairs:
+                    self._cow_copy(g, pairs)
             ok, new = g.pt.ensure(slot, upto_pos)
+            if not ok and self._reclaim(g, 1):
+                ok, more = g.pt.ensure(slot, upto_pos)
+                new = new + more
             if new:
                 # pow2-pad the reset batch with trash-block rows so the
                 # jitted reset compiles O(log blocks_per_slot) shapes,
@@ -337,6 +559,7 @@ class _PagedBacking:
         freed: List[int] = []
         for g in self.groups.values():
             freed += g.pt.free_slot(slot)
+        self._shared_pos.pop(slot, None)
         if freed:
             self._rows_cache = None
         return freed
@@ -392,20 +615,24 @@ class _PagedBacking:
                     key: attention.KVCache(k=c.k[:, :keep], v=c.v[:, :keep],
                                            pos=c.pos[:, :keep])
                     for key, c in got.items()})
-            _, freed = g.pt.swap_out(slot)
-            if sorted(freed) != sorted(phys):
-                raise RuntimeError(f"swap_out freed {freed} != mapped "
-                                   f"{phys} (group {vl})")
-            if freed:
+            # shared blocks are RELEASED, not stolen: the bytes were just
+            # gathered (a copy), and swap_out only drops this slot's
+            # reference — sharers and the PrefixIndex keep theirs
+            _, released = g.pt.swap_out(slot)
+            if sorted(released) != sorted(phys):
+                raise RuntimeError(f"swap_out released {released} != "
+                                   f"mapped {phys} (group {vl})")
+            if released:
                 self._rows_cache = None
         dense_host = jax.device_get(
             _gather(self.dense, jnp.asarray([slot], jnp.int32)))
+        self._shared_pos.pop(slot, None)
         return self.swaps.put(rid, SwapEntry(
             blocks=blocks, paged=paged_host, dense=dense_host))
 
     def can_admit_swapped(self, rid: int) -> bool:
         entry = self.swaps.get(rid)
-        return all(g.pt.can_map(entry.blocks.get(vl, 0))
+        return all(self._reclaim(g, entry.blocks.get(vl, 0))
                    for vl, g in self.groups.items())
 
     def swap_in(self, slot: int, rid: int) -> int:
@@ -440,6 +667,7 @@ class _PagedBacking:
             self._rows_cache = None
         self.dense = _scatter(self.dense, entry.dense,
                               jnp.asarray([slot], jnp.int32))
+        self._shared_pos[slot] = 0      # resumed mappings are private
         return entry.nbytes
 
     # -- device-facing row vectors --------------------------------------
@@ -500,6 +728,10 @@ class _PagedBacking:
     def stats(self) -> dict:
         used = sum(g.pool.used_count for g in self.groups.values())
         total = sum(g.pool.num_blocks for g in self.groups.values())
+        prefix_stats = (self.prefix.stats() if self.prefix is not None
+                        else {"prefix_entries": 0, "prefix_lookups": 0,
+                              "prefix_hit_chunks": 0, "prefix_published": 0,
+                              "prefix_evicted": 0})
         out = {"allocator": "paged",
                "page_groups": len(self.groups),
                "blocks_total": total,
@@ -507,6 +739,11 @@ class _PagedBacking:
                "blocks_free": total - used,
                "block_size": self.block_size,
                "block_utilization": used / max(total, 1),
+               "shared_blocks": sum(g.pool.shared_count
+                                    for g in self.groups.values()),
+               "cow_copies": self.cow_copies,
+               "prefix_shared_chunks": self.shared_chunks_mapped,
+               **prefix_stats,
                **self.swaps.stats()}
         for vl, g in self.groups.items():
             if g.ring:
@@ -547,15 +784,24 @@ class SlotManager:
                  num_blocks: Optional[int] = None,
                  paged_window: bool = True,
                  num_window_blocks: Optional[int] = None,
-                 swap_bytes_budget: Optional[int] = None):
+                 swap_bytes_budget: Optional[int] = None,
+                 prefix_sharing: bool = False,
+                 prefix_align: Optional[int] = None,
+                 prefix_capacity: int = 512):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_slots = cache_slots
+        if prefix_sharing and not paged:
+            raise ValueError("prefix_sharing needs the paged backing "
+                             "(blocks are the sharing granule)")
         self.backing = (_PagedBacking(cfg, num_slots, cache_slots,
                                       block_size, num_blocks,
                                       paged_window=paged_window,
                                       num_window_blocks=num_window_blocks,
-                                      swap_bytes_budget=swap_bytes_budget)
+                                      swap_bytes_budget=swap_bytes_budget,
+                                      prefix_sharing=prefix_sharing,
+                                      prefix_align=prefix_align,
+                                      prefix_capacity=prefix_capacity)
                         if paged else
                         _ContiguousBacking(cfg, num_slots, cache_slots))
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
@@ -605,10 +851,15 @@ class SlotManager:
     def live(self) -> List[int]:
         return [i for i in range(self.num_slots) if self.valid[i]]
 
-    def can_admit(self, prompt_len: int = 0) -> bool:
+    def can_admit(self, prompt_len: int = 0, prompt=None,
+                  span: Optional[int] = None) -> bool:
         """A free slot AND (paged) enough free blocks for the prompt in
-        every page-table group."""
-        return bool(self._free) and self.backing.can_admit(prompt_len)
+        every page-table group. With prefix sharing, ``prompt`` (tokens)
+        discounts blocks an indexed shared prefix already holds, and
+        ``span`` (prompt + generation budget) bounds ring-group
+        eligibility."""
+        return bool(self._free) and self.backing.can_admit(
+            prompt_len, prompt=prompt, span=span)
 
     def fits_pool(self, n_positions: int) -> Optional[str]:
         """None if a request spanning ``n_positions`` could ever be
@@ -616,25 +867,47 @@ class SlotManager:
         scheduler's submit-time ValueError)."""
         return self.backing.fits_pool(n_positions)
 
-    def alloc(self, owner: int, prompt_len: int = 0) -> Optional[int]:
+    def alloc(self, owner: int, prompt_len: int = 0, prompt=None,
+              span: Optional[int] = None) -> Optional[int]:
         """Claim a free slot for request ``owner``; zero its cache rows
-        (paged: map + zero the blocks covering the prompt). Returns the
-        slot index, or None when the pool/blocks are exhausted."""
-        if not self.can_admit(prompt_len):
+        (paged: map + zero the blocks covering the prompt — an indexed
+        shared prefix of ``prompt`` maps read-shared instead, see
+        ``prefill_start``). Returns the slot index, or None when the
+        pool/blocks are exhausted."""
+        if not self.can_admit(prompt_len, prompt=prompt, span=span):
             return None
         slot = self._free.pop()
-        self.backing.alloc_reset(slot, prompt_len)
+        self.backing.alloc_reset(slot, prompt_len, prompt=prompt, span=span)
         self.owner[slot] = owner
         self.valid[slot] = True
         return slot
 
-    def ensure(self, slot: int, upto_pos: int) -> bool:
-        """Grow slot storage to cover writes up to ``upto_pos``. Always
-        True for contiguous; False when a paged pool is out of blocks
-        (the scheduler then preempts)."""
+    def prefill_start(self, slot: int) -> int:
+        """First position ``slot``'s prefill must write: 0 normally, the
+        shared-prefix length when the last alloc mapped indexed blocks
+        (their KV is already resident — prefill skips them)."""
+        return self.backing.prefill_start(slot)
+
+    def register_prefix(self, slot: int, prompt, span: int,
+                        upto_tokens: int) -> int:
+        """Publish ``slot``'s prefilled leading blocks into the prefix
+        index (paged + prefix_sharing only; no-op otherwise)."""
+        return self.backing.register_prefix(slot, prompt, span, upto_tokens)
+
+    def flush_prefix(self) -> int:
+        """Drop every prefix-index entry (releases index block holds)."""
+        return self.backing.flush_prefix()
+
+    def ensure(self, slot: int, upto_pos: int,
+               write_from: Optional[int] = None) -> bool:
+        """Grow slot storage to cover writes over
+        [``write_from`` (default ``upto_pos``), ``upto_pos``]. Always
+        True for contiguous; paged backing also copies-on-write any
+        shared block in the write span, and returns False when the pool
+        is out of blocks (the scheduler then preempts)."""
         if not self.valid[slot]:
             raise RuntimeError(f"slot {slot} is not live")
-        return self.backing.ensure(slot, upto_pos)
+        return self.backing.ensure(slot, upto_pos, write_from=write_from)
 
     def release(self, slot: int) -> List[int]:
         """Evict (EOS / max-tokens / abort / preempt): mark free; returns

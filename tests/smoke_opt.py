@@ -78,6 +78,22 @@ def check_allocator_guards():
     bp.free(a)
     expect(ValueError, lambda: bp.free(a), "double free")
     expect(ValueError, lambda: BlockPool(0, 4), "bad pool sizing")
+    # out-of-range ids must be rejected up front: free(-1) used to reach
+    # numpy fancy indexing and silently free the LAST block in the pool
+    held = bp.alloc()
+    for bad in (-1, -4, bp.num_blocks, 99):
+        expect(ValueError, lambda b=bad: bp.free(b), f"free({bad})")
+        expect(ValueError, lambda b=bad: bp.ref(b), f"ref({bad})")
+        expect(ValueError, lambda b=bad: bp.refcount(b), f"refcount({bad})")
+    check(bp.used_count == 1 and bp.refcount(held) == 1,
+          "rejected out-of-range free still mutated the pool")
+    # refcounted sharing: free() only releases at refcount zero, and
+    # cow_block refuses to copy a block nobody shares
+    bp.ref(held)
+    check(not bp.free(held) and bp.used_count == 1,
+          "free() released a block with refcount > 1")
+    check(bp.free(held) and bp.used_count == 0,
+          "free() at refcount 1 did not release")
     pt = PageTable(bp, num_slots=2, slot_positions=16)
     expect(ValueError, lambda: pt.ensure(0, 16), "ensure out of range")
     pt.ensure(0, 3)
@@ -85,6 +101,16 @@ def check_allocator_guards():
     expect(ValueError, lambda: pt.swap_in(1, 99), "swap_in oversize")
     pt.table[0, 1] = pt.table[0, 0]             # corrupt: double mapping
     expect(RuntimeError, pt.check_invariants, "check_invariants")
+    # copy-on-write misuse is loud too: cow of an unmapped logical block
+    # and cow of a private (unshared) block are both caller bugs
+    bp2 = BlockPool(4, block_size=4)
+    pt2 = PageTable(bp2, num_slots=2, slot_positions=16)
+    pt2.ensure(0, 3)
+    expect(RuntimeError, lambda: pt2.cow_block(0, 2), "cow of unmapped")
+    expect(RuntimeError, lambda: pt2.cow_block(0, 0), "cow of private")
+    expect(RuntimeError,
+           lambda: pt2.map_shared(0, [int(pt2.table[0, 0])]),
+           "map_shared over an occupied slot")
     ring = PageTable(BlockPool(4, 4), num_slots=1, slot_positions=10,
                      ring=True)
     ok, new = ring.ensure(0, 10_000)            # ring clamps, no raise
@@ -169,6 +195,33 @@ def main():
               f"{name}: retire leaked blocks")
         print(f"[smoke_opt] {name}: OK ({c['preempted']} preemptions, "
               f"{c['recomputed_decode_steps']} recomputed decode steps)")
+
+    # shared-prefix differential: prefix_sharing=True must be bit-
+    # identical to sharing OFF on prompts with a common system prefix —
+    # under BOTH preemption policies — while actually sharing (the
+    # admission fast-path, CoW guards and index refcounts are all
+    # explicit raises; a stripped assert here would corrupt shared KV)
+    sp_prompts = [np.concatenate(
+        [prompts[3][:24], rng.integers(0, cfg.vocab, n).astype(np.int32)])
+        for n in (3, 6, 1, 5, 2)]
+    sp_mnts = [4, 6, 3, 5, 4]
+    for name, kw in [("shared-prefix/recompute", dict(pool)),
+                     ("shared-prefix/swap", dict(pool, preempt="swap"))]:
+        off, _ = run_trace(cfg, params, sp_prompts, sp_mnts, **kw)
+        on, sched = run_trace(cfg, params, sp_prompts, sp_mnts,
+                              prefix_sharing=True, **kw)
+        for rid in off:
+            check(on[rid].tokens.tolist() == off[rid].tokens.tolist(),
+                  f"{name}: rid {rid} diverged with sharing on")
+            check(on[rid].reason == off[rid].reason,
+                  f"{name}: rid {rid} finish reason diverged")
+        check(sched.counters["prefix_shared_tokens"] > 0,
+              f"{name}: sharing never engaged (vacuous differential)")
+        sched.slots.flush_prefix()
+        check(sched.stats()["blocks_used"] == 0,
+              f"{name}: prefix index leaked blocks after flush")
+        print(f"[smoke_opt] {name}: OK "
+              f"({sched.counters['prefix_shared_tokens']} shared tokens)")
 
     # user-input feasibility must be ValueError, not a stripped assert
     from repro.serve import Scheduler, SchedulerConfig

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.models import attention
 from repro.serve import engine
-from repro.serve.paging import BlockPool, PageTable, SwapStore
+from repro.serve.paging import BlockPool, PageTable, PrefixIndex, SwapStore
 
 
 # --------------------------------------------------------------------------
@@ -58,7 +58,10 @@ def test_page_table_guards_raise_not_assert():
     pt.table[1, 2] = 0                           # duplicate-map block 0
     with pytest.raises(RuntimeError, match="not a logical prefix"):
         pt.swap_out(1)
-    with pytest.raises(RuntimeError, match="two logical blocks"):
+    # block 0 is now mapped twice but holds refcount 1: the refcount/
+    # table agreement check (which replaced the old uniqueness check
+    # when sharing landed) must catch it
+    with pytest.raises(RuntimeError, match="disagree with pool refcounts"):
         pt.check_invariants()
 
 
@@ -675,3 +678,340 @@ def test_windowed_slot_manager_window_pool_gates_admission():
     assert sorted(sm_dense.backing.groups) == [48]
     assert sm_dense.backing.dense["p0"]["attn"] is not None
     assert sm_dense.total_rows == 2 * 16 + (2 * 12 + 1) * 4
+
+
+# --------------------------------------------------------------------------
+# refcounts, sharing, copy-on-write (the prefix-sharing tentpole)
+# --------------------------------------------------------------------------
+
+def test_block_pool_free_rejects_out_of_range_ids():
+    """REGRESSION: free(-1) used to hit numpy negative indexing — it
+    silently freed the LAST block and pushed -1 onto the free list, so a
+    later alloc() returned -1 and every flat row derived from it aliased
+    another slot's KV. Out-of-range ids must raise ValueError (not
+    IndexError — the -O guard policy) and leave the pool untouched."""
+    bp = BlockPool(4, block_size=4)
+    while bp.alloc() is not None:
+        pass
+    assert bp.free_count == 0
+    for bad in (-1, -4, 4, 99):
+        with pytest.raises(ValueError, match="outside pool"):
+            bp.free(bad)
+        with pytest.raises(ValueError, match="outside pool"):
+            bp.ref(bad)
+        with pytest.raises(ValueError, match="outside pool"):
+            bp.refcount(bad)
+    # the old corruption: free list stays empty, last block stays owned
+    assert bp.free_count == 0 and bp.allocated[3]
+    assert bp.alloc() is None                    # and alloc can't return -1
+
+
+def test_block_pool_refcounts_free_only_at_zero():
+    bp = BlockPool(2, block_size=4)
+    a = bp.alloc()
+    assert bp.refcount(a) == 1 and bp.shared_count == 0
+    bp.ref(a)
+    assert bp.refcount(a) == 2 and bp.shared_count == 1
+    assert bp.free(a) is False                   # one sharer left
+    assert bp.allocated[a] and bp.free_count == 1
+    assert bp.unref(a) is True                   # last reference: freed
+    assert not bp.allocated[a] and bp.free_count == 2
+    with pytest.raises(ValueError, match="not allocated"):
+        bp.free(a)
+    with pytest.raises(ValueError, match="unallocated"):
+        bp.ref(a)                                # can't share a freed block
+
+
+def test_page_table_map_shared_and_cow():
+    bp = BlockPool(6, block_size=4)
+    pt = PageTable(bp, num_slots=3, slot_positions=16)
+    pt.ensure(0, 11)                             # donor: blocks for 3 chunks
+    donor = [int(b) for b in pt.table[0, :2]]    # share the first two
+    pt.map_shared(1, donor)
+    assert pt.is_shared(0, 0) and pt.is_shared(1, 1)
+    assert bp.refcount(donor[0]) == 2 and bp.shared_count == 2
+    pt.check_invariants()
+    with pytest.raises(RuntimeError, match="already mapped"):
+        pt.map_shared(1, donor)                  # logical prefix taken
+    with pytest.raises(ValueError, match="shared blocks"):
+        pt.map_shared(2, [donor[0]] * 5)         # > blocks_per_slot
+    # CoW: slot 1 gets a private copy of logical block 1; slot 0 keeps it
+    old, new = pt.cow_block(1, 1)
+    assert old == donor[1] and new != old
+    assert int(pt.table[1, 1]) == new and int(pt.table[0, 1]) == old
+    assert bp.refcount(old) == 1 and bp.refcount(new) == 1
+    assert not pt.is_shared(1, 1) and not pt.is_shared(0, 1)
+    pt.check_invariants()
+    with pytest.raises(RuntimeError, match="private block"):
+        pt.cow_block(1, 1)                       # already private
+    with pytest.raises(RuntimeError, match="unmapped"):
+        pt.cow_block(2, 0)
+    # releasing the sharer leaves the donor's mapping fully intact
+    pt.free_slot(1)
+    assert [int(b) for b in pt.table[0, :3] if b != pt.trash] \
+        == [int(b) for b in pt.table[0, :3]]
+    assert bp.refcount(donor[0]) == 1
+    pt.check_invariants()
+
+
+def test_page_table_cow_exhaustion_leaves_state_unchanged():
+    bp = BlockPool(2, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=8)
+    pt.ensure(0, 7)                              # pool now empty
+    pt.free_slot(0)
+    pt.ensure(0, 3)
+    shared = int(pt.table[0, 0])
+    pt.map_shared(1, [shared])
+    bp.alloc()                                   # drain the last free block
+    assert pt.cow_block(1, 0) is None            # exhausted: no-op
+    assert int(pt.table[1, 0]) == shared and bp.refcount(shared) == 2
+
+
+def test_page_table_write_blocks_spans():
+    bp = BlockPool(8, block_size=4)
+    pt = PageTable(bp, num_slots=1, slot_positions=16)
+    assert pt.write_blocks(0, 0, 3) == [0]
+    assert pt.write_blocks(0, 2, 9) == [0, 1, 2]
+    assert pt.write_blocks(0, 15, 15) == [3]
+    with pytest.raises(ValueError, match="empty write span"):
+        pt.write_blocks(0, 5, 4)
+    ring = PageTable(BlockPool(8, 4), num_slots=1, slot_positions=8,
+                     ring=True)
+    assert ring.write_blocks(0, 9, 10) == [0]    # wraps to positions 1, 2
+    assert ring.write_blocks(0, 6, 9) == [0, 1]  # wrap straddles the seam
+    assert ring.write_blocks(0, 3, 11) == [0, 1]  # >= ring: everything
+
+
+def test_swap_out_of_shared_blocks_releases_not_steals():
+    """Swap-preempting a sharer must leave the other sharers' mappings
+    (and the blocks themselves) intact: swap_out's free only drops the
+    victim's reference — the bytes were gathered to host beforehand, a
+    copy, never a steal."""
+    bp = BlockPool(6, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=16)
+    pt.ensure(0, 11)
+    donor = [int(b) for b in pt.table[0, :2]]
+    pt.map_shared(1, donor)
+    row, released = pt.swap_out(1)
+    assert released == donor                     # released FROM this slot
+    assert all(bp.allocated[b] for b in donor)   # ...but still alive
+    assert [int(b) for b in pt.table[0, :2]] == donor
+    assert bp.refcount(donor[0]) == 1
+    assert int(np.sum(row != pt.trash)) == 2     # resume knows its prefix
+    pt.check_invariants()
+
+
+def test_prefix_index_chained_hash_and_lru():
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 100, 64).astype(np.int32)
+    keys = PrefixIndex.chunk_keys(toks, 16, 4)
+    assert len(keys) == 4 and len(set(keys)) == 4
+    # chained: same chunk-1 tokens after a DIFFERENT chunk 0 must not
+    # produce chunk 1's key (KV depends on the whole prefix before it)
+    other = toks.copy()
+    other[0] += 1
+    keys2 = PrefixIndex.chunk_keys(other, 16, 4)
+    assert keys2[0] != keys[0] and keys2[1] != keys[1]
+    # prefix property: a longer prompt's leading keys match the short one
+    assert PrefixIndex.chunk_keys(toks[:32], 16, 4) == keys[:2]
+    assert PrefixIndex.chunk_keys(toks[:31], 16, 4) == keys[:1]  # partial
+    idx = PrefixIndex(capacity=8)
+    assert idx.match(keys) == []                 # empty: no hits
+    for i, k in enumerate(keys[:3]):
+        assert idx.publish(k, {16: i})
+    assert not idx.publish(keys[0], {16: 9})     # first publisher wins
+    got = idx.match(keys)                        # longest indexed prefix
+    assert [e[16] for e in got] == [0, 1, 2]
+    assert [e[16] for e in idx.match(keys2)] == []   # diverged at chunk 0
+    st = idx.stats()
+    assert st["prefix_entries"] == 3 and st["prefix_published"] == 3
+    assert st["prefix_hit_chunks"] == 3 and st["prefix_lookups"] == 3
+
+
+def test_prefix_index_evict_lru_respects_keep():
+    idx = PrefixIndex(capacity=8)
+    idx.publish(b"a", {16: 0})
+    idx.publish(b"b", {16: 1})
+    idx.publish(b"c", {16: 2})
+    idx.match([b"a"])                            # refresh: a is now MRU
+    assert idx.evict_lru(keep={b"b"}) == {16: 2}     # c was LRU non-kept
+    assert idx.evict_lru(keep={b"b", b"a"}) is None  # only kept remain
+    assert idx.evict_lru() == {16: 1}
+    assert idx.evict_lru() == {16: 0}
+    assert idx.evict_lru() is None and len(idx) == 0
+    assert idx.stats()["prefix_evicted"] == 3
+    with pytest.raises(ValueError, match="capacity"):
+        PrefixIndex(capacity=0)
+
+
+def test_check_invariants_counts_index_holds_as_external_refs():
+    bp = BlockPool(4, block_size=4)
+    pt = PageTable(bp, num_slots=2, slot_positions=16)
+    pt.ensure(0, 3)
+    b = int(pt.table[0, 0])
+    idx = PrefixIndex()
+    bp.ref(b)                                    # the index's hold
+    idx.publish(b"k", {16: b})
+    with pytest.raises(RuntimeError, match="disagree"):
+        pt.check_invariants()                    # unaware of the index
+    holds = idx.holds({16: bp.num_blocks})
+    pt.check_invariants(external_refs=holds[16])     # aware: consistent
+    pt.free_slot(0)                              # donor retires...
+    assert bp.allocated[b]                       # ...block outlives it
+    pt.check_invariants(external_refs=holds[16])
+
+
+def test_property_refcounted_pool_never_frees_shared():
+    """Hypothesis property: under random alloc/ref/free sequences against
+    a shadow refcount model, a block never returns to the free list while
+    references remain, the free list never holds duplicates or
+    out-of-range ids, and allocated == (refs > 0) throughout."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def prop(data):
+        n = data.draw(st.integers(2, 8))
+        bp = BlockPool(n, block_size=4)
+        shadow = {}                              # block -> refcount
+        for _ in range(data.draw(st.integers(1, 40))):
+            op = data.draw(st.sampled_from(["alloc", "ref", "free"]))
+            if op == "alloc":
+                b = bp.alloc()
+                if b is None:
+                    assert len(shadow) == n
+                else:
+                    assert b not in shadow
+                    shadow[b] = 1
+            elif op == "ref" and shadow:
+                b = data.draw(st.sampled_from(sorted(shadow)))
+                bp.ref(b)
+                shadow[b] += 1
+            elif op == "free" and shadow:
+                b = data.draw(st.sampled_from(sorted(shadow)))
+                freed = bp.free(b)
+                shadow[b] -= 1
+                assert freed == (shadow[b] == 0)
+                if freed:
+                    del shadow[b]
+            for b, r in shadow.items():
+                assert bp.refcount(b) == r and bp.allocated[b]
+            free = bp._free
+            assert len(free) == len(set(free))
+            assert all(0 <= b < n for b in free)
+            assert set(free) == set(range(n)) - set(shadow)
+            assert bp.shared_count == sum(r > 1 for r in shadow.values())
+
+    prop()
+
+
+def test_property_cow_invisible_to_the_sharing_reader():
+    """THE copy-on-write acceptance property: while one slot repeatedly
+    writes through (CoW-then-write) blocks it shares with another, the
+    reader's gathered view stays bitwise equal to a contiguous mirror
+    frozen at share time — no write by any sharer is ever observable
+    through another sharer's view."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    P, KV, HD, BS, SLOTS = 1, 1, 2, 4, 2
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.data())
+    def prop(data):
+        V = data.draw(st.sampled_from([8, 12]))
+        num_blocks = data.draw(st.integers(2 * (V // BS), 3 * (V // BS)))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        flat = attention.make_paged_cache(num_blocks, BS, KV, HD,
+                                          dtype=jnp.float32, periods=P)
+        live = num_blocks * BS
+        bp = BlockPool(num_blocks, BS)
+        pt = PageTable(bp, SLOTS, V)
+        # donor slot 0 writes its whole view, then shares a prefix
+        _, new = pt.ensure(0, V - 1)
+        flat = _zero_blocks(flat, new, BS)
+        rows0 = jnp.asarray(pt.rows([0]))
+        view = attention.paged_view(flat, rows0, live)
+        k0 = rng.normal(size=(P, 1, V, KV, HD)).astype(np.float32)
+        p0 = rng.integers(0, 50, (P, 1, V)).astype(np.int32)
+        view = attention.KVCache(k=view.k.at[:].set(k0),
+                                 v=view.v.at[:].set(-k0),
+                                 pos=view.pos.at[:].set(p0))
+        flat = attention.paged_writeback(flat, view, rows0)
+        donor_before = jax.device_get(attention.paged_view(flat, rows0,
+                                                           live))
+        n_share = data.draw(st.integers(1, V // BS))
+        pt.map_shared(1, [int(b) for b in pt.table[0, :n_share]])
+        # slot 1 now writes arbitrary positions; any write landing in a
+        # shared block is preceded by CoW + device block copy — exactly
+        # the backing's ensure() protocol
+        for _ in range(data.draw(st.integers(1, 6))):
+            lo = data.draw(st.integers(0, V - 1))
+            hi = data.draw(st.integers(lo, V - 1))
+            pt.ensure(1, hi)
+            for lb in pt.write_blocks(1, lo, hi):
+                if pt.is_shared(1, lb):
+                    old, newb = pt.cow_block(1, lb)
+                    src = PageTable.block_rows([old], BS)
+                    dst = PageTable.block_rows([newb], BS)
+                    flat = engine.copy_block_rows(
+                        {"p0": flat}, jnp.asarray(src),
+                        jnp.asarray(dst))["p0"]
+            rows1 = jnp.asarray(pt.rows([1]))
+            v1 = attention.paged_view(flat, rows1, live)
+            nk = rng.normal(size=(P, 1, hi - lo + 1, KV, HD)) \
+                    .astype(np.float32)
+            npos = rng.integers(0, 99, (P, 1, hi - lo + 1)).astype(np.int32)
+            v1 = attention.KVCache(k=v1.k.at[:, :, lo:hi + 1].set(nk),
+                                   v=v1.v.at[:, :, lo:hi + 1].set(-nk),
+                                   pos=v1.pos.at[:, :, lo:hi + 1].set(npos))
+            flat = attention.paged_writeback(flat, v1, rows1)
+            pt.check_invariants()
+            got = jax.device_get(attention.paged_view(flat, rows0, live))
+            np.testing.assert_array_equal(got.k, donor_before.k)
+            np.testing.assert_array_equal(got.v, donor_before.v)
+            np.testing.assert_array_equal(got.pos, donor_before.pos)
+
+    prop()
+
+
+def test_property_shared_swap_out_leaves_sharers_intact():
+    """Hypothesis property: swap-preempting a random sharer never
+    perturbs the remaining sharers — their mappings, the shared blocks'
+    liveness, and the refcount agreement all survive."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def prop(data):
+        BS = 4
+        V = data.draw(st.sampled_from([8, 16]))
+        slots = data.draw(st.integers(2, 4))
+        bp = BlockPool(slots * (V // BS), BS)
+        pt = PageTable(bp, slots, V)
+        pt.ensure(0, V - 1)
+        n_share = data.draw(st.integers(1, V // BS))
+        donor = [int(b) for b in pt.table[0, :n_share]]
+        sharers = list(range(1, data.draw(st.integers(2, slots))))
+        for s in sharers:
+            pt.map_shared(s, donor)
+        victim = data.draw(st.sampled_from([0] + sharers))
+        _, released = pt.swap_out(victim)
+        assert released[:n_share] == donor
+        for s in [0] + sharers:
+            if s == victim:
+                assert pt.mapped_blocks(s) == 0
+            else:
+                assert [int(b) for b in pt.table[s, :n_share]] == donor
+        assert all(bp.allocated[b] for b in donor)
+        assert all(bp.refcount(b) == len(sharers) for b in donor)
+        pt.check_invariants()
+        for s in [0] + sharers:                  # full drain: no leaks
+            if s != victim:
+                pt.free_slot(s)
+        assert bp.used_count == 0
+        pt.check_invariants()
+
+    prop()

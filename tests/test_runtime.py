@@ -212,6 +212,37 @@ def test_service_seed_needs_reference(svc):
         svc.submit([Request("seed", {"read": np.zeros(64, np.int8)})])
 
 
+def test_service_dedups_identical_payloads_without_aliasing(svc, rng):
+    """A bulk submit repeating one payload pays for ONE dispatch — and
+    the duplicates must come back as fresh arrays, not views of the
+    original's buffer (the RequestCache aliasing bug, one layer down:
+    one caller's in-place edit must never corrupt a sibling's result)."""
+    keys = rng.integers(0, 2**32, 17, dtype=np.uint32)
+    other = rng.integers(0, 2**32, 9, dtype=np.uint32)
+    before = svc.deduped_requests
+    out = svc.submit([Request("sort", {"keys": keys}),
+                      Request("sort", {"keys": other}),
+                      Request("sort", {"keys": keys.copy()}),
+                      Request("sort", {"keys": keys.copy()})])
+    assert svc.deduped_requests == before + 2     # 3 identical -> 1 dispatch
+    assert svc.metrics()["deduped_requests"] == svc.deduped_requests
+    want = np.sort(keys)
+    for i in (0, 2, 3):
+        np.testing.assert_array_equal(out[i]["keys"], want)
+    # duplicates own their buffers: scribbling on one leaves the rest
+    out[2]["keys"][:] = 0
+    np.testing.assert_array_equal(out[0]["keys"], want)
+    np.testing.assert_array_equal(out[3]["keys"], want)
+    # same little-endian bytes under different dtypes/shapes is NOT a
+    # duplicate (the key carries bytes+dtype+shape, like RequestCache.key)
+    from repro.runtime.service import _payload_key
+    a32 = np.asarray([1, 0], np.uint32)
+    b64 = np.asarray([1], np.uint64)
+    assert a32.tobytes() == b64.tobytes()
+    assert _payload_key({"keys": a32}) != _payload_key({"keys": b64})
+    assert _payload_key({"keys": a32}) == _payload_key({"keys": a32.copy()})
+
+
 # --------------------------------------------------------------------------
 # adversarial shapes: the bucketing edge cases submit() must not bend on
 # --------------------------------------------------------------------------

@@ -480,6 +480,136 @@ def test_sample_token_per_slot_temperatures():
 
 
 # --------------------------------------------------------------------------
+# shared-prefix admission (copy-on-write paged pool)
+# --------------------------------------------------------------------------
+
+def _shared_prefix_prompts(cfg, prefix_len, suffix_lens, seed=21):
+    """Prompts sharing one system-prompt prefix + unique suffixes."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+    return [np.concatenate([prefix,
+                            rng.integers(0, cfg.vocab, l).astype(np.int32)])
+            for l in suffix_lens]
+
+
+@pytest.mark.parametrize("model,block_size,num_blocks,num_window_blocks,"
+                         "preempt,prefix_len,suffix_lens,mnts", [
+    # global-attention model, equal-memory pool: sharing engages with no
+    # preemption in sight (the common fast path)
+    ("gemma", 8, None, None, "recompute", 24, [3, 6, 1, 5, 2],
+     [4, 6, 3, 5, 4]),
+    # under-provisioned pools: sharing + preempt-recompute and
+    # preempt-swap interleave (a swapped-out sharer must resume against
+    # blocks it no longer co-owns; evicted index entries must not free
+    # blocks still mapped)
+    ("gemma", 8, 8, None, "recompute", 24, [3, 6, 1, 5, 2],
+     [4, 6, 3, 5, 4]),
+    ("gemma", 8, 8, None, "swap", 24, [3, 6, 1, 5, 2], [4, 6, 3, 5, 4]),
+    # windowed model: the ring group only shares when the whole request
+    # span fits its view (no wrap during a sharer's lifetime), so spans
+    # are kept <= window(16); the global-KV group shares alongside
+    ("gemma3", 2, None, None, "recompute", 8, [2, 4, 1, 3], [4, 3, 5, 4]),
+    ("gemma3", 2, 20, 12, "swap", 8, [2, 4, 1, 3], [4, 3, 5, 4]),
+])
+def test_shared_prefix_streams_bit_identical(request, model, block_size,
+                                             num_blocks, num_window_blocks,
+                                             preempt, prefix_len,
+                                             suffix_lens, mnts):
+    """prefix_sharing=True must be observationally invisible: the same
+    staggered trace of prompts sharing a system-prompt prefix produces
+    bit-identical greedy streams and finish reasons with sharing on and
+    off — while actually sharing (prefix_shared_tokens > 0), including
+    through preemption (recompute AND swap) and the windowed model's
+    ring + global page-table groups."""
+    cfg, params = request.getfixturevalue(model)
+    prompts = _shared_prefix_prompts(cfg, prefix_len, suffix_lens)
+    eos = _TRACE["eos"]
+    kw = dict(allocator="paged", block_size=block_size,
+              num_blocks=num_blocks, num_window_blocks=num_window_blocks,
+              preempt=preempt)
+    base, _ = _run_trace(cfg, params, prompts, mnts, eos, **kw)
+    got, sched = _run_trace(cfg, params, prompts, mnts, eos,
+                            prefix_sharing=True, **kw)
+    assert set(base) == set(got) == set(range(len(prompts)))
+    for i in range(len(prompts)):
+        assert got[i].tokens.tolist() == base[i].tokens.tolist(), \
+            f"request {i}: shared {got[i].tokens.tolist()} != " \
+            f"unshared {base[i].tokens.tolist()}"
+        assert got[i].reason == base[i].reason
+    # sharing really engaged: later arrivals were admitted with their
+    # prefix chunks already written
+    assert sched.counters["prefix_shared_tokens"] > 0
+    st = sched.stats()
+    assert st["prefix_hit_chunks"] > 0 and st["prefix_published"] > 0
+    if preempt == "swap":
+        assert sched.counters["recomputed_decode_steps"] == 0
+    # index entries pin their blocks; dropping the index frees them all
+    assert st["blocks_used"] > 0            # the index holds blocks
+    sched.slots.flush_prefix()
+    assert sched.stats()["blocks_used"] == 0
+    assert sched.stats()["shared_blocks"] == 0
+
+
+def test_prefix_sharing_requires_paged_allocator(gemma):
+    cfg, params = gemma
+    with pytest.raises(ValueError, match="prefix_sharing requires"):
+        Scheduler(cfg, params, SchedulerConfig(prefix_sharing=True))
+
+
+def test_prefix_sharing_counters_zero_when_off(gemma):
+    """The sharing keys are pre-declared (schema regression): a plain
+    paged run reports them all as exact zeros."""
+    cfg, params = gemma
+    rng = np.random.default_rng(5)
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=2, max_len=32, prefill_chunk=8, cache_requests=False,
+        allocator="paged", block_size=8))
+    sched.submit(_prompts(rng, cfg.vocab, [6, 6]), max_new_tokens=2)
+    sched.drain()
+    st = sched.stats()
+    assert sched.counters["prefix_shared_tokens"] == 0
+    for k in ("shared_blocks", "cow_copies", "prefix_shared_chunks",
+              "prefix_entries", "prefix_lookups", "prefix_hit_chunks",
+              "prefix_published", "prefix_evicted"):
+        assert st[k] == 0, k
+
+
+# --------------------------------------------------------------------------
+# submit atomicity (batch validation)
+# --------------------------------------------------------------------------
+
+def test_submit_batch_is_atomic(gemma):
+    """Regression: submit() used to enqueue prompts one-by-one and raise
+    on the first invalid member — the valid prefix of the batch stayed
+    enqueued as orphans (rids the caller never received, burning pool
+    space and polluting ``results``). The whole batch must validate
+    before ANY request is accepted."""
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=16, prefill_chunk=8, cache_requests=False))
+    good = np.arange(4, dtype=np.int32)
+    bad = np.arange(14, dtype=np.int32)         # 14 + 4 > max_len
+    with pytest.raises(ValueError, match="exceeds"):
+        sched.submit([good, bad], max_new_tokens=4)
+    # nothing leaked: no pending orphan, no phantom completion
+    assert sched.pending == 0 and sched.live == 0
+    assert sched.counters["submitted"] == 0
+    assert sched.drain() == [] and sched.results == {}
+    # the paged feasibility check participates in the same all-or-nothing
+    paged = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=64, prefill_chunk=8, cache_requests=False,
+        allocator="paged", block_size=8, num_blocks=2))
+    with pytest.raises(ValueError, match="blocks > pool"):
+        paged.submit([good, np.arange(20, dtype=np.int32)],
+                     max_new_tokens=8)
+    assert paged.pending == 0 and paged.counters["submitted"] == 0
+    # the good prompt on its own still goes through afterwards
+    rids = sched.submit([good], max_new_tokens=4)
+    done = sched.drain()
+    assert [c.rid for c in done] == rids
+
+
+# --------------------------------------------------------------------------
 # request cache (zipfian traffic)
 # --------------------------------------------------------------------------
 
@@ -535,6 +665,48 @@ def test_scheduler_zipf_repeats_served_from_cache(rwkv):
     r3 = sched.submit([hot], max_new_tokens=3, temperature=0.9)
     sched.drain()
     assert sched.results[r3[0]].reason != "cached"
+
+
+def test_request_cache_put_copies_and_freezes():
+    """Regression (unit): put() used to store the caller's array — a
+    later in-place edit through EITHER handle silently rewrote what
+    every future hit would see. The memo must own a frozen copy."""
+    rc = RequestCache(maxsize=2)
+    k = RequestCache.key(np.asarray([1], np.int32), 4, None)
+    src = np.asarray([5, 6], np.int32)
+    rc.put(k, src, "length")
+    src[:] = 0                              # scribble after put
+    got, reason = rc.get(k)
+    assert got.tolist() == [5, 6] and reason == "length"
+    assert not got.flags.writeable          # hits can't poison it either
+
+
+def test_request_cache_survives_completion_mutation(gemma):
+    """Regression (end-to-end): _retire memoized the SAME tokens array
+    it handed the original requester, so a caller mutating its
+    completion in place rewrote the cache — every later duplicate
+    request got the scribbled tokens with reason='cached'."""
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=32, prefill_chunk=8))
+    rng = np.random.default_rng(9)
+    p = _prompts(rng, cfg.vocab, [6])[0]
+    (r1,) = sched.submit([p], max_new_tokens=3)
+    sched.drain()
+    first = sched.results[r1]
+    want = first.tokens.tolist()
+    first.tokens[:] = -1                    # caller scribbles on its copy
+    (r2,) = sched.submit([p], max_new_tokens=3)
+    sched.drain()
+    served = sched.results[r2]
+    assert served.reason == "cached"
+    assert served.tokens.tolist() == want   # memo unaffected
+    # hits get their own copy too: scribbling on one cached completion
+    # leaves the next hit pristine
+    served.tokens[:] = -2
+    (r3,) = sched.submit([p], max_new_tokens=3)
+    sched.drain()
+    assert sched.results[r3].tokens.tolist() == want
 
 
 # --------------------------------------------------------------------------
