@@ -100,16 +100,16 @@ def _steady_rates(smp: Sampler, keys) -> Dict[str, Any]:
 
 
 def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
-    """fig_serve with every arm on (paged + windowed + swap + the
-    closed-loop trace arms when ``trace`` is set) under a wall-clock
-    sampler; returns the baseline document."""
+    """fig_serve with every arm on (paged + windowed + swap +
+    speculative + the closed-loop trace arms when ``trace`` is set)
+    under a wall-clock sampler; returns the baseline document."""
     from benchmarks import fig_serve
 
     smp = Sampler(wall_clock=True, min_interval_s=0.05, capacity=4096)
     prev = set_sampler(smp)
     try:
         rows = fig_serve.run(smoke=smoke, paged=True, preempt="swap",
-                             trace=trace)
+                             trace=trace, spec=True)
     finally:
         set_sampler(prev)
     idx = parse_rows(rows)
@@ -134,6 +134,13 @@ def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
                                            "higher", 0.02)
     m["overload_recompute_occupancy"] = _metric(pp["occupancy_recompute"],
                                                 "higher", 0.02)
+    # speculative decoding: useful tokens per fused decode step on the
+    # draft-friendly arm and its acceptance rate are seed-fixed, greedy
+    # quantities (the in-benchmark assert already requires streams
+    # bit-identical to the speculate=0 oracle)
+    sp = idx["fig_serve.spec.draft_friendly"]
+    m["spec_step_ratio"] = _metric(sp["step_ratio"], "higher", 0.02)
+    m["spec_accept_rate"] = _metric(sp["accept_rate"], "higher", 0.02)
     # informational: wall-clock (machine-dependent) quantities
     m["continuous_vs_static_speedup"] = _metric(cv["speedup"],
                                                 "higher", None)
@@ -143,6 +150,9 @@ def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
             "higher", None)
         m[f"{policy}_ttft_p95_s"] = _metric(
             idx[f"fig_serve.{policy}.ttft"]["p95_s"], "lower", None)
+    m["spec_tok_per_s_speedup"] = _metric(sp["speedup"], "higher", None)
+    m["spec_adversarial_accept_rate"] = _metric(
+        idx["fig_serve.spec.adversarial"]["accept_rate"], "higher", None)
     if trace:
         m["trace_overhead_pct"] = _metric(
             idx["fig_serve.trace_overhead"]["overhead_pct"], "lower", None)

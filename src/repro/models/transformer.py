@@ -265,8 +265,11 @@ def apply_model(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
     new_caches = ys.get("caches")
 
     x = L.rmsnorm(params["final_norm"], x)
-    if mode == "prefill" or (mode == "decode" and s > 1):
-        x = x[:, -1:]       # chunk steps only ever need the last logits
+    if mode == "prefill":
+        x = x[:, -1:]       # prefill callers only consume the last logits
+    # decode chunks (s > 1) keep ALL s positions: the unembed over the
+    # full chunk is what speculative verify and prompt scoring consume —
+    # the compute already happened, this only sizes the output.
     if cfg.tie_embeddings and cfg.input_mode == "tokens":
         table = params["embed"]["table"]
     else:

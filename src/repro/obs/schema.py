@@ -40,12 +40,21 @@ SCHEDULER_STATS: Dict[str, type] = {
     # backpressure-controller knobs, surfaced so every actuation is
     # visible in the same snapshot the monitors read (-1 = uncapped)
     "admit_cap": int, "preempt_policy": str,
+    # speculative decoding (SchedulerConfig.speculate=k; all 0 when
+    # speculation is off — pre-declared so the keys never appear
+    # lazily). Teacher-forced ramp positions are excluded: these count
+    # REAL drafts only, so accepted/drafted is a true acceptance rate.
+    "spec.drafted_tokens": int, "spec.accepted_tokens": int,
+    "spec.rejected_tokens": int, "spec.rollbacks": int,
 }
 
 #: per-request latency histograms the scheduler owns (flattened into
 #: stats() as ``<name>.<field>`` — lifetime count/sum, windowed
 #: percentiles): the series SLO rules like ``ttft_p95 < X`` read.
-SCHEDULER_LATENCY_HISTS = ("queue_wait_ms", "ttft_ms", "itl_ms")
+#: ``spec.accept_len`` observes accepted REAL draft length per slot per
+#: verify tick (unit: tokens, not ms; only observed while speculating).
+SCHEDULER_LATENCY_HISTS = ("queue_wait_ms", "ttft_ms", "itl_ms",
+                           "spec.accept_len")
 _HIST_FIELDS: Dict[str, type] = {"count": int, "sum": float, "p50": float,
                                  "p95": float, "max": float}
 SCHEDULER_STATS.update({f"{h}.{f}": t for h in SCHEDULER_LATENCY_HISTS

@@ -612,15 +612,41 @@ class GenerateAdapter(KernelAdapter):
             rids.extend(sched.submit(
                 [np.asarray(p["prompt"], np.int32)],
                 max_new_tokens=p.get("max_new_tokens"),
-                temperature=p.get("temperature")))
+                temperature=p.get("temperature"),
+                top_k=p.get("top_k"), top_p=p.get("top_p")))
         sched.drain()
         # pop: a long-lived service must not accumulate Completions
         done = [sched.results.pop(r) for r in rids]
-        return [{"tokens": c.tokens, "reason": c.reason} for c in done]
+        return [{"tokens": c.tokens, "reason": c.reason,
+                 "accepted": c.accepted, "drafted": c.drafted}
+                for c in done]
+
+
+class ScoreAdapter(KernelAdapter):
+    """payload {prompt} -> {"logprobs", "reason"}: per-token prompt
+    logprobs (``logprobs[i-1] = log p(prompt[i] | prompt[:i])``) through
+    the scheduler's chunk path — same slot pool, cache and admission
+    machinery as 'generate', zero sampled tokens. Attach with
+    ``KernelService(lm=Scheduler(...))``."""
+
+    name = "score"
+
+    def run(self, payloads: List[Dict]) -> List[Any]:
+        sched = self.svc.lm
+        if sched is None:
+            raise ValueError(
+                "score kernel needs KernelService(lm=serve.Scheduler)")
+        rids = []
+        for p in payloads:
+            rids.extend(sched.score([np.asarray(p["prompt"], np.int32)]))
+        sched.drain()
+        done = [sched.results.pop(r) for r in rids]
+        return [{"logprobs": c.logprobs, "reason": c.reason}
+                for c in done]
 
 
 _ADAPTERS = (ChainAdapter, SWAdapter, DTWAdapter, SortAdapter, SeedAdapter,
-             ScanAdapter, MapperAdapter, GenerateAdapter)
+             ScanAdapter, MapperAdapter, GenerateAdapter, ScoreAdapter)
 
 
 class KernelService:

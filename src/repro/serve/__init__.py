@@ -1,8 +1,11 @@
 """repro.serve — LM serving: stateless engine steps + continuous batching.
 
-  * engine    — prefill / decode / chunked-prefill step builders, per-slot
-                position vectors, sampling, per-request ``generate``,
-                fused paged (page-gather -> step -> page-scatter) steps.
+  * engine    — prefill / decode / chunked-prefill step builders (chunk
+                steps return per-position logits), per-slot position
+                vectors, SamplingPolicy + top-k/top-p sampling, the
+                verify-accept step for speculative decoding, per-request
+                ``generate``, fused paged (page-gather -> step ->
+                page-scatter) steps.
   * paging    — BlockPool / PageTable: block-granular allocation for the
                 slot pool's attention KV — global layers and (ring-mode
                 page tables) sliding-window rings — plus the
@@ -16,9 +19,10 @@
                 the paged allocator.
 """
 
-from repro.serve.engine import (cache_shardings, generate, make_chunk_step,
-                                make_decode_step, make_prefill_step,
-                                make_slot_decode_step, sample_token)
+from repro.serve.engine import (SamplingPolicy, cache_shardings, generate,
+                                make_chunk_step, make_decode_step,
+                                make_prefill_step, make_slot_decode_step,
+                                make_verify_step, sample_token)
 from repro.serve.paging import BlockPool, PageTable, SwapStore
 from repro.serve.scheduler import (Completion, RequestCache, Scheduler,
                                    SchedulerConfig)
@@ -26,6 +30,6 @@ from repro.serve.slots import SlotManager
 
 __all__ = ["cache_shardings", "generate", "make_chunk_step",
            "make_decode_step", "make_prefill_step", "make_slot_decode_step",
-           "sample_token", "BlockPool", "Completion", "PageTable",
-           "RequestCache", "Scheduler", "SchedulerConfig", "SlotManager",
-           "SwapStore"]
+           "make_verify_step", "sample_token", "BlockPool", "Completion",
+           "PageTable", "RequestCache", "SamplingPolicy", "Scheduler",
+           "SchedulerConfig", "SlotManager", "SwapStore"]

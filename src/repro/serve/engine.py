@@ -9,6 +9,7 @@ context length (the long_500k story).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional
 
@@ -21,24 +22,95 @@ from repro.obs import trace as obs_trace
 from repro.sharding import named_sharding
 
 
-def sample_token(logits: jnp.ndarray, key=None,
-                 temperature=0.0) -> jnp.ndarray:
+@dataclasses.dataclass(frozen=True)
+class SamplingPolicy:
+    """Per-request sampling knobs threaded through the fused decode steps.
+
+    ``temperature <= 0`` is greedy (exact argmax of the raw logits —
+    the differential-harness contract). ``top_k = 0`` disables top-k;
+    ``top_p = 1.0`` disables nucleus filtering. Both filters are exact
+    identities when disabled, so default-policy streams are bitwise
+    unchanged.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables): {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def fingerprint(self):
+        """Hashable identity for memo keys (RequestCache, coalescing)."""
+        return (float(self.temperature), int(self.top_k), float(self.top_p))
+
+
+def _filter_topk_topp(lg: jnp.ndarray, top_ks: jnp.ndarray,
+                      top_ps: jnp.ndarray) -> jnp.ndarray:
+    """Mask logits (B, V) outside the per-row top-k / nucleus sets to -inf.
+
+    top_ks (B,) int32 (0 = disabled) and top_ps (B,) fp32 (1.0 =
+    disabled) are value thresholds against the descending sort: ties at
+    the cut survive together, and a disabled filter keeps every entry,
+    making the whole function a bitwise identity for the defaults.
+    """
+    v = lg.shape[-1]
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]                  # descending
+    k = jnp.clip(jnp.where(top_ks <= 0, v, top_ks), 1, v)
+    kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    keep_k = lg >= kth
+    # exclusive cumsum of sorted probs: entry i kept iff the mass strictly
+    # before it is < top_p — always keeps the argmax, disabled at p = 1.
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1) - probs
+    nk = jnp.maximum(jnp.sum((cum < top_ps[:, None]).astype(jnp.int32),
+                             axis=-1), 1)
+    nth = jnp.take_along_axis(srt, (nk - 1)[:, None], axis=-1)
+    keep_p = lg >= nth
+    return jnp.where(keep_k & keep_p, lg, -jnp.inf)
+
+
+def sample_token(logits: jnp.ndarray, key=None, temperature=0.0,
+                 top_k=0, top_p=1.0) -> jnp.ndarray:
     """logits: (B, 1, V) -> (B,) int32. temperature 0 = greedy.
 
     ``temperature`` may be a python float (shared) or a (B,) array —
-    per-slot temperatures for continuous batching. The array path uses
-    the Gumbel-max identity (categorical(l/T) == argmax(l/T + g)) with a
-    per-row where() so greedy rows stay exactly argmax.
+    per-slot temperatures for continuous batching — and ``top_k`` /
+    ``top_p`` likewise (python scalars or (B,) vectors). The array path
+    uses the Gumbel-max identity (categorical(l/T) == argmax(l/T + g))
+    with a per-row where() so greedy rows stay exactly argmax of the RAW
+    logits regardless of the filters.
     """
     lg = logits[:, -1].astype(jnp.float32)
     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    if isinstance(temperature, (int, float)):
+    scalars = (isinstance(temperature, (int, float))
+               and isinstance(top_k, int)
+               and isinstance(top_p, (int, float)))
+    if scalars:
         if temperature <= 0.0 or key is None:
             return greedy
+        if top_k > 0 or top_p < 1.0:                # skip the sort when off
+            b = lg.shape[0]
+            lg = _filter_topk_topp(
+                lg, jnp.full((b,), top_k, jnp.int32),
+                jnp.full((b,), top_p, jnp.float32))
         return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
-    temps = jnp.asarray(temperature, jnp.float32)
+    b = lg.shape[0]
+    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    ks = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
+    ps = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    filt = _filter_topk_topp(lg, ks, ps)
     g = jax.random.gumbel(key, lg.shape, jnp.float32)
-    scaled = lg / jnp.maximum(temps, 1e-6)[:, None] + g
+    scaled = filt / jnp.maximum(temps, 1e-6)[:, None] + g
     sampled = jnp.argmax(scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temps > 0.0, sampled, greedy)
 
@@ -80,34 +152,44 @@ def make_decode_step(cfg: ModelConfig, temperature: float = 0.0):
 # ---------------------------------------------------------------------------
 
 def make_slot_decode_step(cfg: ModelConfig):
-    """decode(params, caches, tokens, pos, temps, key) ->
-    (next_tok, logits, caches) with PER-SLOT clocks.
+    """decode(params, caches, tokens, pos, temps, key[, top_ks, top_ps])
+    -> (next_tok, logits, caches) with PER-SLOT clocks.
 
     tokens: (B, 1) int32; pos: (B,) int32 — each row's absolute position;
-    temps: (B,) fp32 per-slot temperature (0 = greedy). Caches must use
-    the per-row position layout (init_caches(per_slot_pos=True)).
+    temps: (B,) fp32 per-slot temperature (0 = greedy); top_ks (B,) int32
+    / top_ps (B,) fp32 optional per-slot filters (None = disabled).
+    Caches must use the per-row position layout
+    (init_caches(per_slot_pos=True)).
     """
 
     def decode(params, caches, tokens: jnp.ndarray, pos: jnp.ndarray,
-               temps: jnp.ndarray, key: jnp.ndarray):
+               temps: jnp.ndarray, key: jnp.ndarray,
+               top_ks: Optional[jnp.ndarray] = None,
+               top_ps: Optional[jnp.ndarray] = None):
         logits, _, caches = T.apply_model(
             params, cfg, tokens=tokens, mode="decode", caches=caches,
             pos_scalar=pos)
-        nxt = sample_token(logits, key, temps)
+        nxt = sample_token(logits, key, temps,
+                           0 if top_ks is None else top_ks,
+                           1.0 if top_ps is None else top_ps)
         return nxt, logits, caches
 
     return decode
 
 
 def make_chunk_step(cfg: ModelConfig):
-    """chunk(params, caches, tokens, pos) -> (last_logits, caches).
+    """chunk(params, caches, tokens, pos) -> (logits (B, C, V), caches).
 
-    Chunked prefill: tokens (B, C) are C consecutive prompt tokens per
-    row, starting at absolute position pos[b]. Attention appends the
-    chunk to the cache and masks by absolute position (causal within the
-    chunk for free); SSM layers run the state-carried chunk-parallel
-    scan. Every row must carry a FULL chunk — exactness comes from never
-    padding inside a chunk (remainder tokens go through the decode ramp).
+    Chunked prefill AND the teacher-forced verify path: tokens (B, C)
+    are C consecutive tokens per row, starting at absolute position
+    pos[b]. Attention appends the chunk to the cache and masks by
+    absolute position (causal within the chunk for free); SSM layers run
+    the state-carried chunk-parallel scan. Every row must carry a FULL
+    chunk — exactness comes from never padding inside a chunk (remainder
+    tokens go through the decode ramp). Logits cover EVERY chunk
+    position (bitwise identical to stepping the same tokens one at a
+    time through the decode step) — prompt scoring and speculative
+    verification consume the non-final positions.
     """
 
     def chunk(params, caches, tokens: jnp.ndarray, pos: jnp.ndarray):
@@ -117,6 +199,149 @@ def make_chunk_step(cfg: ModelConfig):
         return logits, caches
 
     return chunk
+
+
+# ---------------------------------------------------------------------------
+# speculative verify-accept: teacher-force k drafts through the chunk
+# path, accept the agreeing prefix, roll the cache back in-program
+# ---------------------------------------------------------------------------
+
+def _ring_gather(leaf: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather ring rows idx (B, S) from a cache leaf (P, B, slots, ...)
+    along the slot axis (index 2), modulo that leaf's view length."""
+    take = jax.vmap(jax.vmap(lambda l, i: l[i], in_axes=(0, 0)),
+                    in_axes=(0, None))
+    return take(leaf, idx % leaf.shape[2])
+
+
+def _ring_scatter(leaf: jnp.ndarray, idx: jnp.ndarray,
+                  rows: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of _ring_gather: write rows (P, B, S, ...) back at ring
+    indices idx (B, S). Indices within a row are distinct (the verify
+    span never exceeds the smallest view length), so the scatter is
+    deterministic."""
+    put = jax.vmap(jax.vmap(lambda l, i, r: l.at[i].set(r),
+                            in_axes=(0, 0, 0)),
+                   in_axes=(0, None, 0))
+    return put(leaf, idx % leaf.shape[2], rows)
+
+
+def _snapshot_span(caches, idx):
+    """Pre-step snapshot: the ring rows every attention leaf will
+    (re)write for absolute positions idx (B, S)."""
+    from repro.models.attention import KVCache  # local: avoid import cycle
+
+    return {key: KVCache(k=_ring_gather(e["attn"].k, idx),
+                         v=_ring_gather(e["attn"].v, idx),
+                         pos=_ring_gather(e["attn"].pos, idx))
+            for key, e in caches.items()}
+
+
+def _restore_span(caches, idx, saved, limit):
+    """Post-step rollback: keep chunk writes at absolute positions
+    <= limit[b] (the last accepted position), restore the snapshot
+    everywhere else — inactive rows pass limit = -1 and get a full undo,
+    so the cache only ever holds committed-correct entries."""
+    from repro.models.attention import KVCache
+
+    keep = idx <= limit[:, None]                    # (B, S)
+
+    def mix(new, old):
+        k2 = keep.reshape((1,) + keep.shape + (1,) * (new.ndim - 3))
+        return jnp.where(k2, new, old)
+
+    out = {}
+    for key, e in caches.items():
+        kv, sv = e["attn"], saved[key]
+        e = dict(e)
+        e["attn"] = KVCache(
+            k=_ring_scatter(kv.k, idx, mix(_ring_gather(kv.k, idx), sv.k)),
+            v=_ring_scatter(kv.v, idx, mix(_ring_gather(kv.v, idx), sv.v)),
+            pos=_ring_scatter(kv.pos, idx,
+                              mix(_ring_gather(kv.pos, idx), sv.pos)))
+        out[key] = e
+    return out
+
+
+def make_verify_step(cfg: ModelConfig):
+    """verify(params, caches, tokens, pos, prompt_len, max_pos, score,
+    active, temps, top_ks, top_ps, key) ->
+    (out_tok (B, S), accept_n (B,), logprobs (B, S), caches).
+
+    One fused speculative tick over the whole pool. tokens (B, S) carry
+    [t, d_1..d_k] per row (S = k+1): the true next token t at absolute
+    position pos[b] followed by k drafts. The chunk path teacher-forces
+    all S positions, then the accept rule takes the longest prefix of
+    drafts agreeing with the model's own greedy predictions — under
+    greedy sampling this makes the emitted stream bit-identical to
+    one-token-at-a-time decode. Rows with temps > 0 accept nothing and
+    sample their first token under the full per-slot policy (exactly the
+    non-speculative semantics). ``forced`` teacher-forcing positions
+    (draft position < prompt_len, i.e. the decode ramp) auto-accept;
+    accepts clamp to max_pos[b] (last position allowed to commit) and,
+    for score rows, to k-1 so every prompt position's logprob is
+    surfaced exactly once. Rejected (and inactive-row) cache writes are
+    rolled back in-program via a span snapshot, so the pool cache never
+    holds uncommitted state.
+
+    Requires an attention-only pattern (SSM chunk scans are
+    irreversible) and S <= the smallest attention view length (distinct
+    ring indices for the rollback scatter) — callers gate both.
+    """
+    for spec in cfg.pattern:
+        if spec.mixer != "attn" or spec.mlp == "rwkv_ffn":
+            raise ValueError(
+                "speculative verify needs an attention-only pattern with "
+                f"stateless MLPs; got mixer={spec.mixer!r} mlp={spec.mlp!r} "
+                "(SSM/rwkv_ffn chunk scans cannot be rolled back)")
+
+    def verify(params, caches, tokens: jnp.ndarray, pos: jnp.ndarray,
+               prompt_len: jnp.ndarray, max_pos: jnp.ndarray,
+               score: jnp.ndarray, active: jnp.ndarray,
+               temps: jnp.ndarray, top_ks: jnp.ndarray,
+               top_ps: jnp.ndarray, key: jnp.ndarray):
+        s = tokens.shape[1]
+        k = s - 1
+        idx = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        saved = _snapshot_span(caches, idx)
+        logits, _, caches = T.apply_model(
+            params, cfg, tokens=tokens, mode="decode", caches=caches,
+            pos_scalar=pos)
+        lg = logits.astype(jnp.float32)             # (B, S, V)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        drafts = tokens[:, 1:]                      # (B, k)
+        # a draft at chunk slot i+1 occupies absolute position pos+i+1;
+        # ramp positions (< prompt_len) are teacher-forced true tokens
+        # and auto-accept — greedy agreement only gates real samples.
+        forced = (idx[:, :k] + 1) < prompt_len[:, None]
+        match = (greedy[:, :k] == drafts) | forced
+        n = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+        n = jnp.where(temps > 0.0, 0, n)
+        n = jnp.where(score, jnp.minimum(n, k - 1), n)
+        n = jnp.minimum(n, jnp.maximum(max_pos - pos, 0))
+        n = jnp.where(active, n, 0)
+        limit = jnp.where(active, pos + n, -1)
+        caches = _restore_span(caches, idx, saved, limit)
+        # out_tok[:, i] = the model's prediction after consuming chunk
+        # slot i; sampled rows replace slot 0 with a policy sample (their
+        # only emission this tick — accept_n is 0 for them).
+        first = sample_token(lg[:, :1], key, temps, top_ks, top_ps)
+        out_tok = greedy.at[:, 0].set(first)
+        # logprobs[:, i] = log p(token fed at slot i+1 | prefix); the
+        # final slot scores the model's own bonus prediction.
+        fed = jnp.concatenate([drafts, out_tok[:, -1:]], axis=-1)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(lg, axis=-1),
+                                 fed[..., None], axis=-1)[..., 0]
+        return out_tok, n.astype(jnp.int32), lp, caches
+
+    return verify
+
+
+@functools.lru_cache(maxsize=None)
+def jit_verify_step(cfg: ModelConfig):
+    return obs_trace.instrumented_jit(
+        jax.jit(make_verify_step(cfg), donate_argnums=(1,)),
+        name=f"verify_step[{cfg.name}]", prefix="serve.engine")
 
 
 # ModelConfig is a frozen dataclass, so jitted step programs are shared
@@ -199,25 +424,29 @@ def jit_paged_decode_step(cfg: ModelConfig):
     step = make_slot_decode_step(cfg)
 
     def run(params, dense, paged, rows, tokens, pos, temps, key,
-            block_size: int):
+            top_ks, top_ps, block_size: int):
         caches = _merge_paged(dense, paged, rows, block_size)
-        nxt, logits, caches = step(params, caches, tokens, pos, temps, key)
+        nxt, logits, caches = step(params, caches, tokens, pos, temps, key,
+                                   top_ks, top_ps)
         dense, paged = _split_paged(caches, paged, rows)
         return nxt, logits, dense, paged
 
     return obs_trace.instrumented_jit(
-        jax.jit(run, donate_argnums=(1, 2), static_argnums=(8,)),
+        jax.jit(run, donate_argnums=(1, 2), static_argnums=(10,)),
         name=f"paged_decode_step[{cfg.name}]", prefix="serve.engine")
 
 
 @functools.lru_cache(maxsize=None)
 def jit_paged_chunk_step(cfg: ModelConfig):
-    """Fused gather -> chunk-prefill -> scatter for the paged layout.
+    """Fused gather -> chunk-prefill -> scatter for the paged layout,
+    returning (logits (m, C, V), dense, paged).
 
     ``idx`` selects the sub-batch of slots (pad-by-repeat contract as the
     contiguous pooled chunk step); ``rows`` values are already
     per-sub-row (len(idx), V_key). Dense leaves gather/scatter on the
-    slot axis, paged leaves through their page tables.
+    slot axis, paged leaves through their page tables. Logits cover every
+    chunk position of every sub-row (prompt scoring reads them; plain
+    prefill ignores them).
     """
     step = make_chunk_step(cfg)
 
@@ -225,15 +454,39 @@ def jit_paged_chunk_step(cfg: ModelConfig):
         sub = jax.tree_util.tree_map(
             lambda l: jnp.take(l, idx, axis=1), dense)
         caches = _merge_paged(sub, paged, rows, block_size)
-        _, caches = step(params, caches, tokens, pos)
+        logits, caches = step(params, caches, tokens, pos)
         sub, paged = _split_paged(caches, paged, rows)
         dense = jax.tree_util.tree_map(
             lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), dense, sub)
-        return dense, paged
+        return logits, dense, paged
 
     return obs_trace.instrumented_jit(
         jax.jit(run, donate_argnums=(1, 2), static_argnums=(7,)),
         name=f"paged_chunk_step[{cfg.name}]", prefix="serve.engine")
+
+
+@functools.lru_cache(maxsize=None)
+def jit_paged_verify_step(cfg: ModelConfig):
+    """Fused page-gather -> verify-accept -> rollback -> page-scatter
+    over the whole pool (same full-pool ``rows`` contract as
+    jit_paged_decode_step). The span snapshot/restore operates on the
+    gathered per-slot views, so the writeback only ever lands committed
+    rows in the physical block pool.
+    """
+    step = make_verify_step(cfg)
+
+    def run(params, dense, paged, rows, tokens, pos, prompt_len, max_pos,
+            score, active, temps, top_ks, top_ps, key, block_size: int):
+        caches = _merge_paged(dense, paged, rows, block_size)
+        out_tok, n, lp, caches = step(
+            params, caches, tokens, pos, prompt_len, max_pos, score,
+            active, temps, top_ks, top_ps, key)
+        dense, paged = _split_paged(caches, paged, rows)
+        return out_tok, n, lp, dense, paged
+
+    return obs_trace.instrumented_jit(
+        jax.jit(run, donate_argnums=(1, 2), static_argnums=(14,)),
+        name=f"paged_verify_step[{cfg.name}]", prefix="serve.engine")
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -298,7 +551,8 @@ def copy_block_rows(paged, src_rows, dst_rows):
 
 
 def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
-             *, temperature: float = 0.0, eos_token: Optional[int] = None,
+             *, temperature: float = 0.0, top_k: int = 0,
+             top_p: float = 1.0, eos_token: Optional[int] = None,
              prefill_chunk: int = 32, cache_slots: int = 0,
              key: Optional[jnp.ndarray] = None):
     """Per-request generation — the scheduler's single-request oracle.
@@ -329,12 +583,15 @@ def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
         ctx += prefill_chunk
 
     temps = jnp.asarray([temperature], jnp.float32)
+    tks = jnp.asarray([top_k], jnp.int32)
+    tps = jnp.asarray([top_p], jnp.float32)
     out, reason, last = [], "length", None
     while len(out) < max_new_tokens:
         tok = prompt[ctx] if ctx < ln else last
         key, ks = jax.random.split(key)
         nxt, _, caches = decode_fn(params, caches, tok.reshape(1, 1),
-                                   jnp.asarray([ctx], jnp.int32), temps, ks)
+                                   jnp.asarray([ctx], jnp.int32), temps, ks,
+                                   tks, tps)
         ctx += 1
         last = nxt[0]
         if ctx >= ln:                       # prompt consumed: real sample

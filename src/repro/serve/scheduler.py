@@ -24,6 +24,21 @@ dense/SSM architectures. MoE capacity is shared across the pool batch,
 so MoE token streams can legitimately diverge from B=1 at tight capacity
 (documented per-group semantics, models/moe.py).
 
+``speculate=k`` replaces the one-token decode tick with a speculative
+verify tick (attention-only models): each greedy slot drafts k tokens
+(teacher-forced prompt tokens through the ramp, prompt-lookup self-draft
+past it), ONE fused chunk call verifies all k+1 positions, the longest
+prefix of drafts agreeing with the model's own greedy predictions is
+accepted, and the cache rows of rejected positions are rolled back
+in-program — so decode's serial dependency chain advances up to k+1
+positions per tick while greedy streams stay bit-identical to the
+oracle. ``score(prompts)`` rides the same per-chunk-logits seam: prompt
+tokens are teacher-forced through chunk/verify steps and every
+position's logprob is collected (``Completion.logprobs``), no tokens
+generated. Per-slot ``SamplingPolicy`` (temperature/top-k/top-p)
+threads through the fused steps; sampled rows never speculate (they
+accept nothing and sample exactly one policy-correct token per tick).
+
 A memoizing request cache (prompt+params -> tokens) fronts the pool for
 zipfian traffic — deterministic (greedy) requests only; hit/miss
 counters feed the fig_serve benchmark.
@@ -83,7 +98,8 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import sampler as obs_sampler
 from repro.obs import trace as obs_trace
 from repro.runtime import bucketing
-from repro.serve.slots import SlotManager
+from repro.serve import engine
+from repro.serve.slots import SlotManager, _attn_view_len
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +109,15 @@ class SchedulerConfig:
     prefill_chunk: int = 32     # C: full-chunk prefill quantum
     max_new_tokens: int = 32    # default generation budget
     temperature: float = 0.0    # default sampling temperature (0 = greedy)
+    top_k: int = 0              # default top-k filter (0 = disabled)
+    top_p: float = 1.0          # default nucleus mass (1.0 = disabled)
+    # k > 0: speculative decoding — draft k tokens per greedy slot per
+    # tick, verify them in ONE fused chunk call, accept the agreeing
+    # prefix and roll back the rest. Needs an attention-only pattern
+    # (SSM chunk scans are irreversible) and k + 1 <= the smallest
+    # attention view length (the rollback scatter needs distinct ring
+    # rows). Greedy streams stay bit-identical to speculate=0.
+    speculate: int = 0
     eos_token: Optional[int] = None
     cache_requests: bool = True
     request_cache_size: int = 1024
@@ -154,11 +179,19 @@ class _Slot:
     rid: int
     prompt: np.ndarray          # int32 (L,)
     max_new_tokens: int
-    temperature: float
+    policy: engine.SamplingPolicy
+    mode: str = "generate"      # 'generate' | 'score' (prompt logprobs)
     ctx: int = 0                # tokens consumed into the slot's cache
     chunk_tokens: int = 0       # of which via chunk steps (not decode)
     out: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    accepted: int = 0           # speculative drafts accepted (this request)
+    drafted: int = 0            # speculative drafts proposed (this request)
     admit_seq: int = -1         # admission order: preemption evicts max
+
+    @property
+    def temperature(self) -> float:
+        return self.policy.temperature
 
 
 @dataclasses.dataclass
@@ -178,7 +211,7 @@ class _Timeline:
 class Completion:
     rid: int
     tokens: np.ndarray          # int32 (g,)
-    reason: str                 # 'eos' | 'length' | 'cached'
+    reason: str                 # 'eos' | 'length' | 'score' | 'cached'
     prompt_len: int
     submit_t: float             # time.perf_counter() stamp at submit
     finish_t: float             # time.perf_counter() stamp at finish
@@ -189,6 +222,13 @@ class Completion:
     swapped_s: float = 0.0              # time parked in the SwapStore
     recomputed_steps: int = 0           # decode ticks redone after preempt
     preemptions: int = 0
+    # score() requests: log p(prompt[i] | prompt[:i]) for i = 1..L-1,
+    # fp32 (L-1,); None for generate requests
+    logprobs: Optional[np.ndarray] = None
+    # speculative-decoding effort for this request (0 when speculate=0
+    # or served from cache): drafts accepted / proposed
+    accepted: int = 0
+    drafted: int = 0
 
     @property
     def latency(self) -> float:
@@ -234,27 +274,34 @@ class RequestCache:
     Zipfian traffic repeats a few hot prompts; serving them from the memo
     costs zero decode steps (ROADMAP 'runtime caching' item). Sampled
     (temperature > 0) requests bypass the cache — they are not
-    deterministic functions of the key.
+    deterministic functions of the key. The request *mode* (score vs
+    generate) and the sampling-policy fingerprint are part of the key: a
+    ``score()`` and a ``generate()`` of the same prompt return different
+    payloads and must never alias in the memo.
     """
 
     def __init__(self, maxsize: int = 1024):
         self.maxsize = maxsize
-        self._d: "collections.OrderedDict[Tuple, Tuple[np.ndarray, str]]" \
+        self._d: "collections.OrderedDict[Tuple, Tuple[np.ndarray, str, Optional[np.ndarray]]]" \
             = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
 
     @staticmethod
     def key(prompt: np.ndarray, max_new_tokens: int,
-            eos_token: Optional[int]) -> Tuple:
+            eos_token: Optional[int], mode: str = "generate",
+            policy: Tuple = ()) -> Tuple:
         # dtype + shape are part of the key: raw bytes alone collide for
         # e.g. int64([1]) vs int32([1, 0]) (same little-endian bytes) or
-        # a (4,) vs (2, 2) view of the same buffer.
+        # a (4,) vs (2, 2) view of the same buffer. mode + policy
+        # fingerprint (SamplingPolicy.fingerprint()) distinguish
+        # score/generate and sampling configurations of one prompt.
         p = np.ascontiguousarray(prompt)
         return (p.tobytes(), p.dtype.str, p.shape,
-                max_new_tokens, eos_token)
+                max_new_tokens, eos_token, mode, tuple(policy))
 
-    def get(self, key: Tuple) -> Optional[Tuple[np.ndarray, str]]:
+    def get(self, key: Tuple) \
+            -> Optional[Tuple[np.ndarray, str, Optional[np.ndarray]]]:
         got = self._d.get(key)
         if got is None:
             self.misses += 1
@@ -263,14 +310,18 @@ class RequestCache:
         self.hits += 1
         return got
 
-    def put(self, key: Tuple, tokens: np.ndarray, reason: str):
+    def put(self, key: Tuple, tokens: np.ndarray, reason: str,
+            logprobs: Optional[np.ndarray] = None):
         # defensive copy, frozen: the caller (and the original
         # requester's Completion) may hold the array we were handed —
         # memoizing it by reference would let `completion.tokens[0] = x`
         # corrupt every future hit. get() consumers copy on the way out.
         tokens = np.asarray(tokens, np.int32).copy()
         tokens.setflags(write=False)
-        self._d[key] = (tokens, reason)
+        if logprobs is not None:
+            logprobs = np.asarray(logprobs, np.float32).copy()
+            logprobs.setflags(write=False)
+        self._d[key] = (tokens, reason, logprobs)
         self._d.move_to_end(key)
         while len(self._d) > self.maxsize:
             self._d.popitem(last=False)
@@ -288,7 +339,21 @@ _COUNTER_KEYS = (
     "chunk_steps", "generated_tokens", "prefill_tokens",
     "live_decode_slots", "preempted", "swapped_in", "swapped_out",
     "recomputed_decode_steps", "prefix_shared_tokens",
+    # speculative decoding (all 0 when speculate=0; 'real' drafts only —
+    # teacher-forced ramp positions are excluded from the denominator)
+    "spec.drafted_tokens", "spec.accepted_tokens", "spec.rejected_tokens",
+    "spec.rollbacks",
 )
+
+
+def _log_softmax_np(lg: np.ndarray) -> np.ndarray:
+    """Row-wise log-softmax over the last axis, fp32 (host-side prompt
+    scoring from surfaced chunk/decode logits)."""
+    lg = np.asarray(lg, np.float32)
+    m = lg.max(axis=-1, keepdims=True)
+    e = lg - m
+    return (e - np.log(np.exp(e).sum(axis=-1, keepdims=True))).astype(
+        np.float32)
 
 
 class Scheduler:
@@ -296,10 +361,17 @@ class Scheduler:
 
     def __init__(self, cfg: ModelConfig, params,
                  sched: SchedulerConfig = SchedulerConfig(),
-                 tracer: Optional[obs_trace.Tracer] = None):
+                 tracer: Optional[obs_trace.Tracer] = None,
+                 draft_fn=None):
         self.cfg = cfg
         self.params = params
         self.sched = sched
+        # pluggable draft source for speculate=k: draft_fn(seq, need) ->
+        # >= need proposed next tokens given the committed sequence
+        # (prompt + generated so far). None = built-in prompt-lookup
+        # self-draft. A draft model slots in here; draft quality only
+        # affects speed, never correctness (verify rejects disagreement).
+        self._draft_fn = draft_fn
         for field, allowed in (("allocator", ("contiguous", "paged")),
                                ("preempt", ("recompute", "swap")),
                                ("admission", ("optimistic", "reserved"))):
@@ -309,6 +381,26 @@ class Scheduler:
         if sched.prefix_sharing and sched.allocator != "paged":
             raise ValueError("prefix_sharing requires allocator='paged' "
                              "(blocks are the sharing granule)")
+        if sched.speculate < 0:
+            raise ValueError(f"speculate must be >= 0: {sched.speculate}")
+        if sched.speculate:
+            bad = [(s.mixer, s.mlp) for s in cfg.pattern
+                   if s.mixer != "attn" or s.mlp == "rwkv_ffn"]
+            if bad:
+                raise ValueError(
+                    "speculate requires an attention-only pattern with "
+                    f"stateless MLPs (got {bad}): SSM/rwkv_ffn chunk "
+                    "scans cannot roll back rejected drafts")
+            min_view = min(_attn_view_len(s, sched.max_len)
+                           for s in cfg.pattern)
+            if sched.speculate + 1 > min_view:
+                raise ValueError(
+                    f"speculate={sched.speculate}: verify span "
+                    f"{sched.speculate + 1} exceeds the smallest "
+                    f"attention view length {min_view} (the rollback "
+                    "scatter needs distinct ring rows)")
+        # validates temperature/top_k/top_p ranges (ValueError on bad)
+        engine.SamplingPolicy(sched.temperature, sched.top_k, sched.top_p)
         # shared prefixes must end on a chunk boundary AND a block
         # boundary: the sharer skips whole chunk steps and maps whole
         # blocks, so only lcm-aligned prefixes keep the remaining
@@ -340,7 +432,8 @@ class Scheduler:
         # p50/p95) — the sampled series SLO rules like ``ttft_p95 < X``
         # monitor; fresh per scheduler so benchmarks don't cross-pollute
         self._lat = {name: obs_metrics.Histogram()
-                     for name in ("queue_wait_ms", "ttft_ms", "itl_ms")}
+                     for name in ("queue_wait_ms", "ttft_ms", "itl_ms",
+                                  "spec.accept_len")}
         # closed-loop actuator knobs (obs.control.BackpressureController):
         # admit_cap caps admissions per tick while an overload alert
         # fires (None = uncapped FCFS), preempt_override flips the
@@ -381,12 +474,19 @@ class Scheduler:
     # -- submission ----------------------------------------------------------
 
     def submit(self, prompts: Sequence, max_new_tokens: Optional[int] = None,
-               temperature: Optional[float] = None) -> List[int]:
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None,
+               top_p: Optional[float] = None) -> List[int]:
         """Enqueue prompts (FCFS); returns request ids. Cached greedy
-        repeats complete immediately without touching the pool."""
+        repeats complete immediately without touching the pool.
+        temperature/top_k/top_p default to the SchedulerConfig values and
+        form the batch's SamplingPolicy (validated here, ValueError)."""
         mnt = self.sched.max_new_tokens if max_new_tokens is None \
             else max_new_tokens
-        temp = self.sched.temperature if temperature is None else temperature
+        policy = engine.SamplingPolicy(
+            self.sched.temperature if temperature is None else temperature,
+            self.sched.top_k if top_k is None else top_k,
+            self.sched.top_p if top_p is None else top_p)
         rids = []
         # user-input feasibility checks raise ValueError (not assert:
         # they must hold under `python -O` too — the pool's progress
@@ -419,8 +519,9 @@ class Scheduler:
             self._tl[rid] = _Timeline(submit_t=time.perf_counter())
             self.counters["submitted"] += 1
             self.tracer.instant("submit", "scheduler", rid=rid)
-            if self.sched.cache_requests and temp <= 0.0:
-                key = RequestCache.key(p, mnt, self.sched.eos_token)
+            if self.sched.cache_requests and policy.greedy:
+                key = RequestCache.key(p, mnt, self.sched.eos_token,
+                                       policy=policy.fingerprint())
                 if key in self._inflight:
                     # coalesce: an identical request is already queued or
                     # decoding — ride its completion (memo-layer hit: a
@@ -431,13 +532,65 @@ class Scheduler:
                     continue
                 got = self.request_cache.get(key)
                 if got is not None:
-                    toks, _ = got
+                    toks, _, _ = got
                     self._finish(rid, len(p), toks.copy(), "cached")
                     rids.append(rid)
                     continue
                 self._inflight[key] = []
             self._queue.append(_Slot(rid=rid, prompt=p, max_new_tokens=mnt,
-                                     temperature=temp))
+                                     policy=policy))
+            rids.append(rid)
+        return rids
+
+    def score(self, prompts: Sequence) -> List[int]:
+        """Enqueue prompts for per-token logprob scoring; returns request
+        ids. Each completion carries ``logprobs`` — fp32 (L-1,) with
+        ``logprobs[i-1] = log p(prompt[i] | prompt[:i])`` — and no
+        generated tokens (reason 'score'). Scoring rides the same chunk
+        path as prefill (the per-chunk-logits seam), teacher-forcing the
+        prompt and reading every position's logits; deterministic, so
+        results memoize in the RequestCache under a score-mode key that
+        can never alias a generate() of the same prompt."""
+        batch = []
+        for p in prompts:
+            p = np.asarray(p, np.int32).reshape(-1)
+            if not 2 <= len(p) <= self.sched.max_len:
+                raise ValueError(
+                    f"score prompt length {len(p)} must be in "
+                    f"[2, max_len={self.sched.max_len}]")
+            if self.slots.paged:
+                why = self.slots.fits_pool(len(p))
+                if why is not None:
+                    raise ValueError(why)
+            batch.append(p)
+        policy = engine.SamplingPolicy()        # scoring is greedy-only
+        rids = []
+        for p in batch:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._tl[rid] = _Timeline(submit_t=time.perf_counter())
+            self.counters["submitted"] += 1
+            self.tracer.instant("submit", "scheduler", rid=rid, mode="score")
+            if self.sched.cache_requests:
+                key = RequestCache.key(p, 0, self.sched.eos_token,
+                                       mode="score",
+                                       policy=policy.fingerprint())
+                if key in self._inflight:
+                    self._inflight[key].append(rid)
+                    self.request_cache.hits += 1
+                    rids.append(rid)
+                    continue
+                got = self.request_cache.get(key)
+                if got is not None:
+                    toks, _, lps = got
+                    self._finish(rid, len(p), toks.copy(), "cached",
+                                 logprobs=None if lps is None
+                                 else lps.copy())
+                    rids.append(rid)
+                    continue
+                self._inflight[key] = []
+            self._queue.append(_Slot(rid=rid, prompt=p, max_new_tokens=0,
+                                     policy=policy, mode="score"))
             rids.append(rid)
         return rids
 
@@ -554,13 +707,15 @@ class Scheduler:
                 # prefix sharing needs the prompt (to match the index)
                 # and the request's full span (ring groups only share
                 # when the span fits the ring, so no wrap can ever
-                # write through a shared block)
+                # write through a shared block). Score rows never share:
+                # a shared prefix skips the chunk steps whose logits ARE
+                # the scored logprobs.
                 span = len(st.prompt) + st.max_new_tokens
-                if not self.slots.can_admit(need, prompt=st.prompt,
-                                            span=span):
+                pr = st.prompt if st.mode == "generate" else None
+                if not self.slots.can_admit(need, prompt=pr, span=span):
                     return
                 slot = self.slots.alloc(st.rid, prompt_len=need,
-                                        prompt=st.prompt, span=span)
+                                        prompt=pr, span=span)
                 start = self.slots.prefill_start(slot)
                 if start:
                     # the leading `start` positions were admitted mapped
@@ -631,19 +786,23 @@ class Scheduler:
             st.ctx = 0
             st.chunk_tokens = 0
             st.out = []
+            st.logprobs = []    # a score restart re-collects from scratch
         st.admit_seq = -1
         self._queue.appendleft(st)
         self.counters["preempted"] += 1
         tl.preemptions += 1
 
-    def _ensure_or_preempt(self, slot: int, upto_pos: int) -> bool:
+    def _ensure_or_preempt(self, slot: int, upto_pos: int,
+                           write_from: Optional[int] = None) -> bool:
         """Grow ``slot``'s storage to cover ``upto_pos``; on block
         exhaustion evict the youngest live slot and retry. The oldest
         live request is only ever self-evicted (when nothing younger is
         left), and the submit-time feasibility assert guarantees it fits
         an empty pool — so the pool always makes forward progress.
-        Returns False iff ``slot`` itself was preempted."""
-        while not self.slots.ensure(slot, upto_pos):
+        ``write_from`` bounds the copy-on-write scan (speculative ticks
+        write a span, not one position). Returns False iff ``slot``
+        itself was preempted."""
+        while not self.slots.ensure(slot, upto_pos, write_from=write_from):
             victim = max(self._by_slot, key=lambda s:
                          self._by_slot[s].admit_seq)
             self._preempt(victim)
@@ -688,17 +847,69 @@ class Scheduler:
             # pad rows duplicate row 0 bit-for-bit -> scatter deterministic
             with self.tracer.span("prefill-chunk", "scheduler",
                                   slots=m, chunk=ch):
-                self.slots.run_chunk(self.params, idx, toks, pos)
+                logits = self.slots.run_chunk(self.params, idx, toks, pos)
+            score_rows = [j for j, s in enumerate(need)
+                          if self._by_slot[s].mode == "score"]
+            if score_rows:
+                # chunk logits ARE the prompt scores: logits[j, i]
+                # predicts position ctx+i+1, all of which are prompt
+                # positions <= L-1 here (the chunk condition guarantees
+                # ctx+ch <= L-1)
+                lp = _log_softmax_np(
+                    np.asarray(logits[np.asarray(score_rows)], np.float32))
+                for row, j in enumerate(score_rows):
+                    st = self._by_slot[need[j]]
+                    fed = st.prompt[st.ctx + 1:st.ctx + ch + 1]
+                    st.logprobs.extend(
+                        float(lp[row, i, t]) for i, t in enumerate(fed))
             for s in need:
                 self._by_slot[s].ctx += ch
                 self._by_slot[s].chunk_tokens += ch
             self.counters["chunk_steps"] += 1
             self.counters["prefill_tokens"] += m * ch
+            # a score row whose last needed position (L-2) was just
+            # consumed is complete without ever decoding
+            for s in need:
+                st = self._by_slot.get(s)
+                if st is not None and st.mode == "score" \
+                        and st.ctx >= len(st.prompt) - 1:
+                    self._retire(s, "score")
+
+    def _max_commit(self, st: _Slot) -> int:
+        """Last cache position a speculative tick may commit for ``st``:
+        generate rows never feed past the position producing their final
+        token (L + max_new - 2); score rows never feed past the position
+        producing the last prompt logprob (L - 2)."""
+        ln = len(st.prompt)
+        return ln - 2 if st.mode == "score" else ln + st.max_new_tokens - 2
+
+    def _first_token(self, slot: int, st: _Slot):
+        """First-generated-token bookkeeping: TTFT stamp, phase flip,
+        prefix publication (shared by the plain and speculative ticks)."""
+        tl = self._tl[st.rid]
+        if tl.first_token_t is None:
+            tl.first_token_t = time.perf_counter()
+            self._lat["ttft_ms"].observe(
+                (tl.first_token_t - tl.submit_t) * 1e3)
+        # the prefill phase ends at the first sampled token
+        self._phase_end(slot)
+        self._phase_begin(slot, "decode", st.rid)
+        # publish the prompt's chunk-consumed prefix blocks to
+        # the prefix index now that their KV is fully written
+        # (no-op unless prefix_sharing; idempotent per prompt)
+        self.slots.register_prefix(
+            slot, st.prompt, len(st.prompt) + st.max_new_tokens,
+            st.chunk_tokens)
 
     def _decode_once(self):
         """One fused decode over the FULL pool: per-slot tokens, positions
-        and temperatures; free slots run on masked junk (never read)."""
+        and sampling policies; free slots run on masked junk (never
+        read). With ``speculate=k`` the tick is a verify-accept chunk
+        instead (``_decode_speculative``)."""
         if not self._by_slot:
+            return
+        if self.sched.speculate:
+            self._decode_speculative(self.sched.speculate)
             return
         if self.slots.paged:
             # every live slot writes its cache at position ctx this tick:
@@ -712,25 +923,43 @@ class Scheduler:
         toks = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
         temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        top_ps = np.ones((b,), np.float32)
         for s, st in self._by_slot.items():
             toks[s, 0] = (st.prompt[st.ctx] if st.ctx < len(st.prompt)
                           else st.out[-1])
             pos[s] = st.ctx
-            temps[s] = st.temperature
+            temps[s] = st.policy.temperature
+            top_ks[s] = st.policy.top_k
+            top_ps[s] = st.policy.top_p
         self._key, ks = jax.random.split(self._key)
         with self.tracer.span("decode-tick", "scheduler",
                               live=len(self._by_slot)):
-            nxt = self.slots.run_decode(
+            nxt, logits = self.slots.run_decode(
                 self.params, jnp.asarray(toks), jnp.asarray(pos),
-                jnp.asarray(temps), ks)
+                jnp.asarray(temps), ks, jnp.asarray(top_ks),
+                jnp.asarray(top_ps))
             nxt = np.asarray(nxt)
         self.counters["decode_steps"] += 1
         # admitted-concurrency numerator: mean live slots per decode tick
         # = live_decode_slots / decode_steps (fig_serve's occupancy gate)
         self.counters["live_decode_slots"] += len(self._by_slot)
+        score_live = [s for s, st in self._by_slot.items()
+                      if st.mode == "score"]
+        lp = None
+        if score_live:
+            # the fed token at ctx predicts position ctx+1 — a prompt
+            # position (score rows retire before ctx reaches L-1)
+            lp = _log_softmax_np(np.asarray(logits[:, 0], np.float32))
 
         for s in sorted(self._by_slot):
             st = self._by_slot[s]
+            if st.mode == "score":
+                st.logprobs.append(float(lp[s, st.prompt[st.ctx + 1]]))
+                st.ctx += 1
+                if st.ctx >= len(st.prompt) - 1:
+                    self._retire(s, "score")
+                continue
             st.ctx += 1
             if st.ctx < len(st.prompt):
                 continue                            # still teacher-forcing
@@ -738,24 +967,178 @@ class Scheduler:
             st.out.append(tok)
             self.counters["generated_tokens"] += 1
             if len(st.out) == 1:
-                tl = self._tl[st.rid]
-                if tl.first_token_t is None:
-                    tl.first_token_t = time.perf_counter()
-                    self._lat["ttft_ms"].observe(
-                        (tl.first_token_t - tl.submit_t) * 1e3)
-                # the prefill phase ends at the first sampled token
-                self._phase_end(s)
-                self._phase_begin(s, "decode", st.rid)
-                # publish the prompt's chunk-consumed prefix blocks to
-                # the prefix index now that their KV is fully written
-                # (no-op unless prefix_sharing; idempotent per prompt)
-                self.slots.register_prefix(
-                    s, st.prompt, len(st.prompt) + st.max_new_tokens,
-                    st.chunk_tokens)
+                self._first_token(s, st)
             eos = (self.sched.eos_token is not None
                    and tok == self.sched.eos_token)
             if eos or len(st.out) >= st.max_new_tokens:
                 self._retire(s, "eos" if eos else "length")
+
+    # -- speculative decoding --------------------------------------------
+
+    @staticmethod
+    def _lookup_draft(seq: np.ndarray, need: int) -> List[int]:
+        """Prompt-lookup self-draft: find the most recent earlier
+        occurrence of the sequence's trailing 2-gram and copy the tokens
+        that followed it; repeat the last token when nothing matches.
+        Draft quality only affects speed — never correctness (the verify
+        step rejects disagreeing drafts)."""
+        n = len(seq)
+        drafts: List[int] = []
+        if n >= 3:
+            a, b = int(seq[-2]), int(seq[-1])
+            for i in range(n - 3, -1, -1):
+                if int(seq[i]) == a and int(seq[i + 1]) == b:
+                    j = i + 2
+                    while len(drafts) < need and j < n:
+                        drafts.append(int(seq[j]))
+                        j += 1
+                    break
+        last = int(seq[-1]) if n else 0
+        while len(drafts) < need:
+            drafts.append(last)
+        return drafts
+
+    def _draft_tokens(self, st: _Slot, k: int) -> List[int]:
+        """k draft tokens for positions ctx+1..ctx+k: true prompt tokens
+        through the teacher-forced ramp (they MUST be — the accepted span
+        is written to the cache), prompt-lookup self-draft past it."""
+        ln = len(st.prompt)
+        out: List[int] = []
+        p = st.ctx + 1
+        while len(out) < k and p < ln:
+            out.append(int(st.prompt[p]))
+            p += 1
+        if len(out) < k:
+            seq = (st.prompt if not st.out
+                   else np.concatenate([st.prompt,
+                                        np.asarray(st.out, np.int32)]))
+            need = k - len(out)
+            if self._draft_fn is not None:
+                got = [int(t) for t in self._draft_fn(seq, need)][:need]
+                out.extend(got)
+                need -= len(got)
+                if need:                    # short draft: pad via lookup
+                    out.extend(self._lookup_draft(seq, need))
+            else:
+                out.extend(self._lookup_draft(seq, need))
+        return out
+
+    def _decode_speculative(self, k: int):
+        """One fused verify-accept tick over the FULL pool: feed k+1
+        tokens per slot (true next token + k drafts) through the chunk
+        path, accept each row's agreeing draft prefix, emit up to k+1
+        tokens. Rejected cache writes were rolled back in-program, so
+        host state only ever advances by exactly what was committed —
+        greedy streams are bit-identical to speculate=0."""
+        if self.slots.paged:
+            for s in sorted(self._by_slot):
+                if s in self._by_slot:
+                    st = self._by_slot[s]
+                    # the verify span writes [ctx, ctx+k]; only positions
+                    # that may COMMIT need mapped blocks (rolled-back
+                    # writes beyond the mapping land in the trash block,
+                    # which is never attended)
+                    upto = max(min(st.ctx + k, self._max_commit(st)),
+                               st.ctx)
+                    self._ensure_or_preempt(s, upto, write_from=st.ctx)
+            if not self._by_slot:
+                return
+        b = self.slots.num_slots
+        toks = np.zeros((b, k + 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        plen = np.ones((b,), np.int32)
+        maxp = np.zeros((b,), np.int32)
+        score_f = np.zeros((b,), bool)
+        active = np.zeros((b,), bool)
+        temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        top_ps = np.ones((b,), np.float32)
+        for s, st in self._by_slot.items():
+            first = (st.prompt[st.ctx] if st.ctx < len(st.prompt)
+                     else st.out[-1])
+            toks[s] = [int(first)] + self._draft_tokens(st, k)
+            pos[s] = st.ctx
+            plen[s] = len(st.prompt)
+            maxp[s] = self._max_commit(st)
+            score_f[s] = st.mode == "score"
+            active[s] = True
+            temps[s] = st.policy.temperature
+            top_ks[s] = st.policy.top_k
+            top_ps[s] = st.policy.top_p
+        self._key, ks = jax.random.split(self._key)
+        with self.tracer.span("decode-tick", "scheduler",
+                              live=len(self._by_slot), speculate=k):
+            out_tok, acc_n, lp = self.slots.run_verify(
+                self.params, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(plen), jnp.asarray(maxp), jnp.asarray(score_f),
+                jnp.asarray(active), jnp.asarray(temps),
+                jnp.asarray(top_ks), jnp.asarray(top_ps), ks)
+            out_tok = np.asarray(out_tok)
+            acc_n = np.asarray(acc_n)
+            lp = np.asarray(lp, np.float32)
+        self.counters["decode_steps"] += 1
+        self.counters["live_decode_slots"] += len(self._by_slot)
+
+        tick_accepts: List[int] = []
+        for s in sorted(self._by_slot):
+            st = self._by_slot[s]
+            n = int(acc_n[s])
+            adv = n + 1
+            base = st.ctx
+            ln = len(st.prompt)
+            if st.mode == "score":
+                # lp[i] scores the token fed at chunk slot i+1 (position
+                # base+i+1) — a prompt token for every i <= n (the accept
+                # rule clamps score rows to n <= k-1)
+                st.logprobs.extend(float(lp[s, i]) for i in range(adv))
+                st.ctx = base + adv
+                if st.ctx >= ln - 1:
+                    self._retire(s, "score")
+                continue
+            if st.policy.greedy:
+                # spec accounting counts REAL drafts only: ramp positions
+                # are teacher-forced prompt tokens, not speculation
+                forced = max(0, min(ln - (base + 1), k))
+                real_drafted = k - forced
+                real_accepted = max(n - forced, 0)
+                rejected = real_drafted - real_accepted
+                st.drafted += real_drafted
+                st.accepted += real_accepted
+                self.counters["spec.drafted_tokens"] += real_drafted
+                self.counters["spec.accepted_tokens"] += real_accepted
+                self.counters["spec.rejected_tokens"] += rejected
+                if rejected > 0:
+                    self.counters["spec.rollbacks"] += 1
+                if real_drafted > 0:
+                    self._lat["spec.accept_len"].observe(
+                        float(real_accepted))
+                    tick_accepts.append(real_accepted)
+            retired = False
+            for i in range(adv):
+                if base + i + 1 < ln:
+                    continue                        # still teacher-forcing
+                tok = int(out_tok[s, i])
+                st.out.append(tok)
+                self.counters["generated_tokens"] += 1
+                if len(st.out) == 1:
+                    self._first_token(s, st)
+                eos = (self.sched.eos_token is not None
+                       and tok == self.sched.eos_token)
+                if eos or len(st.out) >= st.max_new_tokens:
+                    # tokens past an EOS were committed to the cache but
+                    # the slot retires here — release discards them, so
+                    # the stream matches the oracle exactly
+                    st.ctx = base + adv
+                    self._retire(s, "eos" if eos else "length")
+                    retired = True
+                    break
+            if not retired:
+                st.ctx = base + adv
+        if tick_accepts and self.tracer.enabled:
+            # Perfetto counter track: per-tick accepted draft length
+            self.tracer.counter("spec.accept_len", "scheduler",
+                                mean=float(np.mean(tick_accepts)),
+                                max=float(np.max(tick_accepts)))
 
     def _retire(self, slot: int, reason: str):
         st = self._by_slot.pop(slot)
@@ -764,16 +1147,22 @@ class Scheduler:
                             reason=reason)
         self.slots.release(slot)
         toks = np.asarray(st.out, np.int32)
-        if self.sched.cache_requests and st.temperature <= 0.0:
+        lps = (np.asarray(st.logprobs, np.float32)
+               if st.mode == "score" else None)
+        if self.sched.cache_requests and st.policy.greedy:
             key = RequestCache.key(st.prompt, st.max_new_tokens,
-                                   self.sched.eos_token)
-            self.request_cache.put(key, toks, reason)
+                                   self.sched.eos_token, mode=st.mode,
+                                   policy=st.policy.fingerprint())
+            self.request_cache.put(key, toks, reason, lps)
             for rid in self._inflight.pop(key, ()):     # coalesced waiters
-                self._finish(rid, len(st.prompt), toks.copy(), "cached")
-        self._finish(st.rid, len(st.prompt), toks, reason)
+                self._finish(rid, len(st.prompt), toks.copy(), "cached",
+                             logprobs=None if lps is None else lps.copy())
+        self._finish(st.rid, len(st.prompt), toks, reason, logprobs=lps,
+                     accepted=st.accepted, drafted=st.drafted)
 
     def _finish(self, rid: int, prompt_len: int, tokens: np.ndarray,
-                reason: str):
+                reason: str, logprobs: Optional[np.ndarray] = None,
+                accepted: int = 0, drafted: int = 0):
         self.counters["completed"] += 1
         self._fresh.append(rid)
         tl = self._tl.pop(rid)
@@ -782,7 +1171,8 @@ class Scheduler:
             submit_t=tl.submit_t, finish_t=time.perf_counter(),
             admit_t=tl.admit_t, first_token_t=tl.first_token_t,
             swapped_s=tl.swapped_s, recomputed_steps=tl.recomputed_steps,
-            preemptions=tl.preemptions)
+            preemptions=tl.preemptions, logprobs=logprobs,
+            accepted=accepted, drafted=drafted)
         self.results[rid] = comp
         # ITL is only meaningful for pool-served requests (cache hits
         # have no decode phase)

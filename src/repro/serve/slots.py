@@ -73,7 +73,8 @@ def _scatter(caches, sub, idx):
 
 @functools.lru_cache(maxsize=None)
 def _pooled_chunk_step(cfg: ModelConfig):
-    """Fused gather -> chunk-prefill -> scatter over the pooled caches.
+    """Fused gather -> chunk-prefill -> scatter over the pooled caches,
+    returning (logits (m, C, V), caches).
 
     One jitted program (per cfg and sub-batch shape) instead of three
     dispatches: at small sub-batches the per-call overhead of separate
@@ -84,8 +85,8 @@ def _pooled_chunk_step(cfg: ModelConfig):
     def run(params, caches, idx, tokens, pos):
         sub = jax.tree_util.tree_map(
             lambda l: jnp.take(l, idx, axis=_SLOT_AXIS), caches)
-        _, sub = step(params, sub, tokens, pos)
-        return jax.tree_util.tree_map(
+        logits, sub = step(params, sub, tokens, pos)
+        return logits, jax.tree_util.tree_map(
             lambda l, s: l.at[:, idx].set(s.astype(l.dtype)), caches, sub)
 
     return obs_trace.instrumented_jit(
@@ -188,14 +189,23 @@ class _ContiguousBacking:
                                jnp.asarray(idx, jnp.int32))
 
     def run_chunk(self, params, idx, tokens, pos):
-        self.caches = _pooled_chunk_step(self.cfg)(
+        logits, self.caches = _pooled_chunk_step(self.cfg)(
             params, self.caches, jnp.asarray(idx, jnp.int32),
             jnp.asarray(tokens), jnp.asarray(pos))
+        return logits
 
-    def run_decode(self, params, tokens, pos, temps, key):
-        nxt, _, self.caches = engine.jit_slot_decode_step(self.cfg)(
-            params, self.caches, tokens, pos, temps, key)
-        return nxt
+    def run_decode(self, params, tokens, pos, temps, key,
+                   top_ks=None, top_ps=None):
+        nxt, logits, self.caches = engine.jit_slot_decode_step(self.cfg)(
+            params, self.caches, tokens, pos, temps, key, top_ks, top_ps)
+        return nxt, logits
+
+    def run_verify(self, params, tokens, pos, prompt_len, max_pos, score,
+                   active, temps, top_ks, top_ps, key):
+        out_tok, n, lp, self.caches = engine.jit_verify_step(self.cfg)(
+            params, self.caches, tokens, pos, prompt_len, max_pos, score,
+            active, temps, top_ks, top_ps, key)
+        return out_tok, n, lp
 
     def stats(self) -> dict:
         return {"allocator": "contiguous"}
@@ -715,15 +725,32 @@ class _PagedBacking:
 
     def run_chunk(self, params, idx, tokens, pos):
         rows = self._rows_for(idx)
-        self.dense, self.paged = engine.jit_paged_chunk_step(self.cfg)(
+        logits, self.dense, self.paged = engine.jit_paged_chunk_step(
+            self.cfg)(
             params, self.dense, self.paged, jnp.asarray(idx, jnp.int32),
             rows, jnp.asarray(tokens), jnp.asarray(pos), self.block_size)
+        return logits
 
-    def run_decode(self, params, tokens, pos, temps, key):
-        nxt, _, self.dense, self.paged = engine.jit_paged_decode_step(
+    def run_decode(self, params, tokens, pos, temps, key,
+                   top_ks=None, top_ps=None):
+        b = tokens.shape[0]
+        if top_ks is None:
+            top_ks = jnp.zeros((b,), jnp.int32)
+        if top_ps is None:
+            top_ps = jnp.ones((b,), jnp.float32)
+        nxt, logits, self.dense, self.paged = engine.jit_paged_decode_step(
             self.cfg)(params, self.dense, self.paged, self._rows_all(),
-                      tokens, pos, temps, key, self.block_size)
-        return nxt
+                      tokens, pos, temps, key, top_ks, top_ps,
+                      self.block_size)
+        return nxt, logits
+
+    def run_verify(self, params, tokens, pos, prompt_len, max_pos, score,
+                   active, temps, top_ks, top_ps, key):
+        out_tok, n, lp, self.dense, self.paged = engine.jit_paged_verify_step(
+            self.cfg)(params, self.dense, self.paged, self._rows_all(),
+                      tokens, pos, prompt_len, max_pos, score, active,
+                      temps, top_ks, top_ps, key, self.block_size)
+        return out_tok, n, lp
 
     def stats(self) -> dict:
         used = sum(g.pool.used_count for g in self.groups.values())
@@ -980,14 +1007,31 @@ class SlotManager:
 
     def run_chunk(self, params, idx: Sequence[int], tokens, pos):
         """Chunk-prefill slots ``idx`` in place (fused gather -> chunk ->
-        scatter, one dispatch). Same pad-by-repeat contract as scatter."""
-        self.backing.run_chunk(params, idx, tokens, pos)
+        scatter, one dispatch); returns the per-position chunk logits
+        (len(idx), C, V) — prompt scoring reads them, plain prefill
+        ignores them. Same pad-by-repeat contract as scatter."""
+        return self.backing.run_chunk(params, idx, tokens, pos)
 
-    def run_decode(self, params, tokens, pos, temps, key):
-        """ONE fused decode over the whole pool; returns next tokens.
-        (Paged: gather-through-page-tables -> decode -> scatter, still
-        one jitted program per tick.)"""
-        return self.backing.run_decode(params, tokens, pos, temps, key)
+    def run_decode(self, params, tokens, pos, temps, key,
+                   top_ks=None, top_ps=None):
+        """ONE fused decode over the whole pool; returns (next tokens,
+        logits (B, 1, V)). top_ks/top_ps are optional (B,) per-slot
+        sampling filters (None = disabled). (Paged:
+        gather-through-page-tables -> decode -> scatter, still one jitted
+        program per tick.)"""
+        return self.backing.run_decode(params, tokens, pos, temps, key,
+                                       top_ks, top_ps)
+
+    def run_verify(self, params, tokens, pos, prompt_len, max_pos, score,
+                   active, temps, top_ks, top_ps, key):
+        """ONE fused speculative verify-accept tick over the whole pool
+        (engine.make_verify_step contract): teacher-forces tokens
+        (B, k+1), returns (out_tok (B, k+1), accept_n (B,), logprobs
+        (B, k+1)); rejected cache writes are rolled back in-program, so
+        the pool only ever holds committed rows."""
+        return self.backing.run_verify(params, tokens, pos, prompt_len,
+                                       max_pos, score, active, temps,
+                                       top_ks, top_ps, key)
 
     def metrics(self) -> dict:
         """Registry 'serve.slots' provider: pool-facade levels (the

@@ -223,6 +223,54 @@ def main():
         print(f"[smoke_opt] {name}: OK "
               f"({sched.counters['prefix_shared_tokens']} shared tokens)")
 
+    # speculative differential: speculate=k greedy streams must be bit-
+    # identical to the k=0 baseline across the contiguous, paged+swap,
+    # windowed-ring and shared-prefix pools — the verify-accept rollback
+    # and the host commit logic are the serve path's newest stateful
+    # code, and a stripped assert there would silently commit rejected
+    # KV. Real drafts must flow (else the differential is vacuous) and
+    # the swap arms must still recompute nothing.
+    spec_arms = [
+        ("spec/contiguous-k2", cfg, params, base, prompts, mnts,
+         dict(speculate=2)),
+        ("spec/paged-swap-k3", cfg, params, base, prompts, mnts,
+         dict(pool, preempt="swap", speculate=3)),
+        ("spec/windowed-swap-k2", cfg_w, params_w, base_w, prompts, mnts,
+         dict(pool_w, preempt="swap", speculate=2)),
+    ]
+    for name, c_, p_, b_, ps_, ms_, kw in spec_arms:
+        got, sched = run_trace(c_, p_, ps_, ms_, **kw)
+        for rid in b_:
+            check(got[rid].tokens.tolist() == b_[rid].tokens.tolist(),
+                  f"{name}: rid {rid} stream diverged from speculate=0")
+            check(got[rid].reason == b_[rid].reason,
+                  f"{name}: rid {rid} finish reason diverged")
+        c = sched.counters
+        check(c["spec.drafted_tokens"] > 0,
+              f"{name}: no real drafts flowed (vacuous differential)")
+        if "swap" in name:
+            check(c["recomputed_decode_steps"] == 0,
+                  f"{name}: speculation recomputed decode steps")
+        if "paged" in name or "windowed" in name:
+            check(sched.stats()["blocks_used"] == 0,
+                  f"{name}: retire leaked blocks")
+        print(f"[smoke_opt] {name}: OK ({c['spec.accepted_tokens']}/"
+              f"{c['spec.drafted_tokens']} drafts accepted, "
+              f"{c['spec.rollbacks']} rollbacks)")
+    sp_off, _ = run_trace(cfg, params, sp_prompts, sp_mnts,
+                          **dict(pool, preempt="swap"))
+    sp_on, sched = run_trace(cfg, params, sp_prompts, sp_mnts,
+                             prefix_sharing=True, speculate=2,
+                             **dict(pool, preempt="swap"))
+    for rid in sp_off:
+        check(sp_on[rid].tokens.tolist() == sp_off[rid].tokens.tolist(),
+              f"spec/shared-prefix: rid {rid} diverged")
+    check(sched.counters["prefix_shared_tokens"] > 0
+          and sched.counters["spec.drafted_tokens"] > 0,
+          "spec/shared-prefix: sharing or speculation never engaged")
+    print(f"[smoke_opt] spec/shared-prefix-k2: OK "
+          f"({sched.counters['prefix_shared_tokens']} shared tokens)")
+
     # user-input feasibility must be ValueError, not a stripped assert
     from repro.serve import Scheduler, SchedulerConfig
     sched = Scheduler(cfg, params, SchedulerConfig(

@@ -676,7 +676,7 @@ def test_request_cache_put_copies_and_freezes():
     src = np.asarray([5, 6], np.int32)
     rc.put(k, src, "length")
     src[:] = 0                              # scribble after put
-    got, reason = rc.get(k)
+    got, reason, _ = rc.get(k)
     assert got.tolist() == [5, 6] and reason == "length"
     assert not got.flags.writeable          # hits can't poison it either
 

@@ -1,0 +1,385 @@
+"""Per-chunk logits end-to-end: the chunk/decode logits seam, top-k /
+top-p sampling filters, self-speculative decoding (verify-accept +
+rollback bit-identical to the oracle), the prompt-scoring API, and the
+sampling-policy / mode-aware request-cache keys."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import (RequestCache, Scheduler, SchedulerConfig,
+                         SlotManager, engine)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = configs.reduced_config("gemma-2b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def gemma3():
+    """Windowed model: sliding-window (16) rings + global layers."""
+    cfg = configs.reduced_config("gemma3-12b")
+    return cfg, T.init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(rng, vocab, lens):
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lens]
+
+
+# --------------------------------------------------------------------------
+# the per-chunk-logits seam: chunk logits == stepwise decode, bitwise,
+# at EVERY position (dense / paged / windowed-paged)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model,paged", [
+    ("gemma", False), ("gemma", True), ("gemma3", True)])
+def test_chunk_logits_bitwise_match_stepwise_decode(request, model, paged):
+    """The tentpole contract: run_chunk surfaces (B, C, V) logits that
+    are BITWISE identical to feeding the same tokens one at a time
+    through the fused decode step — at every position, not just the
+    last. Speculative verification and prompt scoring both stand on
+    this identity."""
+    cfg, params = request.getfixturevalue(model)
+    L, ch, cache = 24, 8, 32
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, L).astype(np.int32)
+    kw = (dict(paged=True, block_size=4, num_blocks=32)
+          if paged else {})
+
+    sm_c = SlotManager(cfg, num_slots=2, cache_slots=cache, **kw)
+    sc = sm_c.alloc(owner=0, prompt_len=L)
+    chunk_logits = []
+    for c0 in range(0, L, ch):
+        sm_c.ensure(sc, c0 + ch - 1)
+        lg = sm_c.run_chunk(params, [sc], toks[None, c0:c0 + ch],
+                            np.asarray([c0], np.int32))
+        chunk_logits.append(np.asarray(lg[0], np.float32))
+    chunk_logits = np.concatenate(chunk_logits, axis=0)     # (L, V)
+
+    sm_d = SlotManager(cfg, num_slots=2, cache_slots=cache, **kw)
+    sd = sm_d.alloc(owner=0, prompt_len=L)
+    b = sm_d.num_slots
+    key = jax.random.PRNGKey(0)
+    for i in range(L):
+        sm_d.ensure(sd, i)
+        tok = np.zeros((b, 1), np.int32)
+        tok[sd, 0] = toks[i]
+        _, lg = sm_d.run_decode(params, jnp.asarray(tok),
+                                jnp.full((b,), i, jnp.int32),
+                                jnp.zeros((b,), jnp.float32), key)
+        np.testing.assert_array_equal(
+            chunk_logits[i], np.asarray(lg[sd, 0], np.float32),
+            err_msg=f"position {i}: chunk logits != stepwise decode")
+
+
+# --------------------------------------------------------------------------
+# sample_token: top-k / top-p filters
+# --------------------------------------------------------------------------
+
+def test_filter_disabled_is_bitwise_identity():
+    lg = jax.random.normal(jax.random.PRNGKey(1), (3, 17), jnp.float32)
+    out = engine._filter_topk_topp(lg, jnp.zeros((3,), jnp.int32),
+                                   jnp.ones((3,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(lg))
+
+
+def test_sample_token_top_k_one_is_greedy():
+    """top_k=1 must reproduce greedy exactly on both the scalar and the
+    per-slot-vector paths, at any temperature."""
+    lg = jax.random.normal(jax.random.PRNGKey(2), (4, 1, 9), jnp.float32)
+    greedy = engine.sample_token(lg)
+    for i in range(20):
+        key = jax.random.PRNGKey(100 + i)
+        scalar = engine.sample_token(lg, key, temperature=3.0, top_k=1)
+        vector = engine.sample_token(lg, key,
+                                     jnp.full((4,), 3.0, jnp.float32),
+                                     jnp.ones((4,), jnp.int32),
+                                     jnp.ones((4,), jnp.float32))
+        assert scalar.tolist() == greedy.tolist()
+        assert vector.tolist() == greedy.tolist()
+
+
+def test_sample_token_top_k_mass_stays_in_set():
+    """With top_k=2 every sample lands in the top-2 set; with a tiny
+    top_p only the argmax survives; and each filter actually reaches
+    every allowed token under a hot temperature."""
+    lg = jnp.asarray([[[0.0, 4.0, 1.0, 3.5, -2.0]]] * 2)    # top-2 = {1, 3}
+    seen = set()
+    for i in range(60):
+        t = engine.sample_token(lg, jax.random.PRNGKey(i),
+                                temperature=5.0, top_k=2)
+        seen.update(int(x) for x in t)
+    assert seen == {1, 3}
+    for i in range(20):
+        t = engine.sample_token(lg, jax.random.PRNGKey(i),
+                                temperature=5.0, top_p=1e-6)
+        assert set(t.tolist()) == {1}           # nucleus always has argmax
+
+
+def test_sample_token_greedy_rows_exact_argmax_under_filters():
+    """Per-slot vectors: a greedy row (temp 0) must be EXACTLY argmax of
+    the raw logits even when its filter entries are active — the
+    differential harness's bit-identity depends on it."""
+    lg = jax.random.normal(jax.random.PRNGKey(3), (6, 1, 31), jnp.float32)
+    greedy = engine.sample_token(lg)
+    temps = jnp.asarray([0.0, 2.0, 0.0, 1.0, 0.0, 0.5], jnp.float32)
+    ks = jnp.asarray([3, 3, 0, 5, 1, 0], jnp.int32)
+    ps = jnp.asarray([0.5, 0.9, 0.2, 1.0, 1.0, 0.7], jnp.float32)
+    for i in range(10):
+        got = engine.sample_token(lg, jax.random.PRNGKey(i), temps, ks, ps)
+        for row in (0, 2, 4):
+            assert int(got[row]) == int(greedy[row])
+
+
+def test_sampling_policy_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        engine.SamplingPolicy(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        engine.SamplingPolicy(top_k=-1)
+    with pytest.raises(ValueError, match="top_p"):
+        engine.SamplingPolicy(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        engine.SamplingPolicy(top_p=1.5)
+    assert engine.SamplingPolicy().greedy
+    assert not engine.SamplingPolicy(temperature=0.7).greedy
+
+
+# --------------------------------------------------------------------------
+# RequestCache: mode + sampling policy are part of the key
+# --------------------------------------------------------------------------
+
+def test_request_cache_mode_and_policy_in_key():
+    """Regression: the memo key used to ignore the request mode and the
+    sampling policy — a score() and a generate() of one prompt (or two
+    different top-k configs) would alias and serve each other's
+    artifacts."""
+    p = np.asarray([3, 1, 4, 1, 5], np.int32)
+    kg = RequestCache.key(p, 4, None, mode="generate",
+                          policy=engine.SamplingPolicy().fingerprint())
+    ks = RequestCache.key(p, 4, None, mode="score",
+                          policy=engine.SamplingPolicy().fingerprint())
+    assert kg != ks
+    k1 = RequestCache.key(p, 4, None, policy=(0.0, 0, 1.0))
+    k2 = RequestCache.key(p, 4, None, policy=(0.0, 5, 1.0))
+    k3 = RequestCache.key(p, 4, None, policy=(0.0, 0, 0.9))
+    assert len({k1, k2, k3}) == 3
+    rc = RequestCache(maxsize=4)
+    rc.put(kg, np.asarray([7, 8], np.int32), "length")
+    rc.put(ks, np.asarray([], np.int32), "score",
+           np.asarray([-1.5, -2.0], np.float32))
+    toks, reason, lps = rc.get(kg)
+    assert toks.tolist() == [7, 8] and reason == "length" and lps is None
+    toks, reason, lps = rc.get(ks)
+    assert reason == "score" and lps.tolist() == [-1.5, -2.0]
+    assert not lps.flags.writeable
+
+
+def test_score_and_generate_do_not_alias_end_to_end(gemma):
+    """A cached generate() of a prompt must not satisfy a score() of the
+    same prompt (and vice versa): each mode produces its own artifact."""
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=2, max_len=32, prefill_chunk=8))
+    rng = np.random.default_rng(4)
+    (p,) = _prompts(rng, cfg.vocab, [9])
+    (rg,) = sched.submit([p], max_new_tokens=3)
+    sched.drain()
+    (rs,) = sched.score([p])
+    sched.drain()
+    gen, sc = sched.results[rg], sched.results[rs]
+    assert gen.reason in ("length", "eos") and gen.logprobs is None
+    assert sc.reason == "score" and len(sc.tokens) == 0
+    assert sc.logprobs is not None and len(sc.logprobs) == len(p) - 1
+    # repeat score IS served from the memo, with the logprobs intact
+    (rs2,) = sched.score([p])
+    sched.drain()
+    again = sched.results[rs2]
+    assert again.reason == "cached"
+    np.testing.assert_array_equal(again.logprobs, sc.logprobs)
+
+
+# --------------------------------------------------------------------------
+# speculative decoding: bit-identical to the oracle, counters flow
+# --------------------------------------------------------------------------
+
+def _serve(cfg, params, prompts, mnts, **kw):
+    sc = SchedulerConfig(num_slots=2, max_len=64, prefill_chunk=8,
+                         eos_token=7, cache_requests=False, **kw)
+    sched = Scheduler(cfg, params, sc)
+    rids = [sched.submit([p], max_new_tokens=m)[0]
+            for p, m in zip(prompts, mnts)]
+    sched.drain()
+    return [sched.results[r] for r in rids], sched
+
+
+@pytest.mark.parametrize("model,arm,kw", [
+    ("gemma", "contiguous", {}),
+    ("gemma", "paged", dict(allocator="paged", block_size=8)),
+    ("gemma", "paged-swap", dict(allocator="paged", block_size=8,
+                                 num_blocks=14, preempt="swap")),
+    ("gemma3", "windowed", dict(allocator="paged", block_size=4)),
+])
+@pytest.mark.parametrize("k", [1, 3])
+def test_speculative_streams_bit_identical(request, model, arm, kw, k):
+    """speculate=k greedy streams must be BITWISE identical to the
+    speculate=0 oracle — tokens and finish reasons — on every slot
+    backing, while real drafts actually flow (Completion.drafted > 0
+    for decode-phase requests)."""
+    cfg, params = request.getfixturevalue(model)
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, cfg.vocab, [5, 12, 9, 20, 7])
+    mnts = [8, 5, 10, 6, 9]
+    base, _ = _serve(cfg, params, prompts, mnts, **kw)
+    spec, sched = _serve(cfg, params, prompts, mnts, speculate=k, **kw)
+    for b, s in zip(base, spec):
+        assert s.tokens.tolist() == b.tokens.tolist(), \
+            f"{arm} k={k}: stream diverged"
+        assert s.reason == b.reason
+    assert sched.counters["spec.drafted_tokens"] > 0
+    assert sum(c.drafted for c in spec) == \
+        sched.counters["spec.drafted_tokens"]
+    assert sum(c.accepted for c in spec) == \
+        sched.counters["spec.accepted_tokens"]
+    if "swap" in arm:
+        assert sched.counters["recomputed_decode_steps"] == 0
+
+
+def test_speculative_prefix_sharing_bit_identical(gemma):
+    """Speculation composed with CoW prefix sharing: rejected-draft
+    rollback must never scribble on shared prefix blocks."""
+    cfg, params = gemma
+    rng = np.random.default_rng(6)
+    prefix = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    prompts = [np.concatenate([prefix, s]) for s in
+               _prompts(rng, cfg.vocab, [3, 6, 1, 5])]
+    mnts = [5, 4, 6, 5]
+    kw = dict(allocator="paged", block_size=8, prefix_sharing=True)
+    base, _ = _serve(cfg, params, prompts, mnts, **kw)
+    spec, sched = _serve(cfg, params, prompts, mnts, speculate=2, **kw)
+    for b, s in zip(base, spec):
+        assert s.tokens.tolist() == b.tokens.tolist()
+    assert sched.counters["prefix_shared_tokens"] > 0
+    assert sched.counters["spec.drafted_tokens"] > 0
+
+
+def test_speculative_sampled_rows_still_one_token_per_tick(gemma):
+    """Sampled (temperature > 0) rows never accept drafts — they emit
+    exactly one distribution-correct token per tick and their spec
+    counters stay untouched."""
+    cfg, params = gemma
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg.vocab, [6, 11])
+    spec, sched = _serve(cfg, params, prompts, [6, 6], speculate=3,
+                         temperature=0.8)
+    for c in spec:
+        assert c.drafted == 0 and c.accepted == 0
+        assert len(c.tokens) >= 1
+    assert sched.counters["spec.drafted_tokens"] == 0
+
+
+def test_speculate_validation(gemma, gemma3):
+    """speculate needs an attention-only pattern (SSM chunk scans cannot
+    roll back) and a verify span that fits the smallest attention view."""
+    cfg_r = configs.reduced_config("rwkv6-1.6b")
+    params_r = T.init_model(jax.random.PRNGKey(0), cfg_r)
+    with pytest.raises(ValueError, match="attention-only"):
+        Scheduler(cfg_r, params_r, SchedulerConfig(speculate=2))
+    cfg3, params3 = gemma3
+    window = min(s.window for s in cfg3.pattern if s.window)
+    with pytest.raises(ValueError, match="attention view"):
+        Scheduler(cfg3, params3, SchedulerConfig(
+            num_slots=2, max_len=64, speculate=window))
+    cfg, params = gemma
+    with pytest.raises(ValueError, match="speculate"):
+        Scheduler(cfg, params, SchedulerConfig(speculate=-1))
+
+
+# --------------------------------------------------------------------------
+# score(): per-token prompt logprobs
+# --------------------------------------------------------------------------
+
+def _reference_logprobs(cfg, params, prompt):
+    """log p(prompt[i] | prompt[:i]) via a single-row chunk replay."""
+    caches = T.init_caches(cfg, batch=1, slots=len(prompt) + 4,
+                           per_slot_pos=True)
+    lg, _ = engine.jit_chunk_step(cfg)(
+        params, caches, jnp.asarray(prompt[None, :-1]),
+        jnp.zeros((1,), jnp.int32))
+    lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    return np.asarray([float(lp[0, i, prompt[i + 1]])
+                       for i in range(len(prompt) - 1)], np.float32)
+
+
+@pytest.mark.parametrize("kw", [
+    {}, dict(allocator="paged", block_size=8),
+], ids=["contiguous", "paged"])
+def test_score_matches_reference(gemma, kw):
+    cfg, params = gemma
+    rng = np.random.default_rng(8)
+    prompts = _prompts(rng, cfg.vocab, [2, 9, 17, 30])
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=2, max_len=64, prefill_chunk=8, cache_requests=False,
+        **kw))
+    rids = sched.score(prompts)
+    sched.drain()
+    for r, p in zip(rids, prompts):
+        c = sched.results[r]
+        assert c.reason == "score" and len(c.tokens) == 0
+        ref = _reference_logprobs(cfg, params, p)
+        assert c.logprobs.shape == ref.shape
+        np.testing.assert_allclose(c.logprobs, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_score_speculative_matches_plain(gemma):
+    """score() under speculate=k collects the same logprobs (verify-path
+    log-softmax vs host log-softmax may differ in the last ulp)."""
+    cfg, params = gemma
+    rng = np.random.default_rng(9)
+    prompts = _prompts(rng, cfg.vocab, [4, 13, 21])
+    lps = {}
+    for k in (0, 3):
+        sched = Scheduler(cfg, params, SchedulerConfig(
+            num_slots=2, max_len=64, prefill_chunk=8,
+            cache_requests=False, speculate=k))
+        rids = sched.score(prompts)
+        sched.drain()
+        lps[k] = [sched.results[r].logprobs for r in rids]
+    for a, b in zip(lps[0], lps[3]):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(a, b, rtol=0, atol=1e-5)
+
+
+def test_score_validation(gemma):
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=1, max_len=16, prefill_chunk=8))
+    with pytest.raises(ValueError, match=r"must be in \[2,"):
+        sched.score([np.asarray([3], np.int32)])
+    with pytest.raises(ValueError, match=r"must be in \[2,"):
+        sched.score([np.arange(17, dtype=np.int32)])
+
+
+def test_service_score_adapter(gemma):
+    """The KernelService front door routes 'score' traffic to the
+    attached scheduler and returns per-request logprobs."""
+    from repro.runtime.service import KernelService, Request
+
+    cfg, params = gemma
+    sched = Scheduler(cfg, params, SchedulerConfig(
+        num_slots=2, max_len=32, prefill_chunk=8))
+    svc = KernelService(lm=sched)
+    assert "score" in svc.kernels
+    rng = np.random.default_rng(10)
+    prompts = _prompts(rng, cfg.vocab, [5, 11])
+    got = svc.submit([Request("score", {"prompt": p}) for p in prompts])
+    for res, p in zip(got, prompts):
+        assert res["reason"] == "score"
+        ref = _reference_logprobs(cfg, params, p)
+        np.testing.assert_allclose(res["logprobs"], ref, rtol=1e-5,
+                                   atol=1e-5)
