@@ -101,15 +101,16 @@ def _steady_rates(smp: Sampler, keys) -> Dict[str, Any]:
 
 def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
     """fig_serve with every arm on (paged + windowed + swap +
-    speculative + the closed-loop trace arms when ``trace`` is set)
-    under a wall-clock sampler; returns the baseline document."""
+    speculative + the mesh-sharded arms at 4 shards + the closed-loop
+    trace arms when ``trace`` is set) under a wall-clock sampler;
+    returns the baseline document."""
     from benchmarks import fig_serve
 
     smp = Sampler(wall_clock=True, min_interval_s=0.05, capacity=4096)
     prev = set_sampler(smp)
     try:
         rows = fig_serve.run(smoke=smoke, paged=True, preempt="swap",
-                             trace=trace, spec=True)
+                             trace=trace, spec=True, mesh=4)
     finally:
         set_sampler(prev)
     idx = parse_rows(rows)
@@ -134,6 +135,15 @@ def run_serve(smoke: bool, trace: Optional[str]) -> Dict[str, Any]:
                                            "higher", 0.02)
     m["overload_recompute_occupancy"] = _metric(pp["occupancy_recompute"],
                                                 "higher", 0.02)
+    # sharded slot pool: useful concurrency at mesh=4 vs mesh=1 (equal
+    # per-device cache memory) and the work-stealing win under skewed
+    # arrivals — both seed-fixed greedy quantities
+    m["mesh_occupancy_ratio"] = _metric(
+        idx["fig_serve.mesh_sharded_vs_single"]["mesh_occupancy_ratio"],
+        "higher", 0.02)
+    m["work_stealing_occupancy_ratio"] = _metric(
+        idx["fig_serve.work_stealing"]["occupancy_ratio"],
+        "higher", 0.02)
     # speculative decoding: useful tokens per fused decode step on the
     # draft-friendly arm and its acceptance rate are seed-fixed, greedy
     # quantities (the in-benchmark assert already requires streams

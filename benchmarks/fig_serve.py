@@ -47,8 +47,17 @@ beside it as ``out.json.samples.jsonl``. The control invariant is
 asserted: the closed-loop greedy token streams are bit-identical to an
 uncontrolled twin run.
 
+``--mesh N`` adds the sharded-slot-pool arms (the device-mesh sharding
+tentpole): mesh=N vs mesh=1 useful-work occupancy at equal PER-DEVICE
+cache memory (same blocks per shard; gate >= 2x at N >= 4), and
+work-stealing vs static placement under skewed arrivals (round-robin
+parks all the long requests on one shard; the blocked queue heads must
+migrate to the idle shard and beat the static arm). Runs through a
+real shard_map mesh when >= N devices exist (the CI lane forces 8 host
+devices), the vmap path otherwise — the gated quantities are identical.
+
     PYTHONPATH=src python benchmarks/fig_serve.py \
-        [--smoke] [--paged] [--preempt swap] [--trace out.json]
+        [--smoke] [--paged] [--preempt swap] [--trace out.json] [--mesh 4]
 """
 
 from __future__ import annotations
@@ -167,13 +176,14 @@ def bench_zipf_cache(rows, cfg, params, sc_kw, rng, n_requests: int,
     return hr
 
 
-def _occupancy_arm(rows, cfg, params, prompts, mnts, arm, sc_kw, ch):
+def _occupancy_arm(rows, cfg, params, prompts, mnts, arm, sc_kw, ch,
+                   mesh=None):
     """Serve the workload through one allocator/policy arm; returns the
     USEFUL-work occupancy (a request's surviving run holds a slot for
     decode-ramp + generated ticks — recomputed from the completions so
     preemption thrash, i.e. discarded ticks, cannot inflate the
     concurrency) plus the policy's waste counters."""
-    sched = Scheduler(cfg, params, SchedulerConfig(**sc_kw))
+    sched = Scheduler(cfg, params, SchedulerConfig(**sc_kw), mesh=mesh)
     for p, m in zip(prompts, mnts):
         sched.submit([p], max_new_tokens=m)
     done = sched.drain()
@@ -356,6 +366,133 @@ def bench_shared_prefix(rows, smoke: bool):
     print(f"# fig_serve: shared-prefix occupancy {ratio:.2f}x at equal "
           f"cache memory ({sched.counters['prefix_shared_tokens']} prompt "
           f"tokens admitted pre-written, gate >= 1.5x)")
+    return ratio
+
+
+def bench_mesh_sharding(rows, smoke: bool, mesh_n: int):
+    """Sharded slot pool (this PR's tentpole) vs a single pool at equal
+    PER-DEVICE cache memory. ``num_blocks``/``num_slots`` are per-SHARD
+    quantities in the sharded scheduler, so the mesh arm gets the same
+    block pool per device as the mesh=1 arm and simply has ``mesh_n``
+    of them — one fused decode/chunk program per tick spans all shards,
+    so admitted (useful-work) concurrency per decode step should scale
+    with the shard count. When the process actually has >= mesh_n
+    devices (the CI forced-8-device lane) the sharded arm runs through
+    a real shard_map mesh; otherwise it runs the vmap path — the
+    occupancy quantities are identical either way (seed-fixed greedy
+    scheduling). Gate (applied by the caller): >= 2x at mesh 4.
+
+    The mix is moderate-UNIFORM lengths, not the Pareto tail: with a
+    heavy tail the sharded arm hits the longest request's critical
+    path (it admits everything instantly and finishes in exactly that
+    many ticks), which caps the measurable ratio regardless of shard
+    count. Straggler behavior is the continuous-batching arm's story;
+    this arm measures concurrency scaling, so total work must exceed
+    critical-path x slots."""
+    cfg = configs.reduced_config("gemma-2b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    # enough requests to keep mesh_n shards' worth of slots fed — with
+    # too little traffic the sharded arm is load-starved, not measured
+    n_req, max_prompt = (32, 12) if smoke else (96, 12)
+    block = ch = 8
+    max_len = max_prompt + 32 + 8
+    slots_per_shard = 4
+    # per-shard provision: ~2 worst-case requests' KV — enough that a
+    # shard serves, scarce enough that growth pressure (swap preempts)
+    # is part of what both arms absorb
+    nb_per_shard = 14
+    mnts = [int(rng.integers(16, 33)) for _ in range(n_req)]
+    prompts = [rng.integers(0, cfg.vocab,
+                            int(rng.integers(6, max_prompt + 1))
+                            ).astype(np.int32) for _ in range(n_req)]
+    base_kw = dict(max_len=max_len, prefill_chunk=ch, cache_requests=False,
+                   allocator="paged", block_size=block,
+                   num_blocks=nb_per_shard, preempt="swap")
+    mesh = None
+    if jax.device_count() >= mesh_n:
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_worker_mesh(mesh_n, axis="slots")
+    occ1, _, s1 = _occupancy_arm(
+        rows, cfg, params, prompts, mnts, "mesh1",
+        dict(base_kw, num_slots=slots_per_shard, mesh_shards=1), ch)
+    occn, _, sn = _occupancy_arm(
+        rows, cfg, params, prompts, mnts, f"mesh{mesh_n}",
+        dict(base_kw, num_slots=slots_per_shard * mesh_n,
+             mesh_shards=mesh_n), ch, mesh=mesh)
+    # equal per-device memory, really: the sharded pool's total capacity
+    # is exactly mesh_n single-shard pools
+    assert sn.slots.position_capacity == mesh_n * s1.slots.position_capacity
+    ratio = occn / occ1
+    rows.append(common.emit(
+        "fig_serve.mesh_sharded_vs_single", 0.0,
+        f"mesh_occupancy_ratio={ratio:.2f},mesh={mesh_n},"
+        f"real_mesh={int(mesh is not None)},"
+        f"steals={sn.counters['steals']}"))
+    print(f"# fig_serve: mesh={mesh_n} sharded pool {ratio:.2f}x useful "
+          f"concurrency vs mesh=1 at equal per-device cache memory "
+          f"({nb_per_shard} blocks/shard, "
+          f"{'shard_map' if mesh is not None else 'vmap'} path)")
+    return ratio
+
+
+def bench_work_stealing(rows, smoke: bool):
+    """Work-stealing rebalance vs static placement under SKEWED
+    arrivals: round-robin placement on a 2-shard pool with strictly
+    alternating long/short requests parks every long request on shard 0
+    and every short one on shard 1. Shard 1 drains its shorts and
+    idles; without stealing, shard 0's queue heads block behind its two
+    busy slots while shard 1's slots sit free (head-of-line blocking).
+    With stealing, each blocked head migrates to the idle shard and the
+    drain finishes in fewer fused ticks. Useful ticks are identical
+    across the arms (greedy + seed-fixed), so the occupancy ratio IS
+    the saved decode steps. Gate: the steal arm really steals and beats
+    static placement."""
+    cfg = configs.reduced_config("gemma-2b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 8 if smoke else 16
+    block = ch = 8
+    long_mnt, short_mnt = 32, 2
+    max_len = 8 + long_mnt + 8
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(n_req)]
+    mnts = [long_mnt if i % 2 == 0 else short_mnt for i in range(n_req)]
+    kw = dict(num_slots=4, max_len=max_len, prefill_chunk=ch,
+              cache_requests=False, allocator="paged", block_size=block,
+              num_blocks=12, mesh_shards=2, placement="round_robin")
+    occ_steal, _, ss = _occupancy_arm(rows, cfg, params, prompts, mnts,
+                                      "steal", dict(kw, steal=True), ch)
+    occ_static, _, st = _occupancy_arm(rows, cfg, params, prompts, mnts,
+                                       "no_steal", dict(kw, steal=False),
+                                       ch)
+    assert st.counters["steals"] == 0
+    assert ss.counters["steals"] >= 1, \
+        "skewed arrivals never triggered a steal (arm is vacuous)"
+    ratio = occ_steal / occ_static
+    rows.append(common.emit(
+        "fig_serve.work_stealing", 0.0,
+        f"occupancy_ratio={ratio:.2f},steals={ss.counters['steals']},"
+        f"occ_steal={occ_steal:.2f},occ_static={occ_static:.2f}"))
+    print(f"# fig_serve: work stealing {ratio:.2f}x useful concurrency "
+          f"vs static round-robin under skewed arrivals "
+          f"({ss.counters['steals']} heads stolen)")
+    assert occ_steal > occ_static, \
+        f"stealing did not beat static placement " \
+        f"({occ_steal:.2f} <= {occ_static:.2f})"
+    return ratio
+
+
+def bench_mesh_arms(rows, smoke: bool, mesh_n: int):
+    """The sharded-serving arms + their gates (the ISSUE acceptance:
+    >= 2x admitted concurrency at mesh 4, equal per-device memory; the
+    stealing arm must beat static placement under skew)."""
+    ratio = bench_mesh_sharding(rows, smoke, mesh_n)
+    floor = 2.0 if mesh_n >= 4 else 1.2
+    assert ratio >= floor, \
+        f"mesh={mesh_n} occupancy gain regressed " \
+        f"({ratio:.2f}x < {floor}x)"
+    bench_work_stealing(rows, smoke)
     return ratio
 
 
@@ -713,7 +850,7 @@ def bench_trace(rows, cfg, params, sc_kw, prompts, mnts, trace_path):
 
 def run(rows=None, smoke: bool = False, paged: bool = False,
         preempt: str = "recompute", trace: str = None,
-        shared_prefix: bool = False, spec: bool = False):
+        shared_prefix: bool = False, spec: bool = False, mesh: int = 0):
     rows = rows if rows is not None else []
     if shared_prefix and not paged:
         # standalone smoke of just the CoW prefix-sharing arm
@@ -724,6 +861,10 @@ def run(rows=None, smoke: bool = False, paged: bool = False,
     if spec and not paged:
         # standalone smoke of just the speculative-decoding arms
         bench_speculative(rows, smoke)
+        return rows
+    if mesh and not paged:
+        # standalone sharded-serving arms (the CI forced-8-device lane)
+        bench_mesh_arms(rows, smoke, mesh)
         return rows
     print("# fig_serve: continuous vs static batching on the slot pool")
     arch = "rwkv6-1.6b"                 # O(1)-state decode: cache-cheap
@@ -763,6 +904,8 @@ def run(rows=None, smoke: bool = False, paged: bool = False,
             f"shared-prefix occupancy gain regressed ({sratio:.2f}x < 1.5x)"
     if spec:
         bench_speculative(rows, smoke)
+    if mesh:
+        bench_mesh_arms(rows, smoke, mesh)
     if trace:
         bench_trace(rows, cfg, params, sc_kw, prompts, mnts, trace)
     if smoke:
@@ -810,10 +953,18 @@ def main(argv=None):
                          "self-draft; gate >= 1.3x useful tokens/step "
                          "and acceptance > 0, streams bit-identical to "
                          "speculate=0). Without --paged, runs ONLY them")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="run the sharded-slot-pool arms at N shards: "
+                         "mesh=N vs mesh=1 occupancy at equal per-device "
+                         "cache memory (gate >= 2x at N >= 4) plus the "
+                         "work-stealing-vs-static arm under skewed "
+                         "arrivals. Uses a real shard_map mesh when the "
+                         "process has >= N devices, the vmap path "
+                         "otherwise. Without --paged, runs ONLY them")
     args = ap.parse_args(argv)
     run(smoke=args.smoke, paged=args.paged, preempt=args.preempt,
         trace=args.trace, shared_prefix=args.shared_prefix,
-        spec=args.spec)
+        spec=args.spec, mesh=args.mesh)
     return 0
 
 

@@ -16,6 +16,14 @@ trace events (load in https://ui.perfetto.dev — one track per slot plus
 scheduler/dispatcher tracks); ``--metrics`` dumps the flat metrics
 registry (``serve.*``, ``serve.engine.*``, paging) as JSON on exit.
 
+Sharded pool: ``--mesh N`` (with ``--paged``) splits the pool into N
+shards, each owning ``--slots`` slots and its own block pool; requests
+are placed on the least-loaded shard and blocked queue heads migrate to
+idle shards (work stealing). With >= N devices (e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the fused steps
+run through a real shard_map mesh, otherwise the vmap path — streams
+are identical either way.
+
 Closed loop (PR 7): ``--sample out.jsonl`` installs a live Sampler
 ticking off every scheduler step and exports the sample ring as a JSONL
 time-series (with ``--trace`` the levels also land as Perfetto counter
@@ -70,6 +78,11 @@ def main():
                     help="paged: what preempt-on-OOB discards — 'swap' "
                          "parks the victim's blocks host-side and "
                          "resumes it with zero recomputed decode steps")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="paged: shard the pool over N shards (--slots "
+                         "slots + --num-blocks blocks EACH); uses a real "
+                         "device mesh when >= N devices exist, the vmap "
+                         "path otherwise")
     ap.add_argument("--reserved", action="store_true",
                     help="paged: book blocks for prompt+max_new at "
                          "admission (QoS: admitted requests are never "
@@ -89,12 +102,20 @@ def main():
                          "preempt while firing; restored on clear)")
     args = ap.parse_args()
 
+    if args.mesh and not args.paged:
+        ap.error("--mesh requires --paged (shards own block pools)")
+
     if args.trace:
         set_tracer(Tracer(enabled=True))
 
     cfg = configs.reduced_config(args.arch)
     params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
+
+    mesh = None
+    if args.mesh > 1 and jax.device_count() >= args.mesh:
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_worker_mesh(args.mesh, axis="slots")
 
     sched = Scheduler(cfg, params, SchedulerConfig(
         num_slots=args.slots, max_len=args.max_prompt + args.max_new + 8,
@@ -105,7 +126,14 @@ def main():
         num_window_blocks=args.num_window_blocks,
         swap_bytes_budget=args.swap_budget,
         preempt=args.preempt,
-        admission="reserved" if args.reserved else "optimistic"))
+        mesh_shards=args.mesh or None,
+        admission="reserved" if args.reserved else "optimistic"),
+        mesh=mesh)
+    if args.mesh:
+        path = (f"shard_map over {args.mesh} devices" if mesh is not None
+                else "vmap (single device)")
+        print(f"[serve_continuous] sharded pool: {args.mesh} shards x "
+              f"{args.slots} slots, {path}")
 
     smp = slo = None
     if args.sample or args.slo:
@@ -177,6 +205,14 @@ def main():
               f"{st.get('swap_bytes_out', 0)} bytes swapped out, "
               f"{st.get('swap_rejected', 0)} swap rejections), "
               f"mean occupancy {st.get('mean_occupancy', 0):.2f}")
+    if args.mesh:
+        sm = sched._shard_obs.metrics()
+        per = [f"shard{s}: placed={sm[f'shard{s}.placed']} "
+               f"stolen_in={sm[f'shard{s}.steals']} "
+               f"blocks_used={sm[f'shard{s}.blocks_used']}"
+               for s in range(sm["num_shards"])]
+        print(f"[serve_continuous] shards ({sm['steals']} steals): "
+              + "; ".join(per))
     if args.trace:
         from repro.obs import get_tracer
         get_tracer().export_chrome(args.trace)

@@ -14,7 +14,38 @@ Production topology (TPU v5e target):
 
 from __future__ import annotations
 
+from typing import Optional
+
+import numpy as np
+
 import jax
+from jax.sharding import Mesh
+
+
+def make_worker_mesh(num_workers: Optional[int] = None,
+                     axis: str = "workers") -> Mesh:
+    """1-D mesh over the first ``num_workers`` local devices (default all).
+
+    Canonical home of the worker-mesh constructor
+    (``runtime.dispatch.make_worker_mesh`` re-exports it). Raises
+    ``ValueError`` up front when more workers are requested than devices
+    exist — the alternative is an opaque shard_map shape error deep
+    inside the first dispatch.
+    """
+    devs = jax.devices()
+    if num_workers is None:
+        n = len(devs)
+    else:
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+        if num_workers > len(devs):
+            raise ValueError(
+                f"requested {num_workers} workers but only {len(devs)} "
+                f"device(s) are available; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{num_workers} before importing jax to force host devices")
+        n = num_workers
+    return Mesh(np.asarray(devs[:n]), (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

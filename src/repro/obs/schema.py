@@ -31,6 +31,9 @@ SCHEDULER_STATS: Dict[str, type] = {
     # prompt positions admitted already-written via prefix sharing
     # (0 unless SchedulerConfig.prefix_sharing)
     "prefix_shared_tokens": int,
+    # work-stealing rebalance: queue heads migrated off a full shard
+    # (0 unless SchedulerConfig.mesh_shards >= 2)
+    "steals": int,
     "pending": int, "live": int, "coalesced_waiting": int,
     "cache_hits": int, "cache_misses": int,
     "cache_hit_rate": float, "mean_occupancy": float,
@@ -78,7 +81,38 @@ PAGED_STATS: Dict[str, type] = {
     "prefix_published": int, "prefix_evicted": int,
     "swapped_held": int, "swap_bytes_held": int, "swap_bytes_budget": int,
     "swap_rejected": int, "swap_bytes_out": int, "swap_bytes_in": int,
+    # cross-shard work-stealing migrations of parked SwapEntries
+    # (0 unless the pool is sharded; host bytes change owner, so these
+    # are NOT counted in swap_bytes_out/in)
+    "swap_migrated_out": int, "swap_migrated_in": int,
 }
+
+#: registry ``serve.shard.*`` gauges (sharded pools only; absent
+#: otherwise). Per-shard keys are ``shard<i>.<suffix>`` for suffixes
+#: SHARD_GAUGE_SUFFIXES, plus the pool-wide totals below. Pinned here so
+#: dashboards can rely on the names; tests/test_sharded.py is the
+#: regression test.
+SHARD_GAUGE_SUFFIXES = (
+    "live_slots", "free_slots",         # slot occupancy per shard
+    "blocks_free", "blocks_used",       # block-pool levels per shard
+    "swapped_held",                     # parked SwapEntries per shard
+    "placed",                           # admissions placed on the shard
+    "steals",                           # heads stolen TO the shard
+    "queued",                           # current queue depth
+)
+SHARD_TOTALS: Dict[str, type] = {"num_shards": int, "steals": int}
+
+
+def validate_shard_metrics(metrics: Dict[str, Any],
+                           num_shards: int) -> List[str]:
+    """Problems with a ``serve.shard`` provider snapshot (empty ==
+    valid): every pinned per-shard gauge present for every shard, ints
+    throughout, totals present."""
+    schema = dict(SHARD_TOTALS)
+    for s in range(num_shards):
+        for suffix in SHARD_GAUGE_SUFFIXES:
+            schema[f"shard{s}.{suffix}"] = int
+    return validate_stats(metrics, schema)
 
 
 def validate_stats(stats: Dict[str, Any],

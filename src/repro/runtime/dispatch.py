@@ -46,12 +46,10 @@ except AttributeError:                  # 0.4.x experimental home
     from jax.experimental.shard_map import shard_map as _shard_map
 
 
-def make_worker_mesh(num_workers: Optional[int] = None,
-                     axis: str = "workers") -> Mesh:
-    """1-D mesh over the first ``num_workers`` local devices (default all)."""
-    devs = jax.devices()
-    n = len(devs) if num_workers is None else min(num_workers, len(devs))
-    return Mesh(np.asarray(devs[:n]), (axis,))
+# Canonical constructor lives in repro.launch.mesh (validates worker count
+# against available devices up front); re-exported here for callers that
+# only know the runtime layer.
+from repro.launch.mesh import make_worker_mesh  # noqa: E402,F401
 
 
 # Process-wide compile caches: the stage fns are already identity-stable

@@ -489,6 +489,290 @@ def jit_paged_verify_step(cfg: ModelConfig):
         name=f"paged_verify_step[{cfg.name}]", prefix="serve.engine")
 
 
+# ---------------------------------------------------------------------------
+# sharded steps: the slot pool split over a 1-D device mesh
+# ---------------------------------------------------------------------------
+#
+# Every per-slot cache leaf carries the slot axis at position 1
+# ((periods, B, ...)), so sharding the pool is sharding that axis:
+# stacked arrays hold all shards' segments back-to-back (dense: B =
+# num_shards * slots_per_shard; paged flat pools: num_shards segments of
+# (num_blocks + 1) * block_size rows, each segment ending in its OWN
+# trash block), and the fused step runs once per tick spanning every
+# shard. Three compilation strategies behind one factory signature:
+#
+#   * num_shards == 1, no mesh — delegate to the unsharded jitted step
+#     (the SAME compiled program: the mesh=1 differential is structurally
+#     bit-identical).
+#   * num_shards > 1, no mesh  — jax.vmap over the shard axis (multi-
+#     shard semantics on a single-device CI host).
+#   * mesh                     — jax.shard_map over the mesh axis: one
+#     fused program, one shard per device, block ids never cross shards.
+#
+# Row vectors passed to these steps are SHARD-LOCAL physical rows (each
+# shard indexes only its own flat-pool segment); host-side block ops
+# (reset/gather/upload/copy_block_rows) keep using GLOBAL rows into the
+# stacked arrays.
+
+def _check_shard_mesh(num_shards: int, mesh, axis):
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if mesh is not None:
+        if axis not in mesh.axis_names:
+            raise ValueError(f"axis {axis!r} not in mesh axes "
+                             f"{mesh.axis_names}")
+        if mesh.shape[axis] != num_shards:
+            raise ValueError(
+                f"mesh axis {axis!r} has {mesh.shape[axis]} device(s) "
+                f"but num_shards={num_shards}: the slot-pool shard count "
+                "must match the mesh")
+
+
+def _split_shard_axis(n: int):
+    """(tree fns) stacked (P, n*x, ...) <-> per-shard (P, n, x, ...)."""
+    def split(l):
+        return l.reshape(l.shape[:1] + (n, l.shape[1] // n) + l.shape[2:])
+
+    def fuse(l):
+        return l.reshape(l.shape[:1] + (l.shape[1] * l.shape[2],)
+                         + l.shape[3:])
+
+    return split, fuse
+
+
+def _make_sharded_decode_inner(cfg: ModelConfig, block_size: int):
+    """Per-shard decode body shared by the vmap and shard_map paths:
+    operates on ONE shard's dense/paged segment with shard-local rows.
+    ``key`` arrives as (2,) under vmap and (1, 2) under shard_map."""
+    step = make_slot_decode_step(cfg)
+
+    def inner(params, dense, paged, rows, tokens, pos, temps, key,
+              top_ks, top_ps):
+        key = key.reshape(2)
+        caches = _merge_paged(dense, paged, rows, block_size)
+        nxt, logits, caches = step(params, caches, tokens, pos, temps,
+                                   key, top_ks, top_ps)
+        dense, paged = _split_paged(caches, paged, rows)
+        return nxt, logits, dense, paged
+
+    return inner
+
+
+@functools.lru_cache(maxsize=None)
+def jit_sharded_decode_step(cfg: ModelConfig, num_shards: int,
+                            block_size: int, mesh=None,
+                            axis: Optional[str] = None):
+    """Fused decode over the sharded pool. Signature of the returned fn:
+    run(params, dense, paged, rows, tokens, pos, temps, keys, top_ks,
+    top_ps) -> (nxt (B,), logits (B, 1, V), dense, paged) with
+    B = num_shards * slots_per_shard, ``rows`` shard-local, and ``keys``
+    (num_shards, 2) per-shard PRNG keys. The lru key folds num_shards,
+    block_size AND the mesh + axis name, so a resized mesh can never
+    reuse a stale compiled program."""
+    _check_shard_mesh(num_shards, mesh, axis)
+    if num_shards == 1 and mesh is None:
+        base = jit_paged_decode_step(cfg)
+
+        def run(params, dense, paged, rows, tokens, pos, temps, keys,
+                top_ks, top_ps):
+            return base(params, dense, paged, rows, tokens, pos, temps,
+                        keys.reshape(2), top_ks, top_ps, block_size)
+
+        return run
+    inner = _make_sharded_decode_inner(cfg, block_size)
+    n = num_shards
+    if mesh is None:
+        split, fuse = _split_shard_axis(n)
+        tm = jax.tree_util.tree_map
+
+        def run(params, dense, paged, rows, tokens, pos, temps, keys,
+                top_ks, top_ps):
+            nxt, logits, dense, paged = jax.vmap(
+                inner, in_axes=(None, 1, 1, 0, 0, 0, 0, 0, 0, 0),
+                out_axes=(0, 0, 1, 1))(
+                params, tm(split, dense), tm(split, paged),
+                tm(lambda r: r.reshape((n, -1) + r.shape[1:]), rows),
+                tokens.reshape((n, -1) + tokens.shape[1:]),
+                pos.reshape(n, -1), temps.reshape(n, -1), keys,
+                top_ks.reshape(n, -1), top_ps.reshape(n, -1))
+            return (nxt.reshape(-1),
+                    logits.reshape((-1,) + logits.shape[2:]),
+                    tm(fuse, dense), tm(fuse, paged))
+    else:
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime.dispatch import _shard_map
+        run = _shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(None, axis), P(None, axis), P(axis), P(axis),
+                      P(axis), P(axis), P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(None, axis), P(None, axis)))
+    return obs_trace.instrumented_jit(
+        jax.jit(run, donate_argnums=(1, 2)),
+        name=f"sharded_decode_step[{cfg.name}x{num_shards}]",
+        prefix="serve.engine")
+
+
+def _make_sharded_chunk_inner(cfg: ModelConfig, block_size: int):
+    """Per-shard chunk-prefill body. Each shard gets its own padded
+    sub-batch (idx (m,) shard-local slots, pad-by-repeat); ``live`` False
+    marks a shard with nothing to prefill this call: its rows point at
+    the shard's trash block and its dense writes are reverted, so the
+    step is a semantic no-op there. Operands arrive with a leading
+    size-1 shard axis under shard_map and without it under vmap — the
+    reshapes normalize."""
+    step = make_chunk_step(cfg)
+
+    def inner(params, dense, paged, idx, rows, tokens, pos, live):
+        idx = idx.reshape(idx.shape[-1])
+        rows = {k: r.reshape(r.shape[-2:]) for k, r in rows.items()}
+        tokens = tokens.reshape(tokens.shape[-2:])
+        pos = pos.reshape(pos.shape[-1])
+        live = live.reshape(())
+        tm = jax.tree_util.tree_map
+        sub = tm(lambda l: jnp.take(l, idx, axis=1), dense)
+        caches = _merge_paged(sub, paged, rows, block_size)
+        logits, caches = step(params, caches, tokens, pos)
+        sub2, paged = _split_paged(caches, paged, rows)
+        # idle shard: paged writes landed in the trash block (masked on
+        # every read); dense writes are reverted here
+        sub2 = tm(lambda a, b: jnp.where(live, a, b.astype(a.dtype)),
+                  sub2, sub)
+        dense = tm(lambda l, s: l.at[:, idx].set(s.astype(l.dtype)),
+                   dense, sub2)
+        return logits, dense, paged
+
+    return inner
+
+
+@functools.lru_cache(maxsize=None)
+def jit_sharded_chunk_step(cfg: ModelConfig, num_shards: int,
+                           block_size: int, mesh=None,
+                           axis: Optional[str] = None):
+    """Fused chunk-prefill over the sharded pool. run(params, dense,
+    paged, idx, rows, tokens, pos, live) -> (logits (n, m, C, V), dense,
+    paged): idx (n, m) shard-LOCAL slot ids (pad-by-repeat within a
+    shard), rows shard-local (n, m, V_key), tokens (n, m, C), pos
+    (n, m), live (n,) bool (False = idle shard: idx/rows carry trash)."""
+    _check_shard_mesh(num_shards, mesh, axis)
+    if num_shards == 1 and mesh is None:
+        base = jit_paged_chunk_step(cfg)
+
+        def run(params, dense, paged, idx, rows, tokens, pos, live):
+            logits, dense, paged = base(
+                params, dense, paged, idx[0],
+                {k: r[0] for k, r in rows.items()}, tokens[0], pos[0],
+                block_size)
+            return logits[None], dense, paged
+
+        return run
+    inner = _make_sharded_chunk_inner(cfg, block_size)
+    n = num_shards
+    if mesh is None:
+        split, fuse = _split_shard_axis(n)
+        tm = jax.tree_util.tree_map
+
+        def run(params, dense, paged, idx, rows, tokens, pos, live):
+            logits, dense, paged = jax.vmap(
+                inner, in_axes=(None, 1, 1, 0, 0, 0, 0, 0),
+                out_axes=(0, 1, 1))(
+                params, tm(split, dense), tm(split, paged), idx, rows,
+                tokens, pos, live)
+            return logits, tm(fuse, dense), tm(fuse, paged)
+    else:
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime.dispatch import _shard_map
+        smapped = _shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(None, axis), P(None, axis), P(axis), P(axis),
+                      P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(None, axis), P(None, axis)))
+
+        def run(params, dense, paged, idx, rows, tokens, pos, live):
+            logits, dense, paged = smapped(params, dense, paged, idx,
+                                           rows, tokens, pos, live)
+            # shard_map concatenates per-shard (m, C, V) on axis 0
+            return (logits.reshape((n, -1) + logits.shape[1:]),
+                    dense, paged)
+    return obs_trace.instrumented_jit(
+        jax.jit(run, donate_argnums=(1, 2)),
+        name=f"sharded_chunk_step[{cfg.name}x{num_shards}]",
+        prefix="serve.engine")
+
+
+def _make_sharded_verify_inner(cfg: ModelConfig, block_size: int):
+    """Per-shard speculative verify-accept body (rows/accept semantics
+    are per-slot, so sharding is a pure partition of the pool)."""
+    step = make_verify_step(cfg)
+
+    def inner(params, dense, paged, rows, tokens, pos, prompt_len,
+              max_pos, score, active, temps, top_ks, top_ps, key):
+        key = key.reshape(2)
+        caches = _merge_paged(dense, paged, rows, block_size)
+        out_tok, n, lp, caches = step(
+            params, caches, tokens, pos, prompt_len, max_pos, score,
+            active, temps, top_ks, top_ps, key)
+        dense, paged = _split_paged(caches, paged, rows)
+        return out_tok, n, lp, dense, paged
+
+    return inner
+
+
+@functools.lru_cache(maxsize=None)
+def jit_sharded_verify_step(cfg: ModelConfig, num_shards: int,
+                            block_size: int, mesh=None,
+                            axis: Optional[str] = None):
+    """Fused speculative verify over the sharded pool (full-pool row
+    contract of jit_paged_verify_step, shard-local rows, per-shard keys
+    (num_shards, 2))."""
+    _check_shard_mesh(num_shards, mesh, axis)
+    if num_shards == 1 and mesh is None:
+        base = jit_paged_verify_step(cfg)
+
+        def run(params, dense, paged, rows, tokens, pos, prompt_len,
+                max_pos, score, active, temps, top_ks, top_ps, keys):
+            return base(params, dense, paged, rows, tokens, pos,
+                        prompt_len, max_pos, score, active, temps,
+                        top_ks, top_ps, keys.reshape(2), block_size)
+
+        return run
+    inner = _make_sharded_verify_inner(cfg, block_size)
+    n = num_shards
+    if mesh is None:
+        split, fuse = _split_shard_axis(n)
+        tm = jax.tree_util.tree_map
+
+        def run(params, dense, paged, rows, tokens, pos, prompt_len,
+                max_pos, score, active, temps, top_ks, top_ps, keys):
+            shard_rows = lambda x: x.reshape((n, -1) + x.shape[1:])  # noqa: E731
+            out_tok, acc, lp, dense, paged = jax.vmap(
+                inner,
+                in_axes=(None, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
+                out_axes=(0, 0, 0, 1, 1))(
+                params, tm(split, dense), tm(split, paged),
+                tm(shard_rows, rows), shard_rows(tokens),
+                pos.reshape(n, -1), prompt_len.reshape(n, -1),
+                max_pos.reshape(n, -1), score.reshape(n, -1),
+                active.reshape(n, -1), temps.reshape(n, -1),
+                top_ks.reshape(n, -1), top_ps.reshape(n, -1), keys)
+            return (out_tok.reshape((-1,) + out_tok.shape[2:]),
+                    acc.reshape(-1), lp.reshape((-1,) + lp.shape[2:]),
+                    tm(fuse, dense), tm(fuse, paged))
+    else:
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime.dispatch import _shard_map
+        run = _shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(None, axis), P(None, axis), P(axis), P(axis),
+                      P(axis), P(axis), P(axis), P(axis), P(axis),
+                      P(axis), P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(axis), P(None, axis),
+                       P(None, axis)))
+    return obs_trace.instrumented_jit(
+        jax.jit(run, donate_argnums=(1, 2)),
+        name=f"sharded_verify_step[{cfg.name}x{num_shards}]",
+        prefix="serve.engine")
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def reset_block_rows(paged, rows):
     """Zero the physical rows of freshly-mapped blocks (k=v=0, pos=-1) —

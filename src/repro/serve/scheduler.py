@@ -171,6 +171,26 @@ class SchedulerConfig:
     # prefix_sharing: LRU entry bound on the prefix index (each entry
     # holds one block per page-table group alive).
     prefix_index_capacity: int = 512
+    # Shard the slot pool over a 1-D device mesh: num_slots splits evenly
+    # into mesh_shards shards, each owning its OWN block pools / page
+    # tables / swap store / prefix index (num_blocks etc. are then PER
+    # SHARD — equal per-device memory), and every tick runs ONE fused
+    # program spanning all shards (engine.jit_sharded_*_step; pass a
+    # Mesh via Scheduler(mesh=...) to shard_map it over devices).
+    # Requires allocator='paged'. None = the unsharded pool;
+    # mesh_shards=1 runs the sharded control path over the SAME compiled
+    # programs, bit-identical to None.
+    mesh_shards: Optional[int] = None
+    # sharded: which shard an admitted request lands on.
+    # 'least_blocks' (default) picks the shard with the most free
+    # blocks; 'round_robin' cycles. Scheduler.placement_fn overrides
+    # with a callable (sched, slot_state) -> shard.
+    placement: str = "least_blocks"
+    # sharded: work-stealing rebalance — a queue head blocked on a full
+    # shard migrates to an idle shard that can admit it now instead of
+    # head-of-line blocking (swapped-out heads move their host SwapEntry
+    # between shard stores, keeping all prefill progress).
+    steal: bool = True
 
 
 @dataclasses.dataclass
@@ -188,6 +208,7 @@ class _Slot:
     accepted: int = 0           # speculative drafts accepted (this request)
     drafted: int = 0            # speculative drafts proposed (this request)
     admit_seq: int = -1         # admission order: preemption evicts max
+    shard: int = 0              # home shard (0 on unsharded pools)
 
     @property
     def temperature(self) -> float:
@@ -339,6 +360,8 @@ _COUNTER_KEYS = (
     "chunk_steps", "generated_tokens", "prefill_tokens",
     "live_decode_slots", "preempted", "swapped_in", "swapped_out",
     "recomputed_decode_steps", "prefix_shared_tokens",
+    # sharded pools: queue heads migrated off a full shard (0 otherwise)
+    "steals",
     # speculative decoding (all 0 when speculate=0; 'real' drafts only —
     # teacher-forced ramp positions are excluded from the denominator)
     "spec.drafted_tokens", "spec.accepted_tokens", "spec.rejected_tokens",
@@ -356,13 +379,36 @@ def _log_softmax_np(lg: np.ndarray) -> np.ndarray:
         np.float32)
 
 
+class _ShardObs:
+    """Registry ``serve.shard`` provider (sharded pools only): per-shard
+    occupancy (``shard<i>.live_slots`` / ``free_slots`` / block + swap
+    levels from the pool) plus the scheduler's placement/steal view —
+    ``shard<i>.placed`` / ``steals`` / ``queued`` and the pool-wide
+    ``steals`` total. The scheduler holds the strong reference (the
+    registry keeps providers weakly)."""
+
+    def __init__(self, sched: "Scheduler"):
+        self._sched = sched
+
+    def metrics(self) -> dict:
+        sched = self._sched
+        out = dict(sched.slots.shard_metrics())
+        for s in range(sched.slots.num_shards):
+            out[f"shard{s}.placed"] = sched._shard_placed[s]
+            out[f"shard{s}.steals"] = sched._shard_steals[s]
+            out[f"shard{s}.queued"] = len(sched._queues[s])
+        out["num_shards"] = sched.slots.num_shards
+        out["steals"] = int(sched.counters["steals"])
+        return out
+
+
 class Scheduler:
     """submit(prompts) / step() / drain() continuous-batching engine."""
 
     def __init__(self, cfg: ModelConfig, params,
                  sched: SchedulerConfig = SchedulerConfig(),
                  tracer: Optional[obs_trace.Tracer] = None,
-                 draft_fn=None):
+                 draft_fn=None, mesh=None):
         self.cfg = cfg
         self.params = params
         self.sched = sched
@@ -381,6 +427,16 @@ class Scheduler:
         if sched.prefix_sharing and sched.allocator != "paged":
             raise ValueError("prefix_sharing requires allocator='paged' "
                              "(blocks are the sharing granule)")
+        if sched.placement not in ("least_blocks", "round_robin"):
+            raise ValueError(f"SchedulerConfig.placement="
+                             f"{sched.placement!r} not in "
+                             "('least_blocks', 'round_robin')")
+        if sched.mesh_shards is not None and sched.allocator != "paged":
+            raise ValueError("mesh_shards requires allocator='paged' "
+                             "(shards own per-shard block pools)")
+        if mesh is not None and sched.mesh_shards is None:
+            raise ValueError("Scheduler(mesh=...) needs "
+                             "SchedulerConfig.mesh_shards set")
         if sched.speculate < 0:
             raise ValueError(f"speculate must be >= 0: {sched.speculate}")
         if sched.speculate:
@@ -416,8 +472,20 @@ class Scheduler:
                                  swap_bytes_budget=sched.swap_bytes_budget,
                                  prefix_sharing=sched.prefix_sharing,
                                  prefix_align=prefix_align,
-                                 prefix_capacity=sched.prefix_index_capacity)
-        self._queue: "collections.deque[_Slot]" = collections.deque()
+                                 prefix_capacity=sched.prefix_index_capacity,
+                                 mesh_shards=sched.mesh_shards,
+                                 mesh=mesh)
+        # one FCFS queue per shard (exactly one on unsharded pools, so
+        # every single-queue invariant — arrival order, head-of-line
+        # admission — is the pre-sharding behavior verbatim)
+        self._queues: List["collections.deque[_Slot]"] = [
+            collections.deque() for _ in range(self.slots.num_shards)]
+        self._rr_next = 0               # round_robin placement cursor
+        # pluggable placement: fn(scheduler, _Slot) -> shard index;
+        # overrides SchedulerConfig.placement when set
+        self.placement_fn = None
+        self._shard_placed = [0] * self.slots.num_shards
+        self._shard_steals = [0] * self.slots.num_shards
         self._by_slot: Dict[int, _Slot] = {}
         self._inflight: Dict[Tuple, List[int]] = {}
         self._fresh: List[int] = []     # finished, not yet handed out
@@ -447,6 +515,11 @@ class Scheduler:
         # closed at first-token / preempt / retire (tracer enabled only)
         self._open_phase: Dict[int, Tuple[str, float, int]] = {}
         obs_metrics.REGISTRY.register_provider("serve", self)
+        self._shard_obs = None
+        if self.slots.sharded:
+            self._shard_obs = _ShardObs(self)
+            obs_metrics.REGISTRY.register_provider("serve.shard",
+                                                   self._shard_obs)
 
     @property
     def tracer(self) -> obs_trace.Tracer:
@@ -537,8 +610,8 @@ class Scheduler:
                     rids.append(rid)
                     continue
                 self._inflight[key] = []
-            self._queue.append(_Slot(rid=rid, prompt=p, max_new_tokens=mnt,
-                                     policy=policy))
+            self._enqueue(_Slot(rid=rid, prompt=p, max_new_tokens=mnt,
+                                policy=policy))
             rids.append(rid)
         return rids
 
@@ -589,10 +662,38 @@ class Scheduler:
                     rids.append(rid)
                     continue
                 self._inflight[key] = []
-            self._queue.append(_Slot(rid=rid, prompt=p, max_new_tokens=0,
-                                     policy=policy, mode="score"))
+            self._enqueue(_Slot(rid=rid, prompt=p, max_new_tokens=0,
+                                policy=policy, mode="score"))
             rids.append(rid)
         return rids
+
+    def _place(self, st: _Slot) -> int:
+        """Pick the home shard for a new request (0 on unsharded pools).
+        'least_blocks' takes the shard with the most free blocks, ties
+        broken by shorter queue then lower index; 'round_robin' cycles.
+        ``placement_fn`` (callable (scheduler, _Slot) -> shard) overrides
+        both."""
+        n = self.slots.num_shards
+        if n == 1:
+            return 0
+        if self.placement_fn is not None:
+            shard = int(self.placement_fn(self, st))
+            if not 0 <= shard < n:
+                raise ValueError(f"placement_fn returned shard {shard} "
+                                 f"(pool has {n})")
+            return shard
+        if self.sched.placement == "round_robin":
+            shard = self._rr_next
+            self._rr_next = (self._rr_next + 1) % n
+            return shard
+        return min(range(n),
+                   key=lambda s: (-self.slots.shard_free_blocks(s),
+                                  len(self._queues[s]), s))
+
+    def _enqueue(self, st: _Slot):
+        st.shard = self._place(st)
+        self._shard_placed[st.shard] += 1
+        self._queues[st.shard].append(st)
 
     # -- the scheduling loop -------------------------------------------------
 
@@ -622,7 +723,7 @@ class Scheduler:
         door) should ``results.pop(rid)`` once a completion is consumed,
         or ``results`` grows without bound."""
         fresh: List[int] = []
-        while self._queue or self._by_slot:
+        while any(self._queues) or self._by_slot:
             fresh.extend(c.rid for c in self.step())
         fresh.extend(self._fresh)   # cache hits finished at submit time
         self._fresh.clear()
@@ -630,7 +731,7 @@ class Scheduler:
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return sum(len(q) for q in self._queues)
 
     @property
     def live(self) -> int:
@@ -644,11 +745,13 @@ class Scheduler:
         ``stats()`` = this + the slot pool's keys."""
         decode_steps = self.counters["decode_steps"]
         head_wait = 0.0
-        if self._queue:
+        heads = [q[0] for q in self._queues if q]
+        if heads:
+            # oldest queue head across shards (one queue when unsharded)
             head_wait = time.perf_counter() \
-                - self._tl[self._queue[0].rid].submit_t
+                - min(self._tl[st.rid].submit_t for st in heads)
         out = {**{k: int(v) for k, v in self.counters.items()},
-               "pending": len(self._queue),
+               "pending": self.pending,
                "live": len(self._by_slot),
                "coalesced_waiting": sum(
                    len(v) for v in self._inflight.values()),
@@ -675,78 +778,142 @@ class Scheduler:
     def _admit(self):
         if self.sched.admit == "static" and self._by_slot:
             return      # static batching: wait for the whole batch
-        # FCFS with head-of-line blocking: if the queue head's blocks
-        # aren't free (paged), nothing behind it jumps the line —
-        # preserves arrival order and starves no request.
+        self._steal_rebalance()
+        # Per-shard FCFS with head-of-line blocking: if a queue head's
+        # blocks aren't free (paged), nothing behind it on that shard
+        # jumps the line — preserves arrival order and starves no
+        # request. Unsharded pools run exactly one queue, so this IS the
+        # pre-sharding single-queue loop.
         admitted_this_tick = 0
-        while self._queue:
-            # backpressure: while the overload alert fires the
-            # controller caps admissions per tick (order is still FCFS —
-            # only timing changes, so greedy streams are unchanged)
-            if self.admit_cap is not None \
-                    and admitted_this_tick >= self.admit_cap:
-                return
-            st = self._queue[0]
-            swapped_in = False
-            if self.slots.is_swapped(st.rid):
-                # resume a swap-preempted request: remap + upload its
-                # saved blocks; it continues at st.ctx with st.out intact
-                got = self.slots.swap_in(st.rid)
-                if got is None:
+        for shard, q in enumerate(self._queues):
+            while q:
+                # backpressure: while the overload alert fires the
+                # controller caps admissions per tick (order is still
+                # FCFS — only timing changes, so greedy streams are
+                # unchanged)
+                if self.admit_cap is not None \
+                        and admitted_this_tick >= self.admit_cap:
                     return
-                slot, _ = got
-                self.counters["swapped_in"] += 1
-                swapped_in = True
-            else:
-                # reserved admission books the whole generation budget up
-                # front: growth can never OOB, so QoS traffic is never
-                # preempted (submit checked it fits the pool)
-                need = len(st.prompt) + (
-                    st.max_new_tokens
-                    if self.sched.admission == "reserved" else 0)
-                # prefix sharing needs the prompt (to match the index)
-                # and the request's full span (ring groups only share
-                # when the span fits the ring, so no wrap can ever
-                # write through a shared block). Score rows never share:
-                # a shared prefix skips the chunk steps whose logits ARE
-                # the scored logprobs.
-                span = len(st.prompt) + st.max_new_tokens
-                pr = st.prompt if st.mode == "generate" else None
-                if not self.slots.can_admit(need, prompt=pr, span=span):
-                    return
-                slot = self.slots.alloc(st.rid, prompt_len=need,
-                                        prompt=pr, span=span)
-                start = self.slots.prefill_start(slot)
-                if start:
-                    # the leading `start` positions were admitted mapped
-                    # to index-held blocks: their KV already exists, so
-                    # prefill resumes past them (chunk-aligned, so the
-                    # remaining chunking is identical to an unshared run)
-                    st.ctx = start
-                    st.chunk_tokens = start
-                    self.counters["prefix_shared_tokens"] += start
-            self._queue.popleft()
-            st.admit_seq = self._next_seq
-            self._next_seq += 1
-            self._by_slot[slot] = st
-            self.counters["admitted"] += 1
-            admitted_this_tick += 1
-            now = time.perf_counter()
-            tl = self._tl[st.rid]
-            if tl.admit_t is None:
-                tl.admit_t = now        # first admission only (queue-wait)
-                self._lat["queue_wait_ms"].observe(
-                    (now - tl.submit_t) * 1e3)
-            if swapped_in:
-                if tl.swap_out_t is not None:
-                    tl.swapped_s += now - tl.swap_out_t
-                    tl.swap_out_t = None
-                self.tracer.instant("swap-in", f"slot{slot}", rid=st.rid)
-            else:
-                self.tracer.instant("admit", f"slot{slot}", rid=st.rid,
-                                    prompt_len=len(st.prompt))
-            self._phase_begin(slot, "prefill" if st.ctx < len(st.prompt)
-                              else "decode", st.rid)
+                if not self._admit_head(shard, q):
+                    break           # head-of-line blocked: next shard
+                admitted_this_tick += 1
+
+    def _head_admissible(self, shard: int, st: _Slot) -> bool:
+        """Could ``st`` admit right now? Swapped-out requests check the
+        shard whose store holds their entry; fresh ones check ``shard``.
+        Mirrors the checks ``_admit_head`` performs before claiming."""
+        if self.slots.is_swapped(st.rid):
+            return self.slots.can_admit_swapped(st.rid)
+        need = len(st.prompt) + (
+            st.max_new_tokens
+            if self.sched.admission == "reserved" else 0)
+        span = len(st.prompt) + st.max_new_tokens
+        pr = st.prompt if st.mode == "generate" else None
+        return self.slots.can_admit(
+            need, prompt=pr, span=span,
+            shard=shard if self.slots.sharded else None)
+
+    def _steal_rebalance(self):
+        """Work-stealing rebalance (sharded pools): a queue head that
+        cannot admit on its home shard migrates to an IDLE shard (empty
+        queue) that can admit it right now, instead of head-of-line
+        blocking behind a full shard. The busiest-free destination wins.
+        Swapped-out heads move their host SwapEntry between shard swap
+        stores (budget- and block-checked up front; a refusal means no
+        steal), so a stolen request never loses prefill progress."""
+        n = self.slots.num_shards
+        if not self.sched.steal or n < 2:
+            return
+        for s, q in enumerate(self._queues):
+            if not q:
+                continue
+            st = q[0]
+            if self._head_admissible(s, st):
+                continue            # admits normally this tick
+            swapped = self.slots.is_swapped(st.rid)
+            cands = [d for d in range(n)
+                     if d != s and not self._queues[d]
+                     and (self.slots.can_steal_swapped(st.rid, d)
+                          if swapped else self._head_admissible(d, st))]
+            if not cands:
+                continue
+            d = max(cands, key=self.slots.shard_free_blocks)
+            if swapped and not self.slots.migrate_swapped(st.rid, d):
+                continue
+            q.popleft()
+            st.shard = d
+            self._queues[d].append(st)
+            self.counters["steals"] += 1
+            self._shard_steals[d] += 1
+            self.tracer.instant("steal", "scheduler", rid=st.rid,
+                                src_shard=s, dst_shard=d)
+
+    def _admit_head(self, shard: int, q) -> bool:
+        """Try to admit ``q``'s head onto ``shard``; True = admitted (and
+        popped), False = head-of-line blocked (pool or blocks full)."""
+        st = q[0]
+        sh = shard if self.slots.sharded else None
+        swapped_in = False
+        if self.slots.is_swapped(st.rid):
+            # resume a swap-preempted request: remap + upload its
+            # saved blocks; it continues at st.ctx with st.out intact
+            got = self.slots.swap_in(st.rid)
+            if got is None:
+                return False
+            slot, _ = got
+            self.counters["swapped_in"] += 1
+            swapped_in = True
+        else:
+            # reserved admission books the whole generation budget up
+            # front: growth can never OOB, so QoS traffic is never
+            # preempted (submit checked it fits the pool)
+            need = len(st.prompt) + (
+                st.max_new_tokens
+                if self.sched.admission == "reserved" else 0)
+            # prefix sharing needs the prompt (to match the index)
+            # and the request's full span (ring groups only share
+            # when the span fits the ring, so no wrap can ever
+            # write through a shared block). Score rows never share:
+            # a shared prefix skips the chunk steps whose logits ARE
+            # the scored logprobs.
+            span = len(st.prompt) + st.max_new_tokens
+            pr = st.prompt if st.mode == "generate" else None
+            if not self.slots.can_admit(need, prompt=pr, span=span,
+                                        shard=sh):
+                return False
+            slot = self.slots.alloc(st.rid, prompt_len=need,
+                                    prompt=pr, span=span, shard=sh)
+            start = self.slots.prefill_start(slot)
+            if start:
+                # the leading `start` positions were admitted mapped
+                # to index-held blocks: their KV already exists, so
+                # prefill resumes past them (chunk-aligned, so the
+                # remaining chunking is identical to an unshared run)
+                st.ctx = start
+                st.chunk_tokens = start
+                self.counters["prefix_shared_tokens"] += start
+        q.popleft()
+        st.admit_seq = self._next_seq
+        self._next_seq += 1
+        self._by_slot[slot] = st
+        self.counters["admitted"] += 1
+        now = time.perf_counter()
+        tl = self._tl[st.rid]
+        if tl.admit_t is None:
+            tl.admit_t = now        # first admission only (queue-wait)
+            self._lat["queue_wait_ms"].observe(
+                (now - tl.submit_t) * 1e3)
+        if swapped_in:
+            if tl.swap_out_t is not None:
+                tl.swapped_s += now - tl.swap_out_t
+                tl.swap_out_t = None
+            self.tracer.instant("swap-in", f"slot{slot}", rid=st.rid)
+        else:
+            self.tracer.instant("admit", f"slot{slot}", rid=st.rid,
+                                prompt_len=len(st.prompt))
+        self._phase_begin(slot, "prefill" if st.ctx < len(st.prompt)
+                          else "decode", st.rid)
+        return True
 
     def _preempt(self, slot: int):
         """Evict a live slot to free its blocks (paged growth failure);
@@ -788,7 +955,10 @@ class Scheduler:
             st.out = []
             st.logprobs = []    # a score restart re-collects from scratch
         st.admit_seq = -1
-        self._queue.appendleft(st)
+        # re-queue at the FRONT of the home shard's queue (the shard the
+        # slot lived on — a swapped entry's bytes are parked there)
+        st.shard = self.slots.shard_of_slot(slot)
+        self._queues[st.shard].appendleft(st)
         self.counters["preempted"] += 1
         tl.preemptions += 1
 
@@ -801,10 +971,14 @@ class Scheduler:
         an empty pool — so the pool always makes forward progress.
         ``write_from`` bounds the copy-on-write scan (speculative ticks
         write a span, not one position). Returns False iff ``slot``
-        itself was preempted."""
+        itself was preempted. Victims come from the grower's own shard —
+        block pools are shard-local, so evicting elsewhere frees
+        nothing it can use (every slot is shard 0 on unsharded pools)."""
+        shard = self.slots.shard_of_slot(slot)
         while not self.slots.ensure(slot, upto_pos, write_from=write_from):
-            victim = max(self._by_slot, key=lambda s:
-                         self._by_slot[s].admit_seq)
+            victim = max((s for s in self._by_slot
+                          if self.slots.shard_of_slot(s) == shard),
+                         key=lambda s: self._by_slot[s].admit_seq)
             self._preempt(victim)
             if victim == slot:
                 return False
@@ -837,8 +1011,15 @@ class Scheduler:
                                            write_from=self._by_slot[s].ctx)
                     assert ok, "prefill chunk outgrew the admission mapping"
             m = len(need)
-            bsz = bucketing.round_up_pow2(m, 1)
-            idx = need + [need[0]] * (bsz - m)      # pad-by-repeat
+            if self.slots.sharded:
+                # the sharded backing pads PER SHARD (pad-by-repeat of
+                # each shard's first entry, common pow2 width) so every
+                # shard sees the same chunk program; pass the live set
+                # unpadded and take rows back in input order
+                idx = list(need)
+            else:
+                bsz = bucketing.round_up_pow2(m, 1)
+                idx = need + [need[0]] * (bsz - m)  # pad-by-repeat
             toks = np.stack([
                 self._by_slot[s].prompt[self._by_slot[s].ctx:
                                         self._by_slot[s].ctx + ch]

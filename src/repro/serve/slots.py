@@ -251,25 +251,37 @@ class _PagedBacking:
                  swap_bytes_budget: Optional[int] = None,
                  prefix_sharing: bool = False,
                  prefix_align: Optional[int] = None,
-                 prefix_capacity: int = 512):
+                 prefix_capacity: int = 512,
+                 create_arrays: bool = True,
+                 dense_probe=None, template=None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_slots = cache_slots
         self.block_size = block_size
-        self.dense = T.init_caches(cfg, num_slots, cache_slots,
-                                   per_slot_pos=True, paged_global_attn=True,
-                                   paged_window_attn=paged_window)
-        self._template = T.init_caches(cfg, 1, cache_slots,
+        # create_arrays=False is the per-shard mode (_ShardState): the
+        # device arrays live stacked in the sharded owner; this instance
+        # keeps only host state (pools, page tables, swaps, prefix index)
+        # and redirects its device ops through the _dev_* hooks.
+        if create_arrays:
+            self.dense = T.init_caches(cfg, num_slots, cache_slots,
                                        per_slot_pos=True,
                                        paged_global_attn=True,
                                        paged_window_attn=paged_window)
+            self._template = T.init_caches(cfg, 1, cache_slots,
+                                           per_slot_pos=True,
+                                           paged_global_attn=True,
+                                           paged_window_attn=paged_window)
+        else:
+            self.dense = None
+            self._template = template
+        probe = self.dense if self.dense is not None else dense_probe
         # group the paged keys by view length: one pool + page table per
         # distinct length (the global group, rings per window size)
         by_view: Dict[int, List[str]] = {}
         self.key_view: Dict[str, int] = {}
         for i, spec in enumerate(cfg.pattern):
             key = f"p{i}"
-            entry = self.dense.get(key)
+            entry = probe.get(key)
             if not (entry and "attn" in entry and entry["attn"] is None):
                 continue
             vl = _attn_view_len(spec, cache_slots)
@@ -280,11 +292,12 @@ class _PagedBacking:
                            num_blocks if vl == cache_slots
                            else num_window_blocks)
             for vl, keys in sorted(by_view.items(), reverse=True)}
-        self.paged = {
+        self.paged = ({
             key: attention.make_paged_cache(
                 g.pool.num_blocks, block_size, cfg.num_kv_heads,
                 cfg.head_dim, periods=cfg.num_periods)
             for g in self.groups.values() for key in g.keys}
+            if create_arrays else None)
         g_global = self.groups.get(cache_slots)
         self.position_capacity = (g_global.pool.num_blocks * block_size
                                   if g_global else num_slots * cache_slots)
@@ -312,6 +325,51 @@ class _PagedBacking:
         self._dense_slot_bytes = int(sum(
             l.nbytes for l in jax.tree_util.tree_leaves(self._template)))
         self._rows_cache: Optional[Dict[str, jnp.ndarray]] = None
+        # bumped on every mapping change; the sharded owner keys its
+        # concatenated rows cache on the tuple of shard epochs
+        self._rows_epoch = 0
+
+    def _invalidate_rows(self):
+        self._rows_cache = None
+        self._rows_epoch += 1
+
+    # -- device-op hooks -------------------------------------------------
+    # All device-array access funnels through these so _ShardState can
+    # redirect a shard's ops into the owner's STACKED arrays (offsetting
+    # slot indices and block rows) while the host-side bookkeeping above
+    # stays byte-for-byte the same code path.
+
+    def _dev_dense_reset(self, slot: int):
+        self.dense = _reset(self.dense, self._template,
+                            jnp.asarray([slot], jnp.int32))
+
+    def _dev_dense_gather(self, slot: int):
+        return jax.device_get(
+            _gather(self.dense, jnp.asarray([slot], jnp.int32)))
+
+    def _dev_dense_scatter(self, slot: int, sub):
+        self.dense = _scatter(self.dense, sub,
+                              jnp.asarray([slot], jnp.int32))
+
+    def _dev_block_copy(self, g: "_PageGroup", src_rows, dst_rows):
+        sub = {k: self.paged[k] for k in g.keys}
+        self.paged.update(engine.copy_block_rows(sub, src_rows, dst_rows))
+
+    def _dev_block_reset(self, g: "_PageGroup", rows):
+        sub = {k: self.paged[k] for k in g.keys}
+        self.paged.update(engine.reset_block_rows(sub, rows))
+
+    def _dev_block_gather(self, g: "_PageGroup", rows):
+        sub = {k: self.paged[k] for k in g.keys}
+        return jax.device_get(engine.gather_block_rows(sub, rows))
+
+    def _dev_block_upload(self, g: "_PageGroup", saved, rows):
+        sub = {k: self.paged[k] for k in g.keys}
+        self.paged.update(engine.upload_block_rows(sub, saved, rows))
+
+    def _key_cache(self, key: str):
+        """The flat paged array for ``key`` (shape queries only)."""
+        return self.paged[key]
 
     @property
     def total_rows(self) -> int:
@@ -486,8 +544,7 @@ class _PagedBacking:
         prefix is mapped read-shared first (its KV is already resident —
         prefill starts past it); the remainder maps private as usual.
         Returns the prefill start position (0 without a hit)."""
-        self.dense = _reset(self.dense, self._template,
-                            jnp.asarray([slot], jnp.int32))
+        self._dev_dense_reset(slot)
         shared_pos = 0
         if self.prefix is not None and prompt is not None:
             n, hit, _ = self._match_shared(prompt, len(prompt),
@@ -497,7 +554,7 @@ class _PagedBacking:
                     g.pt.map_shared(slot, [e[vl] for e in hit])
                 shared_pos = n * self.block_size
                 self.shared_chunks_mapped += n
-                self._rows_cache = None
+                self._invalidate_rows()
         self._shared_pos[slot] = shared_pos
         ok = self.ensure(slot, max(prompt_len, 1) - 1)
         if not ok:
@@ -512,12 +569,11 @@ class _PagedBacking:
         n = bucketing.round_up_pow2(len(pairs), 1)
         srcs = [p[0] for p in pairs] + [g.pt.trash] * (n - len(pairs))
         dsts = [p[1] for p in pairs] + [g.pt.trash] * (n - len(pairs))
-        sub = {k: self.paged[k] for k in g.keys}
-        self.paged.update(engine.copy_block_rows(
-            sub, jnp.asarray(PageTable.block_rows(srcs, self.block_size)),
-            jnp.asarray(PageTable.block_rows(dsts, self.block_size))))
+        self._dev_block_copy(
+            g, jnp.asarray(PageTable.block_rows(srcs, self.block_size)),
+            jnp.asarray(PageTable.block_rows(dsts, self.block_size)))
         self.cow_copies += len(pairs)
-        self._rows_cache = None
+        self._invalidate_rows()
 
     def ensure(self, slot: int, upto_pos: int,
                write_from: Optional[int] = None) -> bool:
@@ -558,10 +614,8 @@ class _PagedBacking:
                 n = bucketing.round_up_pow2(len(new), 1)
                 blocks = list(new) + [g.pt.trash] * (n - len(new))
                 rows = PageTable.block_rows(blocks, self.block_size)
-                sub = {k: self.paged[k] for k in g.keys}
-                self.paged.update(engine.reset_block_rows(
-                    sub, jnp.asarray(rows)))
-                self._rows_cache = None
+                self._dev_block_reset(g, jnp.asarray(rows))
+                self._invalidate_rows()
             ok_all = ok_all and ok
         return ok_all
 
@@ -571,7 +625,7 @@ class _PagedBacking:
             freed += g.pt.free_slot(slot)
         self._shared_pos.pop(slot, None)
         if freed:
-            self._rows_cache = None
+            self._invalidate_rows()
         return freed
 
     # -- swap-out preemption --------------------------------------------
@@ -592,7 +646,7 @@ class _PagedBacking:
         for g in self.groups.values():
             nb = g.pt.mapped_blocks(slot)
             for key in g.keys:
-                c = self.paged[key]
+                c = self._key_cache(key)
                 row = (int(np.prod(c.k.shape[2:])) * c.k.dtype.itemsize
                        + int(np.prod(c.v.shape[2:])) * c.v.dtype.itemsize
                        + c.pos.dtype.itemsize)
@@ -618,9 +672,7 @@ class _PagedBacking:
             blocks[vl] = len(phys)
             if phys and g.keys:
                 keep = len(phys) * bs
-                sub = {k: self.paged[k] for k in g.keys}
-                got = jax.device_get(engine.gather_block_rows(
-                    sub, self._swap_rows(g, phys)))
+                got = self._dev_block_gather(g, self._swap_rows(g, phys))
                 paged_host.update({
                     key: attention.KVCache(k=c.k[:, :keep], v=c.v[:, :keep],
                                            pos=c.pos[:, :keep])
@@ -633,9 +685,8 @@ class _PagedBacking:
                 raise RuntimeError(f"swap_out released {released} != "
                                    f"mapped {phys} (group {vl})")
             if released:
-                self._rows_cache = None
-        dense_host = jax.device_get(
-            _gather(self.dense, jnp.asarray([slot], jnp.int32)))
+                self._invalidate_rows()
+        dense_host = self._dev_dense_gather(slot)
         self._shared_pos.pop(slot, None)
         return self.swaps.put(rid, SwapEntry(
             blocks=blocks, paged=paged_host, dense=dense_host))
@@ -671,12 +722,9 @@ class _PagedBacking:
                         v=_pad_rows(entry.paged[key].v, pad),
                         pos=_pad_rows(entry.paged[key].pos, pad))
                     for key in g.keys}
-                sub = {k: self.paged[k] for k in g.keys}
-                self.paged.update(engine.upload_block_rows(sub, saved,
-                                                           rows))
-            self._rows_cache = None
-        self.dense = _scatter(self.dense, entry.dense,
-                              jnp.asarray([slot], jnp.int32))
+                self._dev_block_upload(g, saved, rows)
+            self._invalidate_rows()
+        self._dev_dense_scatter(slot, entry.dense)
         self._shared_pos[slot] = 0      # resumed mappings are private
         return entry.nbytes
 
@@ -784,6 +832,425 @@ class _PagedBacking:
 
 
 # ---------------------------------------------------------------------------
+# the sharded backing: per-shard block pools over stacked device arrays
+# ---------------------------------------------------------------------------
+
+class _ShardState(_PagedBacking):
+    """Host-side state of ONE shard of a sharded pool: its own
+    BlockPool/PageTable groups, SwapStore, PrefixIndex and shared-pos map
+    — block ids never cross shards, so paging, CoW sharing, swap and the
+    window rings stay shard-local by construction. Device ops are
+    redirected into the owner's STACKED arrays: slot indices offset by
+    the shard's dense segment, block rows by its flat-pool segment."""
+
+    def __init__(self, owner: "_ShardedPagedBacking", shard: int,
+                 *args, **kw):
+        self._owner = owner
+        self.shard = shard
+        super().__init__(*args, create_arrays=False,
+                         dense_probe=owner.dense,
+                         template=owner._template, **kw)
+
+    # -- offsets ---------------------------------------------------------
+
+    def _gslot(self, slot: int) -> jnp.ndarray:
+        return jnp.asarray([self.shard * self.num_slots + slot], jnp.int32)
+
+    def _row_base(self, g: _PageGroup) -> int:
+        return self.shard * (g.pool.num_blocks + 1) * self.block_size
+
+    # -- device-op hooks over the owner's stacked arrays -----------------
+
+    def _dev_dense_reset(self, slot: int):
+        o = self._owner
+        o.dense = _reset(o.dense, o._template, self._gslot(slot))
+
+    def _dev_dense_gather(self, slot: int):
+        return jax.device_get(
+            _gather(self._owner.dense, self._gslot(slot)))
+
+    def _dev_dense_scatter(self, slot: int, sub):
+        o = self._owner
+        o.dense = _scatter(o.dense, sub, self._gslot(slot))
+
+    def _dev_block_copy(self, g: _PageGroup, src_rows, dst_rows):
+        o, base = self._owner, self._row_base(g)
+        sub = {k: o.paged[k] for k in g.keys}
+        o.paged.update(engine.copy_block_rows(sub, src_rows + base,
+                                              dst_rows + base))
+
+    def _dev_block_reset(self, g: _PageGroup, rows):
+        o = self._owner
+        sub = {k: o.paged[k] for k in g.keys}
+        o.paged.update(engine.reset_block_rows(
+            sub, rows + self._row_base(g)))
+
+    def _dev_block_gather(self, g: _PageGroup, rows):
+        o = self._owner
+        sub = {k: o.paged[k] for k in g.keys}
+        return jax.device_get(engine.gather_block_rows(
+            sub, rows + self._row_base(g)))
+
+    def _dev_block_upload(self, g: _PageGroup, saved, rows):
+        o = self._owner
+        sub = {k: o.paged[k] for k in g.keys}
+        o.paged.update(engine.upload_block_rows(
+            sub, saved, rows + self._row_base(g)))
+
+    def _key_cache(self, key: str):
+        return self._owner.paged[key]
+
+
+class _ShardedPagedBacking:
+    """The paged slot pool sharded over a 1-D device mesh.
+
+    Stacked device arrays hold every shard's segment back-to-back —
+    dense leaves carry ``num_shards * slots_per_shard`` slots on the
+    slot axis; each paged flat pool holds ``num_shards`` segments of
+    ``(num_blocks + 1) * block_size`` rows, each segment ending in its
+    OWN trash block — and one fused program per tick spans all shards
+    (``engine.jit_sharded_*_step``: a delegate to the unsharded program
+    at ``num_shards == 1``, vmap over the shard axis without a mesh,
+    ``shard_map`` over ``mesh``'s axis with one). All host bookkeeping
+    (pools, page tables, swap stores, prefix indices) lives per shard in
+    ``_ShardState``s: a block id is only ever meaningful within its
+    shard, so nothing block-granular crosses shards — the ONLY cross-
+    shard channel is ``migrate_swapped``, which hands a host-side
+    SwapEntry between shard SwapStores (work-stealing a preempted
+    request without losing its prefill progress)."""
+
+    is_paged = True
+    is_sharded = True
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, cache_slots: int,
+                 block_size: int, num_blocks: Optional[int],
+                 paged_window: bool = True,
+                 num_window_blocks: Optional[int] = None,
+                 swap_bytes_budget: Optional[int] = None,
+                 prefix_sharing: bool = False,
+                 prefix_align: Optional[int] = None,
+                 prefix_capacity: int = 512, *,
+                 num_shards: int = 1, mesh=None,
+                 axis: Optional[str] = None):
+        engine._check_shard_mesh(num_shards, mesh, axis)
+        if num_slots % num_shards:
+            raise ValueError(f"num_slots={num_slots} must divide evenly "
+                             f"over {num_shards} shard(s)")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.num_shards = num_shards
+        self.slots_per_shard = num_slots // num_shards
+        self.cache_slots = cache_slots
+        self.block_size = block_size
+        self.mesh = mesh
+        self.axis = axis
+        self.dense = T.init_caches(cfg, num_slots, cache_slots,
+                                   per_slot_pos=True, paged_global_attn=True,
+                                   paged_window_attn=paged_window)
+        self._template = T.init_caches(cfg, 1, cache_slots,
+                                       per_slot_pos=True,
+                                       paged_global_attn=True,
+                                       paged_window_attn=paged_window)
+        # num_blocks / num_window_blocks / swap_bytes_budget are PER
+        # SHARD: mesh scaling holds per-device cache memory constant and
+        # multiplies capacity by the shard count
+        self.shards = [
+            _ShardState(self, s, cfg, self.slots_per_shard, cache_slots,
+                        block_size, num_blocks, paged_window=paged_window,
+                        num_window_blocks=num_window_blocks,
+                        swap_bytes_budget=swap_bytes_budget,
+                        prefix_sharing=prefix_sharing,
+                        prefix_align=prefix_align,
+                        prefix_capacity=prefix_capacity)
+            for s in range(num_shards)]
+        s0 = self.shards[0]
+        self.key_view = s0.key_view
+        self.paged = {
+            key: attention.make_paged_cache(
+                num_shards * (g.pool.num_blocks + 1) - 1, block_size,
+                cfg.num_kv_heads, cfg.head_dim, periods=cfg.num_periods)
+            for g in s0.groups.values() for key in g.keys}
+        self.position_capacity = num_shards * s0.position_capacity
+        self._rows_cache: Optional[Dict[str, jnp.ndarray]] = None
+        self._rows_key: Optional[Tuple[int, ...]] = None
+
+    @property
+    def total_rows(self) -> int:
+        return self.num_shards * self.shards[0].total_rows
+
+    def _loc(self, slot: int) -> Tuple[_ShardState, int]:
+        return (self.shards[slot // self.slots_per_shard],
+                slot % self.slots_per_shard)
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def shard_free_blocks(self, shard: int) -> int:
+        """Free blocks across the shard's groups — the least-loaded
+        placement signal."""
+        return sum(g.pool.num_blocks - g.pool.used_count
+                   for g in self.shards[shard].groups.values())
+
+    # -- routed lifecycle (slot ids are GLOBAL; block state shard-local) -
+
+    def can_admit(self, prompt_len: int, prompt=None,
+                  span: Optional[int] = None, shard: int = 0) -> bool:
+        return self.shards[shard].can_admit(prompt_len, prompt=prompt,
+                                            span=span)
+
+    def fits_pool(self, n_positions: int) -> Optional[str]:
+        return self.shards[0].fits_pool(n_positions)
+
+    def alloc_reset(self, slot: int, prompt_len: int, prompt=None,
+                    span: Optional[int] = None) -> int:
+        sh, loc = self._loc(slot)
+        return sh.alloc_reset(loc, prompt_len, prompt=prompt, span=span)
+
+    def prefill_start(self, slot: int) -> int:
+        sh, loc = self._loc(slot)
+        return sh.prefill_start(loc)
+
+    def register_prefix(self, slot: int, prompt, span: int,
+                        upto_tokens: int) -> int:
+        sh, loc = self._loc(slot)
+        return sh.register_prefix(loc, prompt, span, upto_tokens)
+
+    def flush_prefix(self) -> int:
+        return sum(sh.flush_prefix() for sh in self.shards)
+
+    def ensure(self, slot: int, upto_pos: int,
+               write_from: Optional[int] = None) -> bool:
+        sh, loc = self._loc(slot)
+        return sh.ensure(loc, upto_pos, write_from=write_from)
+
+    def release_slot(self, slot: int) -> List[int]:
+        sh, loc = self._loc(slot)
+        return sh.release_slot(loc)
+
+    # -- swap + cross-shard migration ------------------------------------
+
+    def swap_bytes_estimate(self, slot: int) -> int:
+        sh, loc = self._loc(slot)
+        return sh.swap_bytes_estimate(loc)
+
+    def swap_out(self, slot: int, rid: int) -> Optional[int]:
+        sh, loc = self._loc(slot)
+        return sh.swap_out(loc, rid)
+
+    def swapped_shard(self, rid: int) -> Optional[int]:
+        for s, sh in enumerate(self.shards):
+            if rid in sh.swaps:
+                return s
+        return None
+
+    def can_admit_swapped(self, rid: int) -> bool:
+        s = self.swapped_shard(rid)
+        return s is not None and self.shards[s].can_admit_swapped(rid)
+
+    def swap_in(self, slot: int, rid: int) -> int:
+        sh, loc = self._loc(slot)
+        if rid not in sh.swaps:
+            raise RuntimeError(
+                f"rid {rid} is not swapped on shard {sh.shard} — "
+                "migrate_swapped before a cross-shard swap_in")
+        return sh.swap_in(loc, rid)
+
+    def migrate_swapped(self, rid: int, dst_shard: int) -> bool:
+        """Move ``rid``'s parked SwapEntry from its home shard's store to
+        ``dst_shard``'s (the work-stealing path: host bytes change owner,
+        nothing touches the device, prefill progress is preserved).
+        False when the entry isn't swapped, is already there, or the
+        destination's byte budget can't hold it — the caller simply
+        leaves the request where it is."""
+        src = self.swapped_shard(rid)
+        if src is None or src == dst_shard:
+            return False
+        dst = self.shards[dst_shard].swaps
+        entry = self.shards[src].swaps.get(rid)
+        if dst.max_bytes is not None and not dst.can_hold(entry.nbytes):
+            return False
+        dst.migrate_in(rid, self.shards[src].swaps.migrate_out(rid))
+        return True
+
+    def can_steal_swapped(self, rid: int, dst_shard: int) -> bool:
+        """True when ``dst_shard`` could hold AND admit ``rid``'s parked
+        entry right now: its SwapStore budget fits the bytes and every
+        page-table group can reclaim the saved block count. The steal
+        pass checks this BEFORE migrating, so a steal never strands an
+        entry on a shard that can't admit it."""
+        src = self.swapped_shard(rid)
+        if src is None or src == dst_shard:
+            return False
+        entry = self.shards[src].swaps.get(rid)
+        dst = self.shards[dst_shard]
+        if dst.swaps.max_bytes is not None \
+                and not dst.swaps.can_hold(entry.nbytes):
+            return False
+        return all(dst._reclaim(g, entry.blocks.get(vl, 0))
+                   for vl, g in dst.groups.items())
+
+    # -- device-facing row vectors ---------------------------------------
+
+    def _rows_all(self) -> Dict[str, jnp.ndarray]:
+        """Shard-LOCAL rows, concatenated (num_slots, V) per key — the
+        fused sharded steps split the slot axis so each shard indexes its
+        own flat-pool segment. Cached on the tuple of shard epochs."""
+        key = tuple(sh._rows_epoch for sh in self.shards)
+        if self._rows_cache is None or self._rows_key != key:
+            per = [sh._rows_all() for sh in self.shards]
+            self._rows_cache = {
+                k: jnp.concatenate([p[k] for p in per], axis=0)
+                for k in per[0]}
+            self._rows_key = key
+        return self._rows_cache
+
+    def _rows_for(self, idx) -> Dict[str, jnp.ndarray]:
+        """GLOBAL stacked-array rows for slots ``idx`` (host gather /
+        scatter paths): shard-local rows offset into the shard's flat
+        segment, with each shard's local trash rows canonicalized onto
+        the stacked pool's LAST block — paged_view/paged_writeback treat
+        rows past ``total - block_size`` as trash, so per-shard trash
+        keeps masking globally."""
+        n, bs = self.num_shards, self.block_size
+        per_vl: Dict[int, jnp.ndarray] = {}
+        for vl, g0 in self.shards[0].groups.items():
+            nb = g0.pool.num_blocks
+            seg, live = (nb + 1) * bs, nb * bs
+            rows = []
+            for slot in idx:
+                sh, loc = self._loc(slot)
+                r = np.asarray(sh.groups[vl].pt.rows([loc]))[0]
+                rows.append(np.where(r >= live,
+                                     n * seg - bs + (r - live),
+                                     sh.shard * seg + r))
+            per_vl[vl] = jnp.asarray(np.stack(rows))
+        return {k: per_vl[vl] for k, vl in self.key_view.items()}
+
+    # gather/scatter operate on self.dense/self.paged/self._rows_for with
+    # GLOBAL rows — the _PagedBacking bodies apply verbatim
+    gather = _PagedBacking.gather
+    scatter = _PagedBacking.scatter
+
+    # -- fused steps ------------------------------------------------------
+
+    def _keys_for(self, key) -> jnp.ndarray:
+        """(num_shards, 2) per-shard PRNG keys. One shard passes the key
+        through untouched (the delegate path consumes the same bits the
+        unsharded step would — bit-identical sampled streams); more
+        shards split it (sampled streams legitimately diverge across
+        shard counts; greedy is the cross-count correctness bar)."""
+        return key[None] if self.num_shards == 1 \
+            else jax.random.split(key, self.num_shards)
+
+    def run_chunk(self, params, idx, tokens, pos):
+        """Chunk-prefill slots ``idx`` (GLOBAL ids, UNPADDED — unlike the
+        single-pool backing, the owner pads per shard: each shard's
+        sub-batch pads by repeating its first entry to a common pow2
+        width; a shard with nothing to prefill runs dead — its rows point
+        at its trash block and its dense writes are reverted in-program).
+        Returns per-position logits (len(idx), C, V) in input order."""
+        n, k = self.num_shards, self.slots_per_shard
+        tokens = np.asarray(tokens)
+        pos_in = np.asarray(pos)
+        per: List[List[int]] = [[] for _ in range(n)]
+        t_of = np.zeros(len(idx), np.int32)
+        for j, slot in enumerate(idx):
+            s = slot // k
+            t_of[j] = len(per[s])
+            per[s].append(j)
+        m = bucketing.round_up_pow2(max(len(p) for p in per), 1)
+        idx_a = np.zeros((n, m), np.int32)
+        tok_a = np.zeros((n, m) + tokens.shape[1:], tokens.dtype)
+        pos_a = np.zeros((n, m), pos_in.dtype)
+        live = np.zeros((n,), bool)
+        shard_rows: List[Dict[str, jnp.ndarray]] = []
+        for s in range(n):
+            js = per[s]
+            if js:
+                live[s] = True
+                js = js + [js[0]] * (m - len(js))   # pad-by-repeat
+                loc = [idx[j] - s * k for j in js]
+                idx_a[s] = loc
+                tok_a[s] = tokens[js]
+                pos_a[s] = pos_in[js]
+                shard_rows.append(self.shards[s]._rows_for(loc))
+            else:
+                sh = self.shards[s]
+                shard_rows.append({
+                    key: jnp.full(
+                        (m, vl),
+                        sh.groups[vl].pool.num_blocks * self.block_size,
+                        jnp.int32)
+                    for key, vl in self.key_view.items()})
+        rows = {key: jnp.stack([sr[key] for sr in shard_rows])
+                for key in self.key_view}
+        step = engine.jit_sharded_chunk_step(self.cfg, n, self.block_size,
+                                             self.mesh, self.axis)
+        logits, self.dense, self.paged = step(
+            params, self.dense, self.paged, jnp.asarray(idx_a), rows,
+            jnp.asarray(tok_a), jnp.asarray(pos_a), jnp.asarray(live))
+        s_of = jnp.asarray([slot // k for slot in idx])
+        return logits[s_of, jnp.asarray(t_of)]
+
+    def run_decode(self, params, tokens, pos, temps, key,
+                   top_ks=None, top_ps=None):
+        b = tokens.shape[0]
+        if top_ks is None:
+            top_ks = jnp.zeros((b,), jnp.int32)
+        if top_ps is None:
+            top_ps = jnp.ones((b,), jnp.float32)
+        step = engine.jit_sharded_decode_step(
+            self.cfg, self.num_shards, self.block_size, self.mesh,
+            self.axis)
+        nxt, logits, self.dense, self.paged = step(
+            params, self.dense, self.paged, self._rows_all(), tokens, pos,
+            temps, self._keys_for(key), top_ks, top_ps)
+        return nxt, logits
+
+    def run_verify(self, params, tokens, pos, prompt_len, max_pos, score,
+                   active, temps, top_ks, top_ps, key):
+        step = engine.jit_sharded_verify_step(
+            self.cfg, self.num_shards, self.block_size, self.mesh,
+            self.axis)
+        out_tok, acc, lp, self.dense, self.paged = step(
+            params, self.dense, self.paged, self._rows_all(), tokens, pos,
+            prompt_len, max_pos, score, active, temps, top_ks, top_ps,
+            self._keys_for(key))
+        return out_tok, acc, lp
+
+    # -- stats ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        agg: Dict[str, object] = {}
+        for sh in self.shards:
+            for k2, v in sh.stats().items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    continue
+                agg[k2] = agg.get(k2, 0) + v
+        agg["allocator"] = "paged"
+        agg["page_groups"] = len(self.shards[0].groups)
+        agg["block_size"] = self.block_size
+        agg["block_utilization"] = (agg["blocks_used"]
+                                    / max(agg["blocks_total"], 1))
+        agg["num_shards"] = self.num_shards
+        return agg
+
+    metrics = _PagedBacking.metrics
+
+    def shard_metrics(self) -> dict:
+        """Per-shard block/swap gauges, ``shard<i>.``-prefixed (the
+        SlotManager adds slot occupancy; the scheduler adds placement and
+        steal counters on top under ``serve.shard``)."""
+        out = {}
+        for s, sh in enumerate(self.shards):
+            st = sh.stats()
+            out[f"shard{s}.blocks_free"] = st["blocks_free"]
+            out[f"shard{s}.blocks_used"] = st["blocks_used"]
+            out[f"shard{s}.swapped_held"] = st["swapped_held"]
+        return out
+
+
+# ---------------------------------------------------------------------------
 # the facade
 # ---------------------------------------------------------------------------
 
@@ -814,23 +1281,46 @@ class SlotManager:
                  swap_bytes_budget: Optional[int] = None,
                  prefix_sharing: bool = False,
                  prefix_align: Optional[int] = None,
-                 prefix_capacity: int = 512):
+                 prefix_capacity: int = 512,
+                 mesh_shards: Optional[int] = None,
+                 mesh=None, mesh_axis: str = "slots"):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_slots = cache_slots
         if prefix_sharing and not paged:
             raise ValueError("prefix_sharing needs the paged backing "
                              "(blocks are the sharing granule)")
-        self.backing = (_PagedBacking(cfg, num_slots, cache_slots,
-                                      block_size, num_blocks,
-                                      paged_window=paged_window,
-                                      num_window_blocks=num_window_blocks,
-                                      swap_bytes_budget=swap_bytes_budget,
-                                      prefix_sharing=prefix_sharing,
-                                      prefix_align=prefix_align,
-                                      prefix_capacity=prefix_capacity)
-                        if paged else
-                        _ContiguousBacking(cfg, num_slots, cache_slots))
+        self.sharded = mesh_shards is not None
+        if self.sharded and not paged:
+            raise ValueError("mesh_shards needs the paged backing "
+                             "(blocks are the per-shard granule)")
+        if mesh is not None and not self.sharded:
+            raise ValueError("mesh without mesh_shards: pass "
+                             "mesh_shards=len(mesh devices)")
+        self.num_shards = mesh_shards if self.sharded else 1
+        if num_slots % self.num_shards:
+            raise ValueError(f"num_slots={num_slots} must divide evenly "
+                             f"over {self.num_shards} shard(s)")
+        self.slots_per_shard = num_slots // self.num_shards
+        if self.sharded:
+            self.backing = _ShardedPagedBacking(
+                cfg, num_slots, cache_slots, block_size, num_blocks,
+                paged_window=paged_window,
+                num_window_blocks=num_window_blocks,
+                swap_bytes_budget=swap_bytes_budget,
+                prefix_sharing=prefix_sharing, prefix_align=prefix_align,
+                prefix_capacity=prefix_capacity, num_shards=mesh_shards,
+                mesh=mesh, axis=mesh_axis if mesh is not None else None)
+        else:
+            self.backing = (_PagedBacking(
+                cfg, num_slots, cache_slots, block_size, num_blocks,
+                paged_window=paged_window,
+                num_window_blocks=num_window_blocks,
+                swap_bytes_budget=swap_bytes_budget,
+                prefix_sharing=prefix_sharing, prefix_align=prefix_align,
+                prefix_capacity=prefix_capacity)
+                if paged else
+                _ContiguousBacking(cfg, num_slots, cache_slots))
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self.owner: List[Optional[int]] = [None] * num_slots
         self.valid = np.zeros(num_slots, bool)
@@ -874,17 +1364,48 @@ class SlotManager:
     def free_count(self) -> int:
         return len(self._free)
 
+    def free_count_shard(self, shard: int) -> int:
+        k = self.slots_per_shard
+        return sum(1 for i in self._free if i // k == shard)
+
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def shard_free_blocks(self, shard: int) -> int:
+        """Free blocks on ``shard`` (sharded backing) — the least-loaded
+        placement signal the scheduler reads."""
+        return self.backing.shard_free_blocks(shard)
+
+    def _pop_free(self, shard: Optional[int]) -> int:
+        """Claim a free slot — the most recently freed one (LIFO), or the
+        most recently freed one WITHIN ``shard`` when given. With one
+        shard both forms pop the same slot, so the sharded n=1 admission
+        path allocates bit-identically to the unsharded one."""
+        if shard is None:
+            return self._free.pop()
+        k = self.slots_per_shard
+        for i in range(len(self._free) - 1, -1, -1):
+            if self._free[i] // k == shard:
+                return self._free.pop(i)
+        raise RuntimeError(f"no free slot on shard {shard}")
+
     @property
     def live(self) -> List[int]:
         return [i for i in range(self.num_slots) if self.valid[i]]
 
     def can_admit(self, prompt_len: int = 0, prompt=None,
-                  span: Optional[int] = None) -> bool:
+                  span: Optional[int] = None,
+                  shard: Optional[int] = None) -> bool:
         """A free slot AND (paged) enough free blocks for the prompt in
         every page-table group. With prefix sharing, ``prompt`` (tokens)
         discounts blocks an indexed shared prefix already holds, and
         ``span`` (prompt + generation budget) bounds ring-group
-        eligibility."""
+        eligibility. On a sharded pool ``shard`` scopes both checks to
+        that shard's slots and block pools."""
+        if shard is not None:
+            return (self.free_count_shard(shard) > 0
+                    and self.backing.can_admit(prompt_len, prompt=prompt,
+                                               span=span, shard=shard))
         return bool(self._free) and self.backing.can_admit(
             prompt_len, prompt=prompt, span=span)
 
@@ -895,15 +1416,18 @@ class SlotManager:
         return self.backing.fits_pool(n_positions)
 
     def alloc(self, owner: int, prompt_len: int = 0, prompt=None,
-              span: Optional[int] = None) -> Optional[int]:
+              span: Optional[int] = None,
+              shard: Optional[int] = None) -> Optional[int]:
         """Claim a free slot for request ``owner``; zero its cache rows
         (paged: map + zero the blocks covering the prompt — an indexed
         shared prefix of ``prompt`` maps read-shared instead, see
-        ``prefill_start``). Returns the slot index, or None when the
+        ``prefill_start``). ``shard`` pins the slot to one shard of a
+        sharded pool. Returns the slot index, or None when the
         pool/blocks are exhausted."""
-        if not self.can_admit(prompt_len, prompt=prompt, span=span):
+        if not self.can_admit(prompt_len, prompt=prompt, span=span,
+                              shard=shard):
             return None
-        slot = self._free.pop()
+        slot = self._pop_free(shard)
         self.backing.alloc_reset(slot, prompt_len, prompt=prompt, span=span)
         self.owner[slot] = owner
         self.valid[slot] = True
@@ -970,11 +1494,36 @@ class SlotManager:
         return nbytes
 
     def is_swapped(self, rid: int) -> bool:
-        return self.backing.is_paged and rid in self.backing.swaps
+        if not self.backing.is_paged:
+            return False
+        if self.sharded:
+            return self.backing.swapped_shard(rid) is not None
+        return rid in self.backing.swaps
+
+    def swapped_shard(self, rid: int) -> Optional[int]:
+        """Shard whose SwapStore holds ``rid`` (sharded backing)."""
+        return self.backing.swapped_shard(rid)
+
+    def migrate_swapped(self, rid: int, dst_shard: int) -> bool:
+        """Work-steal a swapped-out request to ``dst_shard``'s SwapStore
+        (host bytes change owner; prefill progress is preserved). False
+        when not swapped / already there / over the destination budget."""
+        return self.backing.migrate_swapped(rid, dst_shard)
+
+    def can_steal_swapped(self, rid: int, dst_shard: int) -> bool:
+        """Could ``dst_shard`` hold and admit ``rid``'s swapped entry
+        right now (free slot + swap budget + free blocks)?"""
+        return (self.free_count_shard(dst_shard) > 0
+                and self.backing.can_steal_swapped(rid, dst_shard))
 
     def can_admit_swapped(self, rid: int) -> bool:
         """A free slot AND blocks for the request's saved prefix in
-        every page-table group."""
+        every page-table group (sharded: both scoped to the shard whose
+        store holds the entry)."""
+        if self.sharded:
+            s = self.backing.swapped_shard(rid)
+            return (s is not None and self.free_count_shard(s) > 0
+                    and self.backing.can_admit_swapped(rid))
         return bool(self._free) and self.backing.can_admit_swapped(rid)
 
     def swap_in(self, rid: int) -> Optional[Tuple[int, int]]:
@@ -985,7 +1534,8 @@ class SlotManager:
         or None when the pool can't host it yet."""
         if not self.can_admit_swapped(rid):
             return None
-        slot = self._free.pop()
+        slot = self._pop_free(self.backing.swapped_shard(rid)
+                              if self.sharded else None)
         nbytes = self.backing.swap_in(slot, rid)
         self.owner[slot] = rid
         self.valid[slot] = True
@@ -1042,6 +1592,21 @@ class SlotManager:
                 "cache_slots": self.cache_slots,
                 "position_capacity": self.position_capacity,
                 "total_rows": self.total_rows}
+
+    def shard_metrics(self) -> dict:
+        """Per-shard occupancy gauges (sharded backing only):
+        ``shard<i>.live_slots`` / ``free_slots`` plus the backing's
+        per-shard block/swap levels. The scheduler layers placement and
+        steal counters on top under the ``serve.shard`` prefix."""
+        out = {}
+        k = self.slots_per_shard
+        for s in range(self.num_shards):
+            free = self.free_count_shard(s)
+            out[f"shard{s}.live_slots"] = k - free
+            out[f"shard{s}.free_slots"] = free
+        if self.sharded:
+            out.update(self.backing.shard_metrics())
+        return out
 
     def stats(self) -> dict:
         return {**self.metrics(), **self.backing.stats()}

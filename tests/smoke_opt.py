@@ -41,8 +41,9 @@ def check(cond, msg):
 def run_trace(cfg, params, prompts, mnts, **sc_kw):
     from repro.serve import Scheduler, SchedulerConfig
 
-    sc = SchedulerConfig(num_slots=3, max_len=48, prefill_chunk=8,
-                         eos_token=5, cache_requests=False, **sc_kw)
+    sc = SchedulerConfig(**{**dict(num_slots=3, max_len=48,
+                                   prefill_chunk=8, eos_token=5,
+                                   cache_requests=False), **sc_kw})
     sched = Scheduler(cfg, params, sc)
     submitted, steps, done = 0, 0, []
     while submitted < len(prompts) or sched.pending or sched.live:
@@ -195,6 +196,34 @@ def main():
               f"{name}: retire leaked blocks")
         print(f"[smoke_opt] {name}: OK ({c['preempted']} preemptions, "
               f"{c['recomputed_decode_steps']} recomputed decode steps)")
+
+    # sharded-pool differential: the mesh-sharded slot pool (per-shard
+    # block pools + swap stores, mesh-aware admission, work-stealing
+    # rebalance) must emit the same greedy streams — the shard routing,
+    # steal migration and per-shard preemption guards are explicit
+    # raises that a stripped assert must never replace. n=1 runs the
+    # delegate path; n=2 exercises real shard-local pools + swap.
+    shard_arms = [
+        ("sharded-n1/swap",
+         dict(pool, preempt="swap", mesh_shards=1, num_slots=4)),
+        ("sharded-n2/swap",
+         dict(pool, preempt="swap", mesh_shards=2, num_slots=4,
+              num_blocks=4)),
+    ]
+    for name, kw in shard_arms:
+        got, sched = run_trace(cfg, params, prompts, mnts, **kw)
+        for rid in base:
+            check(got[rid].tokens.tolist() == base[rid].tokens.tolist(),
+                  f"{name}: rid {rid} stream diverged on the sharded pool")
+            check(got[rid].reason == base[rid].reason,
+                  f"{name}: rid {rid} finish reason diverged")
+        check(sched.counters["recomputed_decode_steps"] == 0,
+              f"{name}: sharded swap recomputed decode steps")
+        check(sched.stats()["blocks_used"] == 0,
+              f"{name}: retire leaked blocks on a shard")
+        print(f"[smoke_opt] {name}: OK "
+              f"({sched.counters['preempted']} preemptions, "
+              f"{sched.counters['steals']} steals)")
 
     # shared-prefix differential: prefix_sharing=True must be bit-
     # identical to sharing OFF on prompts with a common system prefix —
